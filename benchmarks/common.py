@@ -1,0 +1,150 @@
+"""Shared FL experiment runner for the paper-figure benchmarks.
+
+Runs the Algorithm-1 protocol over a (dataset × ξ × method × seed) grid at
+the CPU-budget scale (``paper_cnn.bench_scale``) and caches every history in
+``results/fl_grid.json`` so benchmark modules (fig1/fig2/table1 all read the
+same runs) and re-invocations never recompute.
+
+Scale via env: REPRO_BENCH_SCALE = tiny | bench (default) | paper.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import paper_cnn
+from repro.core import make_strategy
+from repro.data import make_image_dataset, skewness_partition
+from repro.fl import FLConfig, FLTrainer
+from repro.models import cnn
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+GRID_PATH = os.path.join(RESULTS, "fl_grid.json")
+
+# two synthetic datasets stand in for MNIST / Fashion-MNIST (data gate —
+# DESIGN.md §6): same shape/scale, different generative seeds & noise.
+DATASETS = {"synth-mnist": dict(seed=11, noise=0.5), "synth-fashion": dict(seed=23, noise=0.8)}
+
+
+def scale() -> paper_cnn.PaperExperiment:
+    s = os.environ.get("REPRO_BENCH_SCALE", "bench")
+    if s == "paper":
+        return paper_cnn.paper_scale()
+    if s == "tiny":
+        return paper_cnn.PaperExperiment(
+            num_clients=16, clients_per_round=4, samples_per_client=60,
+            local_epochs=1, lr=0.08, rounds=10, eval_every=2, seeds=1,
+            cnn_channels=(8, 16), fc1_dim=64,
+        )
+    return paper_cnn.bench_scale()
+
+
+def _load_grid() -> Dict:
+    if os.path.exists(GRID_PATH):
+        with open(GRID_PATH) as f:
+            return json.load(f)
+    return {}
+
+
+def _save_grid(grid: Dict) -> None:
+    os.makedirs(RESULTS, exist_ok=True)
+    tmp = GRID_PATH + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(grid, f)
+    os.replace(tmp, GRID_PATH)
+
+
+def build_trainer(
+    exp: paper_cnn.PaperExperiment,
+    dataset: str,
+    xi,
+    method: str,
+    seed: int,
+    init_scheme: str = "kaiming_uniform",
+    profile_kind: str = "fc1",
+) -> FLTrainer:
+    dkw = DATASETS[dataset]
+    ds = make_image_dataset(
+        n=exp.num_clients * exp.samples_per_client, seed=dkw["seed"], noise=dkw["noise"]
+    )
+    shards = skewness_partition(
+        ds.ys, exp.num_clients, xi, ds.num_classes,
+        samples_per_client=exp.samples_per_client, seed=seed,
+    )
+    cxs = np.stack([ds.xs[s] for s in shards])
+    cys = np.stack([ds.ys[s] for s in shards])
+    params = cnn.init_cnn(
+        jax.random.key(seed),
+        channels=exp.cnn_channels,
+        fc1_dim=exp.fc1_dim,
+        scheme=init_scheme,
+    )
+    cfg = paper_cnn.fl_config(exp, seed=seed)
+    trainer = FLTrainer(
+        cfg, params, cnn.cnn_loss, cnn.apply_with_features, cxs, cys,
+        make_strategy(method), accuracy_fn=cnn.accuracy,
+    )
+    if profile_kind != "fc1":
+        _swap_profiles(trainer, profile_kind)
+    return trainer
+
+
+def _swap_profiles(trainer: FLTrainer, kind: str) -> None:
+    """Fig.-3 ablation: rebuild the DPP kernel from gradient-based profiles."""
+    from repro.core import kernel_from_profiles, profiles as profiles_lib
+    import jax.numpy as jnp
+
+    rows = []
+    for c in range(trainer.cfg.num_clients):
+        if kind == "gradient":
+            r = profiles_lib.gradient_profile(
+                trainer.loss_fn, trainer.params, trainer.client_xs[c], trainer.client_ys[c]
+            )
+        elif kind == "repr_gradient":
+            r = profiles_lib.representative_gradient_profile(
+                trainer.loss_fn, trainer.params, trainer.client_xs[c], trainer.client_ys[c]
+            )
+        else:
+            raise ValueError(kind)
+        rows.append(r)
+    f = jnp.stack(rows)
+    trainer.round_state.profiles = f
+    trainer.round_state.kernel = kernel_from_profiles(f)
+
+
+def run_case(
+    dataset: str, xi, method: str, seed: int, exp=None,
+    init_scheme: str = "kaiming_uniform", profile_kind: str = "fc1",
+    force: bool = False,
+) -> Dict[str, List]:
+    exp = exp or scale()
+    key = f"{dataset}|xi={xi}|{method}|seed={seed}|init={init_scheme}|prof={profile_kind}|" \
+          f"C={exp.num_clients}x{exp.samples_per_client}|T={exp.rounds}"
+    grid = _load_grid()
+    if key in grid and not force:
+        return grid[key]
+    t0 = time.time()
+    trainer = build_trainer(exp, dataset, xi, method, seed, init_scheme, profile_kind)
+    hist = trainer.run()
+    hist["wall_s"] = time.time() - t0
+    grid = _load_grid()  # re-read: other processes may have written
+    grid[key] = hist
+    _save_grid(grid)
+    return hist
+
+
+def rounds_to_accuracy(hist: Dict[str, List], target: float) -> Optional[int]:
+    for r, a in zip(hist["round"], hist["acc"]):
+        if a >= target:
+            return r
+    return None
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,60 @@
+"""Fig. 1: accuracy vs training rounds — FL-DP³S vs Cluster/FedAvg/FedSAE
+across heterogeneity levels ξ ∈ {0.5, 0.8, H, 1} on both datasets.
+
+Paper claim: FL-DP³S outperforms all baselines and the margin grows with ξ.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.configs.paper_cnn import METHODS, XIS
+
+
+def run(datasets=None, xis=XIS, methods=METHODS, quiet=False):
+    exp = common.scale()
+    datasets = datasets or list(common.DATASETS)
+    rows = []
+    for ds in datasets:
+        for xi in xis:
+            for m in methods:
+                accs = []
+                t0 = time.time()
+                for seed in range(exp.seeds):
+                    h = common.run_case(ds, xi, m, seed, exp)
+                    accs.append(h["acc"])
+                mean = np.mean(accs, axis=0)
+                rounds = common.run_case(ds, xi, m, 0, exp)["round"]
+                rows.append(dict(dataset=ds, xi=str(xi), method=m,
+                                 rounds=rounds, acc=mean.tolist(),
+                                 final=float(mean[-1]), best=float(mean.max()),
+                                 wall=time.time() - t0))
+                if not quiet:
+                    print(f"  fig1 {ds} xi={xi} {m:10s} final={mean[-1]:.3f} "
+                          f"best={mean.max():.3f}")
+    return rows
+
+
+def main():
+    rows = run()
+    # claim check: at high skew DP3S ends highest
+    t0 = time.time()
+    for ds in common.DATASETS:
+        # best-over-trajectory: late-round full-batch local-SGD instabilities
+        # (loss spikes after convergence) would otherwise dominate "final"
+        bests = {
+            r["method"]: r["best"] for r in rows if r["dataset"] == ds and r["xi"] == "1.0"
+        }
+        best = max(bests, key=bests.get)
+        derived = f"xi=1 winner={best} best_acc=" + "/".join(
+            f"{m}:{bests[m]:.3f}" for m in sorted(bests)
+        )
+        print(common.csv_line(f"fig1_convergence[{ds}]", (time.time() - t0) * 1e6, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

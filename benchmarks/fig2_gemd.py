@@ -1,0 +1,49 @@
+"""Fig. 2: GEMD (eq. 15) per selection method across ξ.
+
+Paper claim: FL-DP³S achieves the lowest GEMD, and lower GEMD tracks faster
+convergence.  Reads the same cached runs as fig1.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.configs.paper_cnn import METHODS, XIS
+
+
+def run(quiet=False):
+    exp = common.scale()
+    rows = []
+    for ds in common.DATASETS:
+        for xi in XIS:
+            means = {}
+            for m in METHODS:
+                g = [
+                    float(np.mean(common.run_case(ds, xi, m, s, exp)["gemd"]))
+                    for s in range(exp.seeds)
+                ]
+                means[m] = float(np.mean(g))
+            rows.append(dict(dataset=ds, xi=str(xi), gemd=means))
+            if not quiet:
+                print(f"  fig2 {ds} xi={xi} " + " ".join(f"{m}={v:.3f}" for m, v in means.items()))
+    return rows
+
+
+def main():
+    rows = run()
+    for ds in common.DATASETS:
+        sub = [r for r in rows if r["dataset"] == ds]
+        dp3s_lowest = all(
+            r["gemd"]["fl-dp3s"] <= min(v for k, v in r["gemd"].items() if k != "fl-dp3s") + 1e-9
+            for r in sub
+        )
+        derived = f"dp3s_lowest_gemd={dp3s_lowest} xi1=" + "/".join(
+            f"{m}:{r['gemd'][m]:.3f}" for r in sub if r["xi"] == "1.0" for m in sorted(r["gemd"])
+        )
+        print(common.csv_line(f"fig2_gemd[{ds}]", 0.0, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

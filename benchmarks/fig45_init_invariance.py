@@ -1,0 +1,73 @@
+"""Figs. 4-5: client profiles vary with the parameter-initialisation scheme,
+but the similarity kernel is (nearly) init-invariant.
+
+Reported: mean pairwise correlation between the kernels produced under the
+four init schemes (paper: "imperceptible" differences → corr ≈ 1), against
+the much lower correlation between raw profile matrices.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs.paper_cnn import INIT_SCHEMES
+from repro.core import kernel_from_profiles, profile_all_clients
+from repro.data import make_image_dataset, skewness_partition
+from repro.models import cnn
+
+
+def run(quiet=False):
+    exp = common.scale()
+    c = 20  # paper's Fig-4/5 scenario uses C = 20
+    ds = make_image_dataset(n=c * exp.samples_per_client, seed=11, noise=0.5)
+    shards = skewness_partition(ds.ys, c, 1.0, 10,
+                                samples_per_client=exp.samples_per_client, seed=0)
+    cxs = [jnp.asarray(ds.xs[s]) for s in shards]
+
+    profiles, kernels = {}, {}
+    t0 = time.time()
+    for scheme in INIT_SCHEMES:
+        params = cnn.init_cnn(jax.random.key(7), channels=exp.cnn_channels,
+                              fc1_dim=exp.fc1_dim, scheme=scheme)
+        f = profile_all_clients(jax.jit(cnn.apply_with_features), params, cxs)
+        profiles[scheme] = np.asarray(f)
+        kernels[scheme] = np.asarray(kernel_from_profiles(f))
+    wall = time.time() - t0
+
+    def mean_corr(mats, center_cols=False):
+        cs = []
+        for a, b in itertools.combinations(mats, 2):
+            if center_cols:
+                # remove the per-neuron mean over clients: what remains is the
+                # *client-distinguishing* structure (the paper's Fig-4 point
+                # is that this part is init-dependent)
+                a = a - a.mean(0, keepdims=True)
+                b = b - b.mean(0, keepdims=True)
+            cs.append(np.corrcoef(a.ravel(), b.ravel())[0, 1])
+        return float(np.mean(cs))
+
+    prof_corr = mean_corr(list(profiles.values()), center_cols=True)
+    kern_corr = mean_corr(list(kernels.values()))
+    if not quiet:
+        print(f"  fig45 profile_corr={prof_corr:.3f} kernel_corr={kern_corr:.3f}")
+    return dict(profile_corr=prof_corr, kernel_corr=kern_corr, wall=wall)
+
+
+def main():
+    r = run()
+    derived = (
+        f"kernel_corr={r['kernel_corr']:.3f} profile_corr={r['profile_corr']:.3f} "
+        f"kernel_init_invariant={r['kernel_corr'] > 0.95}"
+    )
+    print(common.csv_line("fig45_init_invariance", r["wall"] * 1e6, derived))
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Kernel microbenchmarks: µs/call for the three Pallas kernels vs their
+pure-jnp oracles.
+
+On this CPU container the Pallas bodies run in interpret mode, so absolute
+timings characterise the *oracle* path and interpretation overhead — the
+purpose here is the per-call CSV contract plus a correctness spot check;
+TPU timings come from the roofline model (§Roofline)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.kernels.flash_attention import ref as flash_ref
+from repro.kernels.pairwise_l2 import ops as pw_ops
+from repro.kernels.pairwise_l2 import ref as pw_ref
+from repro.kernels.rwkv6_scan import ops as wkv_ops
+from repro.kernels.rwkv6_scan import ref as wkv_ref
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # pairwise_l2 at the paper's scale: C=100 clients, Q=128 profile dims
+    f = jnp.asarray(rng.normal(size=(100, 128)).astype(np.float32))
+    us_k, out_k = _time(pw_ops.pairwise_sq_dists, f)
+    us_r, out_r = _time(jax.jit(pw_ref.pairwise_sq_dists_ref), f)
+    err = float(jnp.max(jnp.abs(out_k - out_r * (1 - jnp.eye(100)))))
+    print(common.csv_line("kernel_pairwise_l2_C100xQ128", us_k,
+                          f"ref_us={us_r:.1f} max_err={err:.1e}"))
+
+    # flash attention, prefill-ish tile
+    q = jnp.asarray(rng.normal(size=(1, 256, 4, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 64)).astype(np.float32))
+    us_k, out_k = _time(lambda *a: flash_ops.flash_attention(*a), q, k, v, iters=2)
+    us_r, out_r = _time(jax.jit(flash_ref.attention_ref), q, k, v)
+    err = float(jnp.max(jnp.abs(out_k - out_r)))
+    print(common.csv_line("kernel_flash_attn_s256_gqa", us_k,
+                          f"ref_us={us_r:.1f} max_err={err:.1e}"))
+
+    # rwkv6 scan
+    r = jnp.asarray(rng.normal(size=(1, 128, 2, 64)).astype(np.float32))
+    kk = jnp.asarray(rng.normal(size=(1, 128, 2, 64)).astype(np.float32))
+    vv = jnp.asarray(rng.normal(size=(1, 128, 2, 64)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 0.99, size=(1, 128, 2, 64)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(2, 64)).astype(np.float32))
+    s0 = jnp.zeros((1, 2, 64, 64), jnp.float32)
+    us_k, out_k = _time(lambda *a: wkv_ops.wkv6(*a), r, kk, vv, w, u, s0, iters=2)
+    us_r, out_r = _time(jax.jit(wkv_ref.wkv6_scan_ref), r, kk, vv, w, u, s0)
+    err = float(jnp.max(jnp.abs(out_k[0] - out_r[0])))
+    print(common.csv_line("kernel_rwkv6_scan_T128", us_k,
+                          f"ref_us={us_r:.1f} max_err={err:.1e}"))
+
+
+if __name__ == "__main__":
+    main()

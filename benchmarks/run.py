@@ -1,0 +1,44 @@
+"""Benchmark harness — one entry per paper table/figure (+ kernels + DPP).
+
+    PYTHONPATH=src python -m benchmarks.run            # full suite
+    REPRO_BENCH_SCALE=tiny PYTHONPATH=src python -m benchmarks.run   # CI smoke
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract).  FL runs
+are cached in results/fl_grid.json, so figures sharing a grid (fig1/fig2/
+table1) reuse each other's training runs.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        dpp_scaling,
+        fig1_convergence,
+        fig2_gemd,
+        fig3_profiling,
+        fig45_init_invariance,
+        fig6_init_robustness,
+        kernels_bench,
+        table1_rounds,
+    )
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    kernels_bench.main()
+    dpp_scaling.main()
+    fig45_init_invariance.main()
+    fig1_convergence.main()
+    fig2_gemd.main()
+    table1_rounds.main()
+    fig3_profiling.main()
+    fig6_init_robustness.main()
+    print(f"total_wall,{(time.time() - t0) * 1e6:.0f},benchmark suite complete",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

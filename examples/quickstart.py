@@ -1,0 +1,68 @@
+"""Quickstart: FL-DP³S vs FedAvg on synthetic non-IID image data.
+
+Runs the paper's Algorithm 1 at reduced scale (CPU-friendly) and prints the
+accuracy / GEMD trajectories of both selection strategies.
+
+    PYTHONPATH=src python examples/quickstart.py [--rounds 40] [--xi 1.0]
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import make_strategy
+from repro.data import make_image_dataset, skewness_partition
+from repro.fl import FLConfig, FLTrainer
+from repro.models import cnn
+
+
+def build_trainer(cfg, xi, strategy_name, data_seed=0):
+    ds = make_image_dataset(n=cfg.num_clients * 200, seed=data_seed)
+    shards = skewness_partition(
+        ds.ys, cfg.num_clients, xi, ds.num_classes,
+        samples_per_client=200, seed=cfg.seed,
+    )
+    client_xs = np.stack([ds.xs[s] for s in shards])
+    client_ys = np.stack([ds.ys[s] for s in shards])
+    params = cnn.init_cnn(jax.random.key(cfg.seed))
+    return FLTrainer(
+        cfg,
+        params,
+        loss_fn=cnn.cnn_loss,
+        feature_fn=cnn.apply_with_features,
+        client_xs=client_xs,
+        client_ys=client_ys,
+        strategy=make_strategy(strategy_name),
+        accuracy_fn=cnn.accuracy,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--clients", type=int, default=30)
+    ap.add_argument("--per-round", type=int, default=5)
+    ap.add_argument("--xi", default="1.0")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    xi = args.xi if args.xi in ("H", "h") else float(args.xi)
+
+    for name in ("fl-dp3s", "fedavg"):
+        cfg = FLConfig(
+            num_clients=args.clients,
+            clients_per_round=args.per_round,
+            rounds=args.rounds,
+            local_epochs=2,
+            lr=0.1,
+            eval_every=5,
+            seed=args.seed,
+        )
+        trainer = build_trainer(cfg, xi, name)
+        hist = trainer.run(progress=True)
+        mean_gemd = float(np.mean(hist["gemd"]))
+        print(f"== {name}: final acc={hist['acc'][-1]:.4f}  mean GEMD={mean_gemd:.3f}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Ablation example (paper Figs. 3/6): profiling methods and init schemes.
+
+    PYTHONPATH=src REPRO_BENCH_SCALE=tiny python examples/selection_ablation.py
+"""
+
+from benchmarks import fig3_profiling, fig45_init_invariance, fig6_init_robustness
+
+
+def main():
+    print("-- Fig. 4/5: kernel init-invariance --")
+    r = fig45_init_invariance.run()
+    print(f"kernel corr across inits: {r['kernel_corr']:.3f} "
+          f"(profiles only: {r['profile_corr']:.3f})")
+    print("-- Fig. 3: profiling ablation --")
+    fig3_profiling.run()
+    print("-- Fig. 6: init robustness --")
+    fig6_init_robustness.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Serving example: batched prefill + decode for several architectures,
+including the O(1)-state SSM (rwkv6) and the hybrid (recurrentgemma).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import sys
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    for arch in ("smollm-360m", "rwkv6-7b", "recurrentgemma-9b"):
+        print(f"=== {arch} (reduced) ===")
+        sys.argv = ["serve", "--arch", arch, "--batch", "2",
+                    "--prompt-len", "16", "--gen", "16"]
+        serve_mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Post-SPMD HLO text parsing: collective byte counts + op histograms.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+optimized (partitioned) HLO.  Byte estimators per op (ring-algorithm
+per-device traffic, documented for §Roofline):
+
+* all-reduce:          2 × size(result)          (reduce-scatter + all-gather)
+* all-gather:          size(result)              (each device receives ~full)
+* reduce-scatter:      size(result) × group      (operand bytes reduced)
+* all-to-all:          size(result)              (full exchange)
+* collective-permute:  size(result)
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+__all__ = ["collective_bytes", "op_histogram", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-gather.3 = bf16[16,512,128]{2,1,0} all-gather(...) replica_groups=...
+_INSTR = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES)
+    + r")((?:-start)?)\("
+)
+_GROUPS = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:  # iota format [groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum estimated per-device collective traffic, keyed by op kind."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR.search(line)
+        if not m:
+            continue
+        dtype, dims, op, _suffix = m.groups()
+        size = _shape_bytes(dtype, dims)
+        if op == "all-reduce":
+            b = 2.0 * size
+        elif op == "reduce-scatter":
+            b = float(size) * _group_size(line)
+        else:
+            b = float(size)
+        out[op] = out.get(op, 0.0) + b
+    out["total"] = sum(out.values())
+    return out
+
+
+def op_histogram(hlo_text: str, top: int = 25) -> Dict[str, int]:
+    """Count fusion-root op kinds — enough to spot remat recompute and
+    layout-churn (transpose/reshape storms) when iterating §Perf."""
+    counts: Dict[str, int] = {}
+    for m in re.finditer(r"=\s*(?:\()?\s*[a-z0-9]+\[[0-9,]*\][^\s]*\s+([a-z-]+)\(", hlo_text):
+        op = m.group(1)
+        counts[op] = counts.get(op, 0) + 1
+    return dict(sorted(counts.items(), key=lambda kv: -kv[1])[:top])

@@ -1,0 +1,213 @@
+"""Three-term roofline analysis from the dry-run's compiled artifacts.
+
+For each (arch × input-shape) pair on the single-pod 16×16 mesh:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s            (197e12 bf16)
+    memory     = HLO_bytes_per_device / HBM_bw                 (819e9 B/s)
+    collective = collective_bytes_per_device / link_bw         (50e9 B/s)
+
+``compiled.cost_analysis()`` reports the *per-device* SPMD program (verified
+against analytic FLOPs for known cases), so the chips factor in the formulas
+from the brief is already applied by SPMD partitioning.  Collective bytes
+come from the HLO parse (see ``analysis.hlo`` for the per-op estimators).
+
+MODEL_FLOPS is the analytic "useful" count:
+    train:   6·N_active·tokens + 2·attn_flops(S)·3
+    prefill: 2·N_active·tokens + attn_flops(S)
+    decode:  2·N_active·batch + attn_kv_flops(S_cache)
+with N_active = non-embedding active params (MoE: k/E of routed experts +
+shared).  The ratio MODEL_FLOPS / (HLO_FLOPs × chips) flags remat recompute
+(ratio < 1 by the remat factor) and redundant compute.
+
+    python -m repro.analysis.roofline --inp results/dryrun.jsonl \
+        --out results/roofline.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+from repro.configs import INPUT_SHAPES, get_arch
+from repro.launch.mesh import HW
+from repro.models.transformer import vocab_padded
+
+__all__ = ["active_param_count", "model_flops", "analyse", "render_markdown"]
+
+
+def _layer_param_counts(cfg) -> Dict[str, float]:
+    d, f = cfg.d_model, cfg.d_ff
+    qd, kvd = cfg.q_dim, cfg.kv_dim
+    dr = cfg.rnn_width or d
+    mlp = 3 * d * f if cfg.mlp_variant in ("swiglu", "geglu") else 2 * d * f
+    counts = {
+        "attn": d * qd + 2 * d * kvd + qd * d,
+        "mlp": mlp,
+        "moe_total": cfg.num_experts * 3 * d * f + (mlp if cfg.shared_expert else 0),
+        "moe_active": cfg.experts_per_token * 3 * d * f
+        + (mlp if cfg.shared_expert else 0),
+        "rglru": 3 * d * dr + 2 * dr * dr + 5 * dr,
+        "rwkv_tmix": 5 * d * d + 2 * d * 32,
+        "rwkv_cmix": 2 * d * f + d * d,
+    }
+    return counts
+
+
+def active_param_count(cfg, total: bool = False) -> float:
+    """Non-embedding params; MoE layers count active (or total) experts."""
+    lc = _layer_param_counts(cfg)
+    n = 0.0
+    for btype in cfg.layer_types():
+        mixer, ffn = btype.split("+")
+        n += {"attn": lc["attn"], "swa": lc["attn"], "local": lc["attn"],
+              "rglru": lc["rglru"], "rwkv": lc["rwkv_tmix"]}[mixer]
+        n += {"mlp": lc["mlp"], "cmix": lc["rwkv_cmix"],
+              "moe": lc["moe_total"] if total else lc["moe_active"]}[ffn]
+    n += cfg.d_model * vocab_padded(cfg)  # lm head (tied or not — the matmul runs)
+    return n
+
+
+def _attn_flops(cfg, batch: int, s_q: int, s_kv: int) -> float:
+    """2 matmuls (qk, pv), 2 flops/MAC, causal halves the square case."""
+    per_layer = 4.0 * batch * s_q * s_kv * cfg.num_heads * cfg.head_dim
+    if s_q == s_kv:
+        per_layer *= 0.5  # causal
+    n_attn = sum(1 for b in cfg.layer_types() if b.split("+")[0] in ("attn", "swa", "local"))
+    return per_layer * n_attn
+
+
+def model_flops(arch: str, shape: str, fl_mode: str, local_steps: int = 4) -> float:
+    spec = get_arch(arch)
+    cfg = spec.long_context_model() if shape == "long_500k" else spec.model
+    ishape = INPUT_SHAPES[shape]
+    n_act = active_param_count(cfg)
+    b, s = ishape.global_batch, ishape.seq_len
+    if ishape.kind == "train":
+        steps = local_steps if fl_mode == "client_parallel" else 1
+        tokens = b * s * steps
+        return 6.0 * n_act * tokens + 3.0 * steps * _attn_flops(cfg, b, s, s)
+    if ishape.kind == "prefill":
+        return 2.0 * n_act * b * s + _attn_flops(cfg, b, s, s)
+    # decode: one token against the cache (window-clamped for swa/local)
+    win = {"swa": cfg.window, "local": cfg.local_window}
+    kv = min(s, max((win.get(bt.split("+")[0], s) for bt in cfg.layer_types()), default=s))
+    return 2.0 * n_act * b + _attn_flops(cfg, b, 1, kv)
+
+
+def _wkv_flops_correction(arch: str, shape: str, chips: int, fl_mode: str,
+                          local_steps: int) -> float:
+    """The rwkv time scan stays rolled even in accounting compiles (its trip
+    count is the sequence length); add its per-device flops analytically:
+    ~8·hd² flops per head per token per layer (state update + readout)."""
+    if arch != "rwkv6-7b":
+        return 0.0
+    spec = get_arch(arch)
+    cfg = spec.model
+    ishape = INPUT_SHAPES[shape]
+    heads = cfg.d_model // cfg.rwkv_head_dim
+    tokens = ishape.global_batch * (ishape.seq_len if ishape.kind != "decode" else 1)
+    if ishape.kind == "train":
+        tokens *= local_steps if fl_mode == "client_parallel" else 1
+        mult = 3.0  # fwd + bwd
+    else:
+        mult = 1.0
+    per_layer = 8.0 * cfg.rwkv_head_dim**2 * heads * tokens
+    return mult * per_layer * cfg.num_layers / chips
+
+
+def analyse(records: List[Dict], mesh: str = "16x16",
+            accounting: Optional[List[Dict]] = None) -> List[Dict]:
+    # Prefer accounting records (exact static counts, see dryrun
+    # _accounting_counts) for flops/bytes/collectives; production records
+    # supply memory_analysis and the ok/compile evidence.
+    acc_by_key = {}
+    for a in accounting or []:
+        if a.get("ok") and a.get("mesh") == mesh:
+            acc_by_key[(a["arch"], a["shape"])] = a
+    out = []
+    for r in records:
+        if not r.get("ok") or r.get("mesh") != mesh or r.get("reduced"):
+            continue
+        chips = 512 if mesh == "2x16x16" else 256
+        acc = acc_by_key.get((r["arch"], r["shape"]), r)
+        spec0 = get_arch(r["arch"])
+        flops_dev = acc.get("cost", {}).get("flops", 0.0)
+        flops_dev += _wkv_flops_correction(
+            r["arch"], r["shape"], chips, r.get("fl_mode", "serve"),
+            spec0.fl.local_steps,
+        )
+        bytes_dev = acc.get("cost", {}).get("bytes accessed", 0.0)
+        coll_dev = acc.get("collectives", {}).get("total", 0.0)
+        t_compute = flops_dev / HW.PEAK_FLOPS_BF16
+        t_memory = bytes_dev / HW.HBM_BW
+        t_coll = coll_dev / HW.ICI_BW
+        terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        spec = get_arch(r["arch"])
+        mf = model_flops(r["arch"], r["shape"], r.get("fl_mode", "serve"),
+                         spec.fl.local_steps)
+        hlo_global = flops_dev * chips
+        ratio = mf / hlo_global if hlo_global else float("nan")
+        out.append(
+            dict(
+                arch=r["arch"], shape=r["shape"], mesh=mesh,
+                fl_mode=r.get("fl_mode"),
+                t_compute=t_compute, t_memory=t_memory, t_collective=t_coll,
+                dominant=dominant,
+                model_flops=mf, hlo_flops_global=hlo_global, useful_ratio=ratio,
+                collectives={k: v for k, v in acc.get("collectives", {}).items() if k != "total"},
+                memory_bytes=r.get("memory", {}),
+                accounting=acc is not r,
+            )
+        )
+    return out
+
+
+_SUGGEST = {
+    "compute": "more chips / lower remat recompute / MoE capacity-factor cut",
+    "memory": "fuse bandwidth-bound ops, widen per-chip batch, bf16 cache",
+    "collective": "shard to cut cross-chip traffic (fewer all-gathers), raise "
+                  "E local steps (Mode A amortises the round all-reduce), overlap",
+}
+
+
+def render_markdown(rows: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mode | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful ratio | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['fl_mode']} "
+            f"| {r['t_compute']:.3e} | {r['t_memory']:.3e} | {r['t_collective']:.3e} "
+            f"| **{r['dominant']}** | {r['model_flops']:.2e} | {r['useful_ratio']:.2f} "
+            f"| {_SUGGEST[r['dominant']]} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--inp", default="results/dryrun.jsonl")
+    ap.add_argument("--acc", default="results/dryrun_acc.jsonl")
+    ap.add_argument("--out", default="results/roofline.md")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    records = [json.loads(l) for l in open(args.inp)]
+    accounting = None
+    import os
+    if args.acc and os.path.exists(args.acc):
+        accounting = [json.loads(l) for l in open(args.acc)]
+    rows = analyse(records, mesh=args.mesh, accounting=accounting)
+    md = render_markdown(rows)
+    with open(args.out, "w") as f:
+        f.write(md + "\n")
+    print(md)
+    with open(args.out.replace(".md", ".json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

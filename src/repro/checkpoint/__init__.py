@@ -1,0 +1,3 @@
+"""Pytree checkpointing (npz payload + json treedef sidecar)."""
+
+from repro.checkpoint.checkpoint import latest_step, restore, save

@@ -1,0 +1,68 @@
+"""Dependency-free pytree checkpointing.
+
+Layout: ``<dir>/step_<N>/arrays.npz`` + ``tree.json``.  Arrays are stored by
+flattened index; the treedef is reconstructed by unflattening against a
+template (restore requires a pytree-structure template, which training loops
+always have — their init state).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step"]
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    meta = {
+        "step": step,
+        "num_leaves": len(leaves),
+        "treedef": str(treedef),
+        "shapes": [list(np.shape(x)) for x in leaves],
+        "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+    }
+    with open(os.path.join(path, "tree.json"), "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def restore(ckpt_dir: str, template: Any, step: Optional[int] = None) -> Any:
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    t_leaves, treedef = jax.tree_util.tree_flatten(template)
+    if len(t_leaves) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, template has {len(t_leaves)}"
+        )
+    leaves = [
+        np.asarray(x).astype(np.asarray(t).dtype).reshape(np.shape(t))
+        for x, t in zip(leaves, t_leaves)
+    ]
+    return treedef.unflatten(leaves)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+    ]
+    return max(steps) if steps else None

@@ -1,0 +1,4 @@
+"""Architecture configs (assigned pool) + registry."""
+
+from repro.configs.base import INPUT_SHAPES, FLRunConfig, InputShape, ModelConfig
+from repro.configs.registry import ARCH_NAMES, ArchSpec, get_arch

@@ -1,0 +1,160 @@
+"""Model / sharding / FL configuration dataclasses.
+
+``ModelConfig`` describes any of the assigned architectures (dense GQA, MoE,
+RG-LRU hybrid, RWKV6, VLM, audio) for the composable decoder in
+``repro.models.transformer``.  ``ShardingRules`` maps *logical* axes to mesh
+axes per execution mode (MaxText-style logical-axis rules); each arch config
+overrides what it must (e.g. smollm's 15 heads can't shard over a 16-way
+``model`` axis — it shards attention on ``embed`` instead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+__all__ = ["ModelConfig", "ShardingRules", "FLRunConfig", "INPUT_SHAPES", "InputShape"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # block pattern: the repeating unit of "mixer+ffn" layer specs; layers =
+    # pattern * (num_layers // len(pattern)) + pattern[:remainder].
+    # mixers: attn | swa | local | rglru | rwkv;  ffns: mlp | moe | cmix.
+    block_pattern: Tuple[str, ...] = ("attn+mlp",)
+    mlp_variant: str = "swiglu"  # swiglu | geglu | gelu
+    norm_type: str = "rmsnorm"  # rmsnorm | layernorm
+    pos_style: str = "rope"  # rope | mrope | sinusoidal | none
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # qwen2-vl (t, h, w)
+    window: int = 4096  # SWA window for "local_attn" blocks / long-context variant
+    # query-chunked attention (exact; flash-like memory): live scores are
+    # (B, Hk, G, chunk, Skv) instead of (…, Sq, Skv).  chunk >= Sq degrades
+    # to the naive single-block path, so smoke tests are unaffected.
+    attention_chunk: Optional[int] = 512
+    embed_scale: bool = False  # gemma: scale embeddings by sqrt(d_model)
+    logits_soft_cap: Optional[float] = None
+    tie_embeddings: bool = True
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    router_type: str = "softmax"  # softmax (mixtral) | sigmoid (llama4)
+    shared_expert: bool = False  # llama4 shared expert alongside routed ones
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # RWKV
+    rwkv_head_dim: int = 64
+    # hybrid (recurrentgemma)
+    rnn_width: Optional[int] = None  # d_rnn (defaults to d_model)
+    local_window: int = 2048  # griffin local-attention window
+    # numerics
+    param_dtype: str = "float32"  # smoke tests fp32; dry-run configs bf16
+    dtype: str = "float32"  # activation dtype
+    remat: bool = False  # activation checkpointing over the layer scan
+    # scan unrolling: 1 = rolled while-loop (production; compact HLO),
+    # True = fully unrolled (cost-accounting dry-runs: XLA's cost analysis
+    # counts while bodies ONCE, so rolled loops undercount flops/bytes —
+    # see EXPERIMENTS.md §Roofline methodology).
+    scan_unroll: object = 1
+    loss_chunk: int = 512  # sequence chunking of the CE loss
+    loss_unroll: object = 1  # unroll of the loss chunk scan (accounting)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def layer_types(self) -> Tuple[str, ...]:
+        p = self.block_pattern
+        reps, rem = divmod(self.num_layers, len(p))
+        return p * reps + p[:rem]
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A smoke-test-sized variant of the same family (<=2 repeat units,
+        d_model<=512, <=4 experts) — per the assignment's smoke-test rule."""
+        small: Dict = dict(
+            num_layers=min(self.num_layers, 2 * len(self.block_pattern)),
+            d_model=min(self.d_model, 256),
+            num_heads=min(self.num_heads, 4),
+            num_kv_heads=min(self.num_kv_heads, 2),
+            head_dim=64,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 512),
+            rnn_width=None if self.rnn_width is None else 256,
+            rwkv_head_dim=min(self.rwkv_head_dim, 64),
+            window=min(self.window, 64),
+            local_window=min(self.local_window, 64),
+        )
+        if self.num_experts:
+            small["num_experts"] = min(self.num_experts, 4)
+            small["experts_per_token"] = min(self.experts_per_token, 2)
+        if self.pos_style == "mrope":
+            # rescale the (t, h, w) frequency sections to the reduced head dim
+            old_d2 = sum(self.mrope_sections)
+            new_d2 = small["head_dim"] // 2
+            t = max(1, self.mrope_sections[0] * new_d2 // old_d2)
+            h = max(1, self.mrope_sections[1] * new_d2 // old_d2)
+            small["mrope_sections"] = (t, h, new_d2 - t - h)
+        # keep head structure consistent: kv must divide q heads
+        if small["num_heads"] % small["num_kv_heads"]:
+            small["num_kv_heads"] = 1
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical-axis -> mesh-axis mapping (None = replicate).
+
+    Logical axes used by the model code:
+      batch, seq, embed, q_heads, kv_heads, head_dim, mlp, vocab, experts,
+      expert_mlp, rnn, clients (Mode-A leading client axis).
+    """
+
+    rules: Dict[str, Optional[str]]
+
+    def axis(self, logical: str):
+        return self.rules.get(logical)
+
+    def spec(self, *logical: Optional[str]):
+        """Build a PartitionSpec-compatible tuple for the given logical dims."""
+        return tuple(self.rules.get(l) if l else None for l in logical)
+
+
+@dataclasses.dataclass(frozen=True)
+class FLRunConfig:
+    """How FL rounds execute for an architecture (DESIGN.md §2)."""
+
+    mode: str = "client_parallel"  # client_parallel (Mode A) | fedsgd_fsdp (Mode B)
+    local_steps: int = 4  # E (Mode A); Mode B is inherently E = 1
+    lr: float = 1e-2
+    optimizer: str = "sgd"  # Mode-B server optimizer: sgd | adam | adafactor
+    micro_batches: int = 4  # grad-accumulation within each local step (exact)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,75 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d_model=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 128 experts top-1 — MoE, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E].
+
+Maverick interleaves MoE every other layer (period 2) with a shared expert
+next to the 128 routed experts and a sigmoid top-1 router:
+24 MoE layers × 128 × 3 × 5120 × 8192 ≈ 386 B routed params + dense/attn
+≈ 400 B total, ~17 B active per token.
+
+This is the only Mode-B (FedSGD/FSDP) architecture: per-client parameter
+copies cannot fit HBM (DESIGN.md §2), and the optimizer is Adafactor so the
+second-moment state is O(n+m) per matrix.  Expert weights shard over BOTH
+mesh axes: experts over ``data`` (128/16 = 8 per row), d_ff over ``model``
+— real expert parallelism; XLA inserts the dispatch all-to-alls (§Roofline).
+"""
+
+from repro.configs.base import FLRunConfig, ModelConfig
+from repro.configs.registry import SERVE_RULES, TRAIN_RULES, ArchSpec
+
+
+def spec() -> ArchSpec:
+    model = ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        arch_type="moe",
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=202_048,
+        block_pattern=("attn+mlp", "attn+moe"),  # MoE every other layer
+        mlp_variant="swiglu",
+        rope_theta=500_000.0,
+        num_experts=128,
+        experts_per_token=1,
+        router_type="sigmoid",
+        shared_expert=True,
+        capacity_factor=1.25,
+        tie_embeddings=False,
+        param_dtype="bfloat16",
+        dtype="bfloat16",
+        remat=True,
+    )
+    rules_t = dict(
+        TRAIN_RULES,
+        heads_w="model",  # 40 heads: 40 % 16 != 0 -> see below
+        experts_w="data",
+        expert_mlp_w="model",
+        act_experts="data",
+    )
+    # 40 heads don't divide 16 -> shard attention on embed dims instead.
+    rules_t.update(heads_w=None, attn_in_w="model")
+    rules_s = dict(
+        SERVE_RULES,
+        heads_w=None,
+        attn_in_w="model",
+        attn_out_w="model",
+        experts_w="data",
+        expert_mlp_w="model",
+        act_experts="data",
+    )
+    return ArchSpec(
+        model=model,
+        fl=FLRunConfig(mode="fedsgd_fsdp", local_steps=1, lr=1e-3, micro_batches=8),
+        train_rules=rules_t,
+        serve_rules=rules_s,
+        optimizer="adafactor",
+        long_context="swa_variant",
+        notes=(
+            "Mode B (E=1 FedSGD, eq. 9): 800 GB bf16 params can't replicate "
+            "per client; experts sharded (data=experts, model=d_ff); vocab "
+            "202048 padded to 202112"
+        ),
+    )

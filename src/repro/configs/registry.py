@@ -1,0 +1,99 @@
+"""Registry of the 10 assigned architectures.
+
+Each ``src/repro/configs/<id>.py`` exposes ``spec() -> ArchSpec`` with the
+exact published configuration (cited in its docstring) plus its sharding
+rules and FL execution mode.  ``get_arch(name)`` is the single lookup used by
+launchers, smoke tests, and benchmarks (``--arch <id>``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+from repro.configs.base import FLRunConfig, ModelConfig
+
+__all__ = ["ArchSpec", "get_arch", "ARCH_NAMES"]
+
+ARCH_NAMES = [
+    "granite-3-2b",
+    "qwen2-vl-2b",
+    "internlm2-20b",
+    "smollm-360m",
+    "gemma-7b",
+    "recurrentgemma-9b",
+    "llama4-maverick-400b-a17b",
+    "rwkv6-7b",
+    "mixtral-8x7b",
+    "musicgen-medium",
+]
+
+_MODULES = {n: "repro.configs." + n.replace("-", "_") for n in ARCH_NAMES}
+
+
+# Baseline logical->mesh rules (DESIGN.md §3); arch modules override entries.
+# 'data' is widened to ('pod','data') automatically on the multi-pod mesh.
+SERVE_RULES: Dict[str, Optional[str]] = {
+    "act_batch": "data",
+    "act_seq": None,
+    "act_embed": None,
+    "embed_w": None,
+    "embed_w_vec": None,
+    "vocab_w": "model",
+    "heads_w": "model",
+    "attn_in_w": None,
+    "attn_out_w": None,
+    "kv_w": None,  # most assigned archs have kv_heads < 16 -> replicate
+    "mlp_w": "model",
+    "att_w": "model",
+    "rnn_w": "model",
+    "experts_w": None,
+    "expert_embed_w": None,
+    "expert_mlp_w": "model",
+    "cache_seq": "model",
+    "embed_act": None,
+    "rwkv_heads": "model",
+    "act_experts": None,
+    # hillclimb-gated logical axes (§Perf): default None = baseline behavior
+    "att_vec_w": None,  # rwkv decay/group-norm vectors co-sharded with att_w
+    "act_rwkv_h": None,  # explicit head sharding of the wkv r/k/v/w tensors
+    "act_attn_b": None,  # batch-parallel attention (archs whose heads can't
+    "act_attn_h": None,  # shard) / explicit head sharding of q/k/v
+    "act_attn_kv": None,
+    "act_inner_b": None,  # Mode-A per-client local batch dim
+}
+
+TRAIN_RULES: Dict[str, Optional[str]] = dict(
+    SERVE_RULES,
+    embed_w="data",  # FSDP-style second axis on the big matrices
+    attn_in_w="data",
+    attn_out_w="data",
+    expert_embed_w=None,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    model: ModelConfig
+    fl: FLRunConfig
+    train_rules: Dict[str, Optional[str]]
+    serve_rules: Dict[str, Optional[str]]
+    optimizer: str = "adam"  # Mode-B / pretrain optimizer
+    long_context: str = "swa_variant"  # native | swa_variant
+    notes: str = ""
+
+    def long_context_model(self) -> ModelConfig:
+        """Model config used for the long_500k shape."""
+        if self.long_context == "native":
+            return self.model
+        pattern = tuple(
+            b.replace("attn+", "swa+") for b in self.model.block_pattern
+        )
+        return dataclasses.replace(self.model, block_pattern=pattern)
+
+
+def get_arch(name: str) -> ArchSpec:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return importlib.import_module(_MODULES[name]).spec()

@@ -1,0 +1,40 @@
+"""rwkv6-7b [ssm]: 32L d_model=4096 (attention-free) d_ff=14336
+vocab=65536 — Finch, data-dependent decay [arXiv:2404.05892].
+
+64 WKV heads of dim 64; decode state is O(1) in sequence length
+(tm_x + (H, 64, 64) wkv state + cm_x per layer) ⇒ long_500k is native.
+The paper's technique applies unchanged: profiles are activation means and
+the k-DPP never looks at the mixer type (DESIGN.md §Arch-applicability)."""
+
+from repro.configs.base import FLRunConfig, ModelConfig
+from repro.configs.registry import SERVE_RULES, TRAIN_RULES, ArchSpec
+
+
+def spec() -> ArchSpec:
+    model = ModelConfig(
+        name="rwkv6-7b",
+        arch_type="ssm",
+        num_layers=32,
+        d_model=4096,
+        num_heads=64,  # wkv heads (d_model / rwkv_head_dim)
+        num_kv_heads=64,
+        head_dim=64,
+        d_ff=14_336,
+        vocab_size=65_536,
+        block_pattern=("rwkv+cmix",),
+        pos_style="none",
+        rwkv_head_dim=64,
+        tie_embeddings=False,
+        param_dtype="bfloat16",
+        dtype="bfloat16",
+        remat=True,
+    )
+    return ArchSpec(
+        model=model,
+        fl=FLRunConfig(mode="client_parallel", local_steps=2, lr=2e-3),
+        train_rules=dict(TRAIN_RULES),
+        serve_rules=dict(SERVE_RULES),
+        optimizer="adam",
+        long_context="native",
+        notes="wkv state (B, 64, 64, 64) shards (data, model) per layer",
+    )

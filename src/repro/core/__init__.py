@@ -1,0 +1,36 @@
+"""FL-DP³S core: data profiling, eq.-(14) similarity kernel, k-DPP selection.
+
+The paper's primary contribution as a composable JAX module — see DESIGN.md §1.
+"""
+
+from repro.core.dpp import (
+    elementary_symmetric,
+    greedy_map_kdpp,
+    kdpp_log_prob,
+    log_det_subset,
+    sample_kdpp,
+)
+from repro.core.metrics import cohort_label_distribution, gemd, label_distribution
+from repro.core.profiles import (
+    fc1_profile,
+    gradient_profile,
+    profile_all_clients,
+    representative_gradient_profile,
+)
+from repro.core.selection import (
+    ClusterSelection,
+    DPPSelection,
+    FedSAESelection,
+    PowerOfChoiceSelection,
+    RoundState,
+    SelectionStrategy,
+    UniformSelection,
+    make_strategy,
+)
+from repro.core.similarity import (
+    dpp_kernel,
+    kernel_from_profiles,
+    pairwise_dists,
+    pairwise_sq_dists,
+    similarity_matrix,
+)

@@ -1,0 +1,46 @@
+"""Diversity / heterogeneity metrics.
+
+GEMD (group earth mover's distance, paper eq. 15) quantifies how far the
+label distribution of the selected cohort's *union* dataset is from the global
+label distribution; lower = more diverse/representative cohort.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gemd", "label_distribution", "cohort_label_distribution"]
+
+
+def label_distribution(ys: jax.Array, num_classes: int) -> jax.Array:
+    """Empirical label distribution P(y = j) of one dataset."""
+    counts = jnp.bincount(ys.astype(jnp.int32), length=num_classes)
+    return counts / jnp.maximum(jnp.sum(counts), 1)
+
+
+def cohort_label_distribution(
+    client_dists: jax.Array, client_sizes: jax.Array, selected: jax.Array
+) -> jax.Array:
+    """Size-weighted label distribution of the union of selected clients.
+
+    ``client_dists``: (C, N) per-client label distributions P_c(y = j);
+    ``client_sizes``: (C,) n_c; ``selected``: (k,) int indices.
+    """
+    n = client_sizes[selected].astype(jnp.float32)
+    d = client_dists[selected]
+    return (n[:, None] * d).sum(0) / jnp.maximum(n.sum(), 1e-30)
+
+
+def gemd(
+    client_dists: jax.Array,
+    client_sizes: jax.Array,
+    selected: jax.Array,
+    global_dist: jax.Array,
+) -> jax.Array:
+    """Group earth mover's distance of a cohort (paper eq. 15).
+
+    ``G(C_t) = Σ_j | Σ_c n_c P_c(j) / Σ_c n_c − P_g(j) |``
+    """
+    mix = cohort_label_distribution(client_dists, client_sizes, selected)
+    return jnp.sum(jnp.abs(mix - global_dist))

@@ -1,0 +1,105 @@
+"""Client data profiling (paper §3.1, Theorem 1).
+
+Each client summarises its local dataset by the *mean vector of the FC-1
+outputs* of the (shared, freshly initialised) global model — eq. (11):
+``f_c = [u_1^c, …, u_Q^c]``.  By Theorem 1 (CLT over the weighted inputs of
+each FC-1 neuron) the per-neuron output is asymptotically Gaussian with mean
+``u_q = Σ_v ω_{q,v} μ_v + b_q`` — a linear image of the mean latent feature
+vector, i.e. a distribution fingerprint that leaks far less than a label
+histogram and is uploaded once (B·Q bits).
+
+Models plug in via ``apply_with_features(params, x) -> (logits, feats)`` where
+``feats`` is the designated profile layer output:
+* paper CNN: FC-1 *pre-activation* outputs (exactly Theorem 1's ``h_q``);
+* decoder LMs: mean-over-tokens of the pre-logits hidden state (the analogue
+  of "first dense layer after the feature extractor"; see DESIGN.md §3).
+
+Also implements the Fig.-3 ablation baselines: gradient profiles and
+representative-gradient profiles (Fraboni et al., ICML'21).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "fc1_profile",
+    "gradient_profile",
+    "representative_gradient_profile",
+    "profile_all_clients",
+]
+
+FeatureFn = Callable[..., Tuple[jax.Array, jax.Array]]
+
+
+def fc1_profile(feature_fn: FeatureFn, params, xs: jax.Array, batch_size: int = 256) -> jax.Array:
+    """Mean FC-1 output over a client's local dataset (eq. 11).
+
+    ``feature_fn(params, x_batch) -> (logits, feats)`` with feats (B, Q).
+    Streams in fixed-size batches so the profile pass is O(batch) memory.
+    """
+    n = xs.shape[0]
+    q = None
+    total = None
+    for start in range(0, n, batch_size):
+        xb = xs[start : start + batch_size]
+        _, feats = feature_fn(params, xb)
+        feats = feats.reshape(feats.shape[0], -1)
+        s = jnp.sum(feats, axis=0)
+        total = s if total is None else total + s
+        q = feats.shape[-1]
+    return total / n
+
+
+def gradient_profile(
+    loss_fn: Callable, params, xs: jax.Array, ys: jax.Array, max_dim: int = 4096
+) -> jax.Array:
+    """Fig.-3 ablation: profile = flattened loss gradient on the local data.
+
+    Truncated/strided to ``max_dim`` entries so profiles stay comparable in
+    size with FC-1 profiles (the paper's point is that gradients are a *worse*
+    and much heavier fingerprint).
+    """
+    g = jax.grad(loss_fn)(params, xs, ys)
+    flat = jnp.concatenate([x.reshape(-1) for x in jax.tree_util.tree_leaves(g)])
+    if flat.shape[0] > max_dim:
+        stride = flat.shape[0] // max_dim
+        flat = flat[: stride * max_dim : stride]
+    return flat
+
+
+def representative_gradient_profile(
+    loss_fn: Callable, params, xs: jax.Array, ys: jax.Array, layer: str = "out"
+) -> jax.Array:
+    """Fig.-3 ablation: representative gradients (Fraboni et al. Alg. 2 input).
+
+    Uses only the output-layer gradient — the low-dimensional "representative"
+    slice used by clustered sampling.
+    """
+    g = jax.grad(loss_fn)(params, xs, ys)
+    leaves = {"/".join(map(str, p)): v for p, v in _flatten_with_paths(g)}
+    picked = [v for k, v in sorted(leaves.items()) if layer in k]
+    if not picked:  # fall back to the last parameter tensor
+        picked = [jax.tree_util.tree_leaves(g)[-1]]
+    return jnp.concatenate([p.reshape(-1) for p in picked])
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        yield tuple(getattr(p, "key", getattr(p, "idx", str(p))) for p in path), leaf
+
+
+def profile_all_clients(
+    feature_fn: FeatureFn, params, client_data: Iterable[jax.Array], batch_size: int = 256
+) -> jax.Array:
+    """Stack eq.-(11) profiles for every client: -> (C, Q).
+
+    In deployment each client computes its own row locally and uploads it once
+    (Algorithm 1 lines 2-4); here we loop over the simulated clients.
+    """
+    rows = [fc1_profile(feature_fn, params, xs, batch_size=batch_size) for xs in client_data]
+    return jnp.stack(rows, axis=0)

@@ -1,0 +1,211 @@
+"""Client-selection strategies (paper §3.3 + §4 baselines).
+
+* :class:`DPPSelection` — FL-DP³S (the paper): k-DPP over the eq.-(14) kernel.
+* :class:`UniformSelection` — FedAvg's uniform-without-replacement sampling.
+* :class:`FedSAESelection` — prefers clients with higher local loss
+  (Li et al., IJCNN'21, as characterised in the paper's §4).
+* :class:`ClusterSelection` — clustered sampling (Fraboni et al., ICML'21,
+  Alg. 2): agglomerative clustering of client fingerprints into C_p clusters,
+  one client drawn per cluster ∝ n_c.
+* :class:`PowerOfChoiceSelection` — beyond-paper extra baseline (Cho et al.):
+  d uniform candidates, keep the C_p with the highest loss.
+
+All strategies share ``select(key, state) -> (C_p,) int32 indices``.
+``RoundState`` carries whatever the server legitimately knows: the one-shot
+profiles/kernel, last-known local losses, and client sizes — never raw data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dpp as dpp_mod
+
+__all__ = [
+    "RoundState",
+    "SelectionStrategy",
+    "UniformSelection",
+    "DPPSelection",
+    "FedSAESelection",
+    "ClusterSelection",
+    "PowerOfChoiceSelection",
+    "make_strategy",
+]
+
+
+@dataclasses.dataclass
+class RoundState:
+    """Server-side knowledge available to a selection strategy."""
+
+    num_clients: int
+    round: int = 0
+    kernel: Optional[jax.Array] = None  # (C, C) PSD, from profiles (eq. 14)
+    profiles: Optional[jax.Array] = None  # (C, Q)
+    losses: Optional[jax.Array] = None  # (C,) last-known local losses
+    client_sizes: Optional[jax.Array] = None  # (C,) n_c
+    grad_profiles: Optional[jax.Array] = None  # (C, G) representative gradients
+
+
+class SelectionStrategy:
+    name = "base"
+
+    def select(self, key: jax.Array, state: RoundState, k: int) -> jax.Array:
+        raise NotImplementedError
+
+
+class UniformSelection(SelectionStrategy):
+    """FedAvg: k clients uniformly at random without replacement."""
+
+    name = "fedavg"
+
+    def select(self, key, state, k):
+        return jax.random.choice(
+            key, state.num_clients, shape=(k,), replace=False
+        ).astype(jnp.int32)
+
+
+class DPPSelection(SelectionStrategy):
+    """FL-DP³S: sample the cohort from the k-DPP built on the profile kernel.
+
+    ``mode='sample'`` is the paper's stochastic k-DPP; ``mode='map'`` is the
+    deterministic greedy-MAP variant (beyond paper; see DESIGN.md §6).
+    """
+
+    name = "fl-dp3s"
+
+    def __init__(self, mode: str = "sample"):
+        assert mode in ("sample", "map")
+        self.mode = mode
+        if mode == "map":
+            self.name = "fl-dp3s-map"
+
+    def select(self, key, state, k):
+        assert state.kernel is not None, "DPPSelection needs the profile kernel"
+        if self.mode == "map":
+            return dpp_mod.greedy_map_kdpp(state.kernel, k)
+        return dpp_mod.sample_kdpp(key, state.kernel, k)
+
+
+def _gumbel_topk_without_replacement(key, log_weights, k):
+    """Weighted sampling without replacement via Gumbel top-k (jittable)."""
+    g = jax.random.gumbel(key, log_weights.shape, log_weights.dtype)
+    _, idx = jax.lax.top_k(log_weights + g, k)
+    return idx.astype(jnp.int32)
+
+
+class FedSAESelection(SelectionStrategy):
+    """Prefer clients with higher local loss (sample ∝ loss, w/o repl.)."""
+
+    name = "fedsae"
+
+    def select(self, key, state, k):
+        losses = state.losses
+        if losses is None:
+            losses = jnp.ones((state.num_clients,))
+        w = jnp.maximum(losses, 1e-8)
+        return _gumbel_topk_without_replacement(key, jnp.log(w), k)
+
+
+class PowerOfChoiceSelection(SelectionStrategy):
+    """d uniform candidates -> keep the k with the highest loss."""
+
+    name = "power-of-choice"
+
+    def __init__(self, d: int = 30):
+        self.d = d
+
+    def select(self, key, state, k):
+        d = min(self.d, state.num_clients)
+        k1, _ = jax.random.split(key)
+        cand = jax.random.choice(k1, state.num_clients, shape=(d,), replace=False)
+        losses = state.losses if state.losses is not None else jnp.zeros((state.num_clients,))
+        order = jnp.argsort(-losses[cand])
+        return cand[order[:k]].astype(jnp.int32)
+
+
+class ClusterSelection(SelectionStrategy):
+    """Clustered sampling (Fraboni et al., Alg. 2).
+
+    Agglomerative average-linkage clustering (cosine distance) of client
+    fingerprints (representative gradients / profiles) into ``k`` clusters;
+    each round one client is drawn per cluster with probability ∝ n_c.
+    Clustering runs on host once (or whenever fingerprints refresh).
+    """
+
+    name = "cluster"
+
+    def __init__(self):
+        self._labels = None
+        self._for_shape = None
+
+    def _cluster(self, feats: np.ndarray, k: int) -> np.ndarray:
+        c = feats.shape[0]
+        norm = np.linalg.norm(feats, axis=1, keepdims=True)
+        f = feats / np.maximum(norm, 1e-12)
+        sim = f @ f.T
+        dist = 1.0 - sim
+        # average-linkage agglomerative clustering, O(C^3) worst case — fine
+        # for C in the hundreds/thousands (runs once).
+        clusters = [[i] for i in range(c)]
+        d = dist.copy()
+        np.fill_diagonal(d, np.inf)
+        active = list(range(c))
+        while len(active) > k:
+            sub = d[np.ix_(active, active)]
+            i_loc, j_loc = np.unravel_index(np.argmin(sub), sub.shape)
+            i, j = active[i_loc], active[j_loc]
+            if i > j:
+                i, j = j, i
+            ni, nj = len(clusters[i]), len(clusters[j])
+            # average-linkage update of row/col i
+            d[i, :] = (ni * d[i, :] + nj * d[j, :]) / (ni + nj)
+            d[:, i] = d[i, :]
+            d[i, i] = np.inf
+            clusters[i] = clusters[i] + clusters[j]
+            active.remove(j)
+        labels = np.zeros(c, np.int32)
+        for lbl, a in enumerate(active):
+            labels[np.asarray(clusters[a])] = lbl
+        return labels
+
+    def select(self, key, state, k):
+        # Fraboni et al. cluster on representative gradients when available.
+        feats = state.grad_profiles if state.grad_profiles is not None else state.profiles
+        assert feats is not None, "ClusterSelection needs client fingerprints"
+        feats = np.asarray(feats)
+        if self._labels is None or self._for_shape != (feats.shape, k):
+            self._labels = self._cluster(feats, k)
+            self._for_shape = (feats.shape, k)
+        sizes = (
+            np.asarray(state.client_sizes)
+            if state.client_sizes is not None
+            else np.ones(state.num_clients)
+        )
+        rng = np.random.default_rng(np.asarray(jax.random.key_data(key)).ravel()[-1].item())
+        picks = []
+        for lbl in range(k):
+            members = np.nonzero(self._labels == lbl)[0]
+            if len(members) == 0:  # degenerate cluster — fall back to uniform
+                members = np.arange(state.num_clients)
+            p = sizes[members] / sizes[members].sum()
+            picks.append(int(rng.choice(members, p=p)))
+        return jnp.asarray(picks, jnp.int32)
+
+
+def make_strategy(name: str, **kw) -> SelectionStrategy:
+    table = {
+        "fedavg": UniformSelection,
+        "uniform": UniformSelection,
+        "fl-dp3s": DPPSelection,
+        "dpp": DPPSelection,
+        "fl-dp3s-map": lambda: DPPSelection(mode="map"),
+        "fedsae": FedSAESelection,
+        "cluster": ClusterSelection,
+        "power-of-choice": PowerOfChoiceSelection,
+    }
+    return table[name](**kw) if name not in ("fl-dp3s-map",) else table[name]()

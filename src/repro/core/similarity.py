@@ -1,0 +1,68 @@
+"""Similarity kernel construction from client data profiles (paper §3.2).
+
+Implements eq. (14): pairwise L2 distances between profiles, min-max
+normalised and flipped into similarities ``S``, then the PSD DPP kernel
+``L = Sᵀ S`` (eq. below (13)).
+
+The O(C²·Q) pairwise-distance hot spot can run through the Pallas
+``pairwise_l2`` TPU kernel (``use_kernel=True``); the default pure-jnp path is
+the oracle and the CPU path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "pairwise_sq_dists",
+    "pairwise_dists",
+    "similarity_matrix",
+    "dpp_kernel",
+    "kernel_from_profiles",
+]
+
+
+def pairwise_sq_dists(f: jax.Array, use_kernel: bool = False) -> jax.Array:
+    """Squared L2 distances between profile rows: (C, Q) -> (C, C).
+
+    Uses the MXU-friendly expansion ``‖a‖² + ‖b‖² − 2 a·b``.
+    """
+    if use_kernel:
+        from repro.kernels.pairwise_l2 import ops as _ops
+
+        return _ops.pairwise_sq_dists(f)
+    sq = jnp.sum(f * f, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (f @ f.T)
+    d2 = jnp.maximum(d2, 0.0)
+    # the expansion is exact-zero-free on the diagonal only up to fp error;
+    # pin it (distance to self) so eq.-(14) keeps an exact unit diagonal.
+    return d2 * (1.0 - jnp.eye(d2.shape[0], dtype=d2.dtype))
+
+
+def pairwise_dists(f: jax.Array, use_kernel: bool = False) -> jax.Array:
+    """L2 distances ``s⁰_{m,n} = ‖f_m − f_n‖₂`` (paper eq. 14)."""
+    return jnp.sqrt(pairwise_sq_dists(f, use_kernel=use_kernel))
+
+
+def similarity_matrix(f: jax.Array, use_kernel: bool = False) -> jax.Array:
+    """Similarity matrix ``S`` per eq. (14).
+
+    ``s_{m,n} = 1 − (s⁰_{m,n} − min(S⁰)) / (max(S⁰) − min(S⁰))``; values in
+    [0, 1], diagonal = 1 (since min(S⁰) = 0 on the diagonal).
+    """
+    s0 = pairwise_dists(f, use_kernel=use_kernel)
+    lo = jnp.min(s0)
+    hi = jnp.max(s0)
+    rng = jnp.maximum(hi - lo, 1e-30)
+    return 1.0 - (s0 - lo) / rng
+
+
+def dpp_kernel(s: jax.Array) -> jax.Array:
+    """DPP kernel ``L = Sᵀ S`` — PSD by construction (Gram matrix)."""
+    return s.T @ s
+
+
+def kernel_from_profiles(f: jax.Array, use_kernel: bool = False) -> jax.Array:
+    """Profiles (C, Q) -> PSD k-DPP kernel (C, C): eq. (14) then L = SᵀS."""
+    return dpp_kernel(similarity_matrix(f, use_kernel=use_kernel))

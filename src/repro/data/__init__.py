@@ -1,0 +1,9 @@
+"""Data substrate: synthetic datasets, non-IID partitioners, batch pipeline."""
+
+from repro.data.partition import dirichlet_partition, skewness_partition
+from repro.data.pipeline import batch_iterator, epoch_batches
+from repro.data.synthetic import (
+    SyntheticImageDataset,
+    make_image_dataset,
+    make_token_dataset,
+)

@@ -1,0 +1,9 @@
+"""Federated runtime: local updates (eq. 3-5), aggregation (eq. 6), rounds."""
+
+from repro.fl.rounds import (
+    build_client_parallel_round,
+    build_fedsgd_step,
+    build_server_opt_round,
+    weighted_average,
+)
+from repro.fl.trainer import FLConfig, FLTrainer

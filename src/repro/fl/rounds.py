@@ -1,0 +1,199 @@
+"""Jitted FL round steps — the distributed heart of the framework.
+
+Two execution modes (DESIGN.md §2):
+
+* ``build_client_parallel_round`` — Mode A (paper-faithful): per-client param
+  copies on a leading C_p axis (sharded over the mesh ``data`` axis under
+  pjit), ``E`` local SGD steps via ``lax.scan`` with **no cross-client
+  collectives inside**, then one eq.-(6) weighted aggregation.  The collective
+  term of the roofline is paid once per round instead of once per step —
+  the communication-efficiency claim of FL, measurable in §Roofline.
+* ``build_fedsgd_step`` — Mode B (paper's E=1 reduction, eq. 9): one global
+  weighted-gradient step; params keep a single (optionally FSDP-sharded)
+  copy.  Used when per-client copies cannot fit HBM (llama4-maverick).
+
+Both are pure functions of (params, batch pytrees) so ``jax.jit`` +
+``in_shardings`` decide the distribution; nothing here touches devices.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import optim as optim_lib
+
+__all__ = [
+    "weighted_average",
+    "build_client_parallel_round",
+    "build_fedsgd_step",
+    "build_server_opt_round",
+]
+
+PyTree = Any
+# loss_fn(params, batch) -> scalar loss
+LossFn = Callable[[PyTree, PyTree], jax.Array]
+
+
+def weighted_average(trees: PyTree, weights: jax.Array) -> PyTree:
+    """Eq. (6): Σ_c (n_c / Σ n_c) · w_c over the leading client axis."""
+    wsum = jnp.sum(weights)
+    w = (weights / jnp.maximum(wsum, 1e-30)).astype(jnp.float32)
+
+    def avg(x):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(wb * x.astype(jnp.float32), axis=0).astype(x.dtype)
+
+    return jax.tree_util.tree_map(avg, trees)
+
+
+def build_client_parallel_round(
+    loss_fn: LossFn,
+    lr: float,
+    local_steps: int,
+    grad_clip: Optional[float] = None,
+    client_constraint: Optional[Callable[[PyTree], PyTree]] = None,
+    unroll=1,
+    sequential_clients: bool = False,
+    micro_batches: int = 1,
+) -> Callable[[PyTree, PyTree, jax.Array], Tuple[PyTree, jax.Array]]:
+    """Mode A round step.
+
+    ``round_step(global_params, client_batches, client_weights)`` where every
+    leaf of ``client_batches`` has leading shape ``(C_p, local_steps, ...)``
+    and ``client_weights`` is ``(C_p,)`` (= n_c).  Returns the aggregated
+    global params (eq. 6) and the mean local loss.
+
+    ``client_constraint`` (used by the distributed launchers) applies a
+    sharding constraint to the per-client broadcast params so the leading
+    client axis lays out over the mesh ``data`` axis.
+    """
+
+    def _full_grad(p, batch):
+        if micro_batches == 1:
+            return jax.value_and_grad(loss_fn)(p, batch)
+        # gradient accumulation over micro-batches: identical full-batch
+        # gradient, 1/micro_batches the live activations (§Perf memory lever)
+        micro = jax.tree_util.tree_map(
+            lambda x: x.reshape((micro_batches, x.shape[0] // micro_batches) + x.shape[1:]),
+            batch,
+        )
+
+        def acc(carry, mb):
+            tot_l, tot_g = carry
+            l, g = jax.value_and_grad(loss_fn)(p, mb)
+            return (tot_l + l, jax.tree_util.tree_map(jnp.add, tot_g, g)), None
+
+        zeros = jax.tree_util.tree_map(lambda w: jnp.zeros(w.shape, jnp.float32), p)
+        (loss, g), _ = lax.scan(acc, (jnp.zeros((), jnp.float32), zeros), micro)
+        inv = 1.0 / micro_batches
+        return loss * inv, jax.tree_util.tree_map(lambda x: x * inv, g)
+
+    def local_update(params: PyTree, steps_batch: PyTree) -> Tuple[PyTree, jax.Array]:
+        # eq. (3)-(5): E plain-SGD passes; steps_batch leaves: (local_steps, ...)
+        def one_step(p, batch):
+            loss, g = _full_grad(p, batch)
+            if grad_clip is not None:
+                g = optim_lib.clip_by_global_norm(g, grad_clip)
+            p = jax.tree_util.tree_map(lambda w, gw: (w - lr * gw).astype(w.dtype), p, g)
+            return p, loss
+
+        return lax.scan(one_step, params, steps_batch, unroll=unroll)
+
+    def round_step(global_params, client_batches, client_weights):
+        n_clients = client_weights.shape[0]
+        per_client = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_clients,) + x.shape), global_params
+        )
+        if client_constraint is not None:
+            per_client = client_constraint(per_client)
+        if sequential_clients:
+            # CPU-simulation path: vmapped convs lower to grouped convolutions
+            # (XLA-CPU pathology, ~10x slow); on the mesh each device owns one
+            # client so vmap is right there, lax.map is right here.
+            new_params, losses = jax.lax.map(
+                lambda args: local_update(*args), (per_client, client_batches)
+            )
+        else:
+            new_params, losses = jax.vmap(local_update)(per_client, client_batches)
+        agg = weighted_average(new_params, client_weights)
+        return agg, jnp.mean(losses)
+
+    return round_step
+
+
+def build_server_opt_round(
+    loss_fn: LossFn,
+    client_lr: float,
+    local_steps: int,
+    server_optimizer: optim_lib.Optimizer,
+    grad_clip: Optional[float] = None,
+) -> Callable:
+    """Beyond-paper: FedOpt (Reddi et al.) on top of Mode-A rounds.
+
+    The eq.-(6) aggregate is reinterpreted as a *pseudo-gradient*
+    ``Δ = w_global − avg(w_clients)`` and fed to a server optimizer
+    (momentum/Adam), which is known to stabilise non-IID training — and
+    composes orthogonally with DPP cohort selection.
+
+    ``round_step(params, server_state, batches, weights) ->
+    (params, server_state, loss)``.
+    """
+    inner = build_client_parallel_round(loss_fn, client_lr, local_steps, grad_clip)
+
+    def round_step(params, server_state, client_batches, client_weights):
+        agg, loss = inner(params, client_batches, client_weights)
+        pseudo_grad = jax.tree_util.tree_map(
+            lambda w, a: (w.astype(jnp.float32) - a.astype(jnp.float32)), params, agg
+        )
+        updates, server_state = server_optimizer.update(pseudo_grad, server_state, params)
+        params = optim_lib.apply_updates(params, updates)
+        return params, server_state, loss
+
+    return round_step
+
+
+def build_fedsgd_step(
+    loss_fn: LossFn,
+    optimizer: optim_lib.Optimizer,
+    grad_clip: Optional[float] = None,
+    micro_batches: int = 1,
+) -> Callable:
+    """Mode B step: one optimizer step on the weighted global gradient.
+
+    ``step(params, opt_state, batch) -> (params, opt_state, loss)``.  The
+    batch carries all selected clients' data; per-client weighting happens via
+    the sample dimension (uniform n_c ⇒ plain mean, matching eq. 9).
+    ``micro_batches`` accumulates the gradient over batch slices (exact).
+    """
+
+    def grad_of(params, batch):
+        if micro_batches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        micro = jax.tree_util.tree_map(
+            lambda x: x.reshape((micro_batches, x.shape[0] // micro_batches) + x.shape[1:]),
+            batch,
+        )
+
+        def acc(carry, mb):
+            tot_l, tot_g = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (tot_l + l, jax.tree_util.tree_map(jnp.add, tot_g, g)), None
+
+        zeros = jax.tree_util.tree_map(lambda w: jnp.zeros(w.shape, jnp.float32), params)
+        (loss, g), _ = lax.scan(acc, (jnp.zeros((), jnp.float32), zeros), micro)
+        inv = 1.0 / micro_batches
+        return loss * inv, jax.tree_util.tree_map(lambda x: x * inv, g)
+
+    def step(params, opt_state, batch):
+        loss, g = grad_of(params, batch)
+        if grad_clip is not None:
+            g = optim_lib.clip_by_global_norm(g, grad_clip)
+        updates, opt_state = optimizer.update(g, opt_state, params)
+        params = optim_lib.apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return step

@@ -1,0 +1,1 @@
+"""Pallas TPU kernel: blocked causal GQA flash attention (+ sliding window)."""

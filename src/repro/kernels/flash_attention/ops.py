@@ -1,0 +1,32 @@
+"""Jit'd public wrapper for the flash_attention Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+
+__all__ = ["flash_attention"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
+        raise ValueError("q/k/v must be (B, S, H|Hk, head_dim)")
+    if q.shape[2] % k.shape[2]:
+        raise ValueError(f"q heads {q.shape[2]} not a multiple of kv heads {k.shape[2]}")
+    return flash_attention_kernel(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_interpret(),
+    )

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash_attention kernel: exact causal GQA
+softmax attention with optional sliding window."""
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, S, Hk, hd)
+    v: jax.Array,
+    window: int | None = None,
+) -> jax.Array:
+    b, s, h, hd = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, s, hk, g, hd).astype(jnp.float32) * hd**-0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    pos = jnp.arange(s)
+    mask = pos[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= pos[None, :] > pos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)

@@ -1,0 +1,1 @@
+"""Pallas TPU kernel: tiled pairwise squared-L2 distances (profile kernel)."""

@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for the pairwise_l2 Pallas kernel.
+
+On CPU (this container) the kernel body executes under ``interpret=True``;
+on TPU it compiles to Mosaic.  ``repro.core.similarity`` routes through here
+when ``use_kernel=True``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.pairwise_l2.pairwise_l2 import pairwise_sq_dists_kernel
+
+__all__ = ["pairwise_sq_dists"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pairwise_sq_dists(f: jax.Array, block_m: int = 128, block_n: int = 128,
+                      block_k: int = 512) -> jax.Array:
+    if f.ndim != 2:
+        raise ValueError(f"profiles must be (C, Q), got {f.shape}")
+    return pairwise_sq_dists_kernel(
+        f, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=_interpret(),
+    )

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the pairwise_l2 kernel."""
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pairwise_sq_dists_ref"]
+
+
+def pairwise_sq_dists_ref(f: jax.Array) -> jax.Array:
+    """Naive O(C²·Q) differences — the exact reference (fp32)."""
+    f = f.astype(jnp.float32)
+    diff = f[:, None, :] - f[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)

@@ -1,0 +1,1 @@
+"""Pallas TPU kernel: RWKV6 (Finch) WKV recurrence with data-dependent decay."""

@@ -1,0 +1,24 @@
+"""Jit'd public wrapper for the rwkv6_scan Pallas kernel.
+
+``repro.models.rwkv6.apply_rwkv_tmix(use_kernel=True)`` routes through here.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv6_scan.rwkv6_scan import wkv6_kernel
+
+__all__ = ["wkv6"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def wkv6(r, k, v, w, u, s0, block_t: int = 128):
+    if r.ndim != 4:
+        raise ValueError("r/k/v/w must be (B, T, H, head_dim)")
+    if s0.shape != (r.shape[0], r.shape[2], r.shape[3], r.shape[3]):
+        raise ValueError(f"bad state shape {s0.shape}")
+    return wkv6_kernel(r, k, v, w, u, s0, block_t=block_t, interpret=_interpret())

@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the rwkv6_scan kernel (the model's sequential scan)."""
+
+from repro.models.rwkv6 import wkv6_scan_ref
+
+__all__ = ["wkv6_scan_ref"]

@@ -1,0 +1,488 @@
+"""Multi-pod dry-run: prove every (arch × input shape × mesh) lowers,
+compiles, fits, and report its roofline inputs — without real hardware.
+
+    python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+    python -m repro.launch.dryrun --sweep --out results/dryrun.jsonl
+    python -m repro.launch.dryrun --arch mixtral-8x7b --shape decode_32k --multi-pod
+
+The first two lines below force 512 host platform devices; this module must
+therefore never be imported by tests/benches directly (they spawn it as a
+subprocess) — smoke tests must see 1 device.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro import optim as optim_lib  # noqa: E402
+from repro.analysis import hlo as hlo_lib  # noqa: E402
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_arch  # noqa: E402
+from repro.configs.registry import ArchSpec  # noqa: E402
+from repro.fl import rounds as rounds_lib  # noqa: E402
+from repro.launch import sharding as sh  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+
+SHAPE_NAMES = list(INPUT_SHAPES)
+
+
+# ------------------------------------------------------------------ helpers
+
+
+def _sds(tree_specs, tree_shapes, mesh):
+    """Zip a PartitionSpec tree onto a ShapeDtypeStruct tree."""
+
+    def mk(sdt, spec):
+        return jax.ShapeDtypeStruct(
+            sdt.shape, sdt.dtype, sharding=NamedSharding(mesh, spec)
+        )
+
+    return jax.tree_util.tree_map(
+        mk, tree_shapes, tree_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _prepend_axis(spec_tree, axis):
+    return jax.tree_util.tree_map(
+        lambda s: P(axis, *s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def _replicated_like(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=NamedSharding(mesh, P())),
+        tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else "data"
+
+
+@dataclasses.dataclass
+class DryRunCase:
+    arch: str
+    shape: str
+    multi_pod: bool
+    reduced: bool = False
+    accounting: bool = False  # unroll scans so static HLO counts are exact
+
+    @property
+    def mesh_name(self) -> str:
+        return "2x16x16" if self.multi_pod else "16x16"
+
+
+def _case_config(case: DryRunCase) -> Tuple[ArchSpec, "ModelConfig", Dict]:
+    spec = get_arch(case.arch)
+    ishape = INPUT_SHAPES[case.shape]
+    cfg = spec.long_context_model() if case.shape == "long_500k" else spec.model
+    dims = dict(seq=ishape.seq_len, batch=ishape.global_batch, kind=ishape.kind)
+    if case.reduced:
+        cfg = cfg.reduced(param_dtype="bfloat16", dtype="bfloat16")
+        # batch>1 shapes must stay divisible by the data axis (32 multi-pod)
+        min_b = (32 if case.multi_pod else 16) if ishape.global_batch > 1 else 1
+        dims.update(
+            seq=min(dims["seq"], 128),
+            batch=max(min(dims["batch"], 8), min_b) if ishape.global_batch > 1 else 1,
+        )
+        # reduced head/state dims no longer divide the 16-way model axis
+        relax = dict(rwkv_heads=None)
+        spec = dataclasses.replace(
+            spec,
+            serve_rules=dict(spec.serve_rules, **relax),
+            train_rules=dict(spec.train_rules, **relax),
+        )
+    return spec, cfg, dims
+
+
+# ------------------------------------------------------------ step builders
+
+
+def _make_loss(cfg, uses_embeds: bool):
+    if uses_embeds:
+        return lambda p, batch: T.lm_loss(
+            cfg, p, embeds=batch["embeds"], targets=batch["targets"]
+        )
+    return lambda p, batch: T.lm_loss(cfg, p, batch["tokens"])
+
+
+def _uses_embeds(cfg) -> bool:
+    return cfg.arch_type == "vlm"
+
+
+def _train_case(spec, cfg, dims, mesh, multi_pod, steps_unroll=1):
+    """Build (step_fn, example_args_sds) for the training shape."""
+    rules = spec.train_rules
+    b, s = dims["batch"], dims["seq"]
+    uses_embeds = _uses_embeds(cfg)
+    loss_fn = _make_loss(cfg, uses_embeds)
+
+    params_shapes = jax.eval_shape(lambda k: T.init_params(k, cfg), jax.random.key(0))
+    pspecs = sh.specs_from_logical(sh.param_logical_specs(cfg), rules, multi_pod)
+    params_sds = _sds(pspecs, params_shapes, mesh)
+    batch_ax = _batch_axes(multi_pod)
+
+    if spec.fl.mode == "client_parallel":
+        n_clients = 32 if multi_pod else 16
+        local_b = max(1, b // n_clients)
+        steps = spec.fl.local_steps
+        # per-client params lay out over the data axis on top of the
+        # serve-style model sharding
+        serve_pspecs = sh.specs_from_logical(
+            sh.param_logical_specs(cfg), spec.serve_rules, multi_pod
+        )
+        client_specs = _prepend_axis(serve_pspecs, batch_ax)
+
+        def constraint(tree):
+            return jax.tree_util.tree_map(
+                lambda x, sp: jax.lax.with_sharding_constraint(x, sp),
+                tree, client_specs,
+                is_leaf=lambda x: isinstance(x, jax.Array),
+            )
+
+        micro = max(1, min(spec.fl.micro_batches, local_b))
+        while local_b % micro:
+            micro -= 1
+        if steps_unroll is True:
+            micro = 1  # accounting: keep all flops outside rolled loops
+        step = rounds_lib.build_client_parallel_round(
+            loss_fn, spec.fl.lr, steps, client_constraint=constraint,
+            unroll=steps_unroll, micro_batches=micro,
+        )
+        if uses_embeds:
+            batch_shapes = {
+                "embeds": jax.ShapeDtypeStruct(
+                    (n_clients, steps, local_b, s, cfg.d_model), jnp.bfloat16
+                ),
+                "targets": jax.ShapeDtypeStruct((n_clients, steps, local_b, s), jnp.int32),
+            }
+            batch_specs = {
+                "embeds": P(batch_ax, None, None, None, None),
+                "targets": P(batch_ax, None, None, None),
+            }
+        else:
+            batch_shapes = {
+                "tokens": jax.ShapeDtypeStruct((n_clients, steps, local_b, s), jnp.int32)
+            }
+            batch_specs = {"tokens": P(batch_ax, None, None, None)}
+        batch_sds = _sds(batch_specs, batch_shapes, mesh)
+        w_sds = jax.ShapeDtypeStruct(
+            (n_clients,), jnp.float32, sharding=NamedSharding(mesh, P(batch_ax))
+        )
+        return step, (params_sds, batch_sds, w_sds)
+
+    # Mode B: fedsgd_fsdp
+    opt = getattr(optim_lib, spec.optimizer)(spec.fl.lr)
+    micro = max(1, min(spec.fl.micro_batches, b))
+    while b % micro:
+        micro -= 1
+    if steps_unroll is True:
+        micro = 1  # accounting: keep all flops outside rolled loops
+    step = rounds_lib.build_fedsgd_step(loss_fn, opt, micro_batches=micro)
+    opt_shapes = jax.eval_shape(opt.init, params_shapes)
+    opt_specs = sh.optimizer_state_specs(spec.optimizer, pspecs)
+    opt_sds = _sds(opt_specs, opt_shapes, mesh)
+    if uses_embeds:
+        batch_shapes = {
+            "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+            "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        batch_specs = {"embeds": P(batch_ax, None, None), "targets": P(batch_ax, None)}
+    else:
+        batch_shapes = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        batch_specs = {"tokens": P(batch_ax, None)}
+    batch_sds = _sds(batch_specs, batch_shapes, mesh)
+    return step, (params_sds, opt_sds, batch_sds)
+
+
+def _serve_case(spec, cfg, dims, mesh, multi_pod, prefill: bool):
+    """(step_fn, args_sds) for prefill / decode shapes."""
+    rules = spec.serve_rules
+    b, s = dims["batch"], dims["seq"]
+    uses_embeds = _uses_embeds(cfg)
+    batch_ax = _batch_axes(multi_pod) if b > 1 else None
+
+    params_shapes = jax.eval_shape(lambda k: T.init_params(k, cfg), jax.random.key(0))
+    pspecs = sh.specs_from_logical(sh.param_logical_specs(cfg), rules, multi_pod)
+    params_sds = _sds(pspecs, params_shapes, mesh)
+
+    cache_shapes = jax.eval_shape(lambda: T.init_caches(cfg, b, s))
+    crules = dict(rules)
+    if batch_ax is None:
+        crules["act_batch"] = None
+    cspecs = sh.specs_from_logical(sh.cache_logical_specs(cfg), crules, multi_pod)
+    caches_sds = _sds(cspecs, cache_shapes, mesh)
+
+    if prefill:
+        def step(params, batch, caches):
+            tokens = batch.get("tokens")
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            if cfg.pos_style == "mrope":
+                positions = jnp.broadcast_to(positions[None], (3, b, s))
+            hidden, new_caches, _ = T.forward(
+                cfg, params, tokens, positions, caches, embeds=batch.get("embeds")
+            )
+            logits = T.logits_from_hidden(cfg, params, hidden[:, -1:])
+            return logits, new_caches
+
+        if uses_embeds:
+            batch_shapes = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)}
+            batch_specs = {"embeds": P(batch_ax, None, None)}
+        else:
+            batch_shapes = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+            batch_specs = {"tokens": P(batch_ax, None)}
+        batch_sds = _sds(batch_specs, batch_shapes, mesh)
+        return step, (params_sds, batch_sds, caches_sds)
+
+    def step(params, tokens, caches):
+        return T.decode_step(cfg, params, tokens, caches)
+
+    tok_sds = jax.ShapeDtypeStruct(
+        (b, 1), jnp.int32, sharding=NamedSharding(mesh, P(batch_ax, None))
+    )
+    return step, (params_sds, tok_sds, caches_sds)
+
+
+# ------------------------------------------------------------------ runner
+
+
+def _compile_once(spec, cfg, dims, mesh, multi_pod, steps_unroll=1):
+    """Lower+compile one variant; return compiled.
+
+    Buffers are donated the way the production loop would donate them
+    (params/opt-state in, updated params/opt-state out; caches in, updated
+    caches out) so memory_analysis reflects steady-state aliasing.
+    """
+    if dims["kind"] == "train":
+        step, args = _train_case(spec, cfg, dims, mesh, multi_pod,
+                                 steps_unroll=steps_unroll)
+        rules = spec.train_rules
+        if spec.fl.mode == "client_parallel":
+            # the client axis owns 'data'; activation constraints inside the
+            # per-client vmap must NOT re-claim it for the local batch dim —
+            # doing so forced spurious regathers (§Perf: 5.2x collective
+            # reduction on rwkv6 train from this alone).
+            rules = dict(rules, act_batch=None)
+        donate = (0,) if spec.fl.mode == "client_parallel" else (0, 1)
+    else:
+        step, args = _serve_case(
+            spec, cfg, dims, mesh, multi_pod, prefill=dims["kind"] == "prefill"
+        )
+        rules = spec.serve_rules
+        donate = (2,)  # caches
+    with jax.set_mesh(mesh), sh.use_rules(rules, multi_pod):
+        compiled = jax.jit(step, donate_argnums=donate).lower(*args).compile()
+    return compiled
+
+
+def _counts(compiled) -> Dict:
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    text = compiled.as_text()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collectives": hlo_lib.collective_bytes(text),
+        "text": text,
+    }
+
+
+def _accounting_counts(spec, cfg, dims, mesh, multi_pod) -> Dict:
+    """Two-point unroll delta: XLA cost analysis counts while bodies once, so
+    with the local-step and loss scans fully unrolled and the layer scan at
+    unroll u ∈ {1, 2}:  reported(u) = C + u·B  ⇒  exact = reported(1) +
+    (R − 1)·(reported(2) − reported(1)), R = layer-scan trip count.
+    The rwkv time scan stays rolled (its flops are added analytically in
+    analysis.roofline)."""
+    import dataclasses as dc
+
+    loss_chunk = max(512, dims["seq"] // 4)
+    cfg1 = dc.replace(cfg, scan_unroll=1, loss_unroll=True, loss_chunk=loss_chunk)
+    cfg2 = dc.replace(cfg, scan_unroll=2, loss_unroll=True, loss_chunk=loss_chunk)
+    reps = cfg.num_layers // len(cfg.block_pattern)
+    c1 = _counts(_compile_once(spec, cfg1, dims, mesh, multi_pod, steps_unroll=True))
+    c2 = _counts(_compile_once(spec, cfg2, dims, mesh, multi_pod, steps_unroll=True))
+
+    def corr(a, b):
+        return a + (reps - 1) * (b - a)
+
+    coll = {}
+    keys = set(c1["collectives"]) | set(c2["collectives"])
+    for k in keys:
+        coll[k] = max(0.0, corr(c1["collectives"].get(k, 0.0), c2["collectives"].get(k, 0.0)))
+    return {
+        "flops": corr(c1["flops"], c2["flops"]),
+        "bytes": corr(c1["bytes"], c2["bytes"]),
+        "collectives": coll,
+        "layer_reps": reps,
+        "raw": {
+            "u1": {k: c1[k] for k in ("flops", "bytes")},
+            "u2": {k: c2[k] for k in ("flops", "bytes")},
+        },
+    }
+
+
+def run_case(case: DryRunCase, dump_hlo: Optional[str] = None,
+             mesh_override=None) -> Dict:
+    t0 = time.time()
+    spec, cfg, dims = _case_config(case)
+    mesh = mesh_override or make_production_mesh(multi_pod=case.multi_pod)
+    rec: Dict = {
+        "arch": case.arch,
+        "shape": case.shape,
+        "mesh": case.mesh_name if mesh_override is None else "x".join(
+            str(s) for s in mesh.devices.shape
+        ),
+        "kind": dims["kind"],
+        "fl_mode": spec.fl.mode if dims["kind"] == "train" else "serve",
+        "reduced": case.reduced,
+        "accounting": case.accounting,
+    }
+    try:
+        if case.accounting:
+            acc = _accounting_counts(spec, cfg, dims, mesh, case.multi_pod)
+            rec["cost"] = {"flops": acc["flops"], "bytes accessed": acc["bytes"]}
+            rec["collectives"] = acc["collectives"]
+            rec["layer_reps"] = acc["layer_reps"]
+            rec["raw"] = acc["raw"]
+            rec["ok"] = True
+            rec["total_s"] = round(time.time() - t0, 2)
+            return rec
+
+        compiled = _compile_once(spec, cfg, dims, mesh, case.multi_pod)
+        rec["compile_s"] = round(time.time() - t0, 2)
+        rec["params"] = int(
+            sum(
+                x.size
+                for x in jax.tree_util.tree_leaves(
+                    jax.eval_shape(lambda k: T.init_params(k, cfg), jax.random.key(0))
+                )
+            )
+        )
+
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            }
+        except Exception as e:  # pragma: no cover - backend dependent
+            rec["memory"] = {"error": str(e)}
+
+        try:
+            cost = compiled.cost_analysis()
+            cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+            rec["cost"] = {
+                k: float(v)
+                for k, v in cost.items()
+                if k in ("flops", "bytes accessed", "utilization operand 0")
+                or k.startswith("bytes accessed")
+            }
+        except Exception as e:  # pragma: no cover
+            rec["cost"] = {"error": str(e)}
+
+        text = compiled.as_text()
+        rec["collectives"] = hlo_lib.collective_bytes(text)
+        rec["hlo_ops"] = hlo_lib.op_histogram(text)
+        if dump_hlo:
+            os.makedirs(os.path.dirname(dump_hlo) or ".", exist_ok=True)
+            with open(dump_hlo, "w") as f:
+                f.write(text)
+        rec["ok"] = True
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=SHAPE_NAMES)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run single-pod AND multi-pod for each case")
+    ap.add_argument("--sweep", action="store_true", help="all arch x shapes")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced configs + tiny shapes (CI smoke)")
+    ap.add_argument("--accounting", action="store_true",
+                    help="unroll scans for exact static HLO counts (§Roofline)")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--dump-hlo", default=None)
+    args = ap.parse_args()
+
+    if args.sweep:
+        cases = [
+            DryRunCase(a, s, mp, reduced=args.reduced, accounting=args.accounting)
+            for a in ARCH_NAMES
+            for s in SHAPE_NAMES
+            for mp in ((False, True) if args.both_meshes else (args.multi_pod,))
+        ]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --sweep required"
+        meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+        cases = [
+            DryRunCase(args.arch, args.shape, mp, reduced=args.reduced,
+                       accounting=args.accounting)
+            for mp in meshes
+        ]
+
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("ok"):
+                        done.add((r["arch"], r["shape"], r["mesh"], r.get("reduced", False)))
+                except json.JSONDecodeError:
+                    pass
+
+    for case in cases:
+        key = (case.arch, case.shape, case.mesh_name, case.reduced)
+        if key in done:
+            print(f"[skip] {key} (cached)")
+            continue
+        rec = run_case(case, dump_hlo=args.dump_hlo)
+        status = "OK " if rec["ok"] else "FAIL"
+        print(
+            f"[{status}] {case.arch:28s} {case.shape:12s} {case.mesh_name:8s} "
+            f"{rec['total_s']:7.1f}s"
+            + ("" if rec["ok"] else f"  {rec['error'][:120]}")
+        )
+        if not rec["ok"]:
+            print(rec.get("traceback", "")[-800:])
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh definitions (TPU v5e target).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the 512-device host platform is
+forced only inside ``launch/dryrun.py``.
+
+Single pod: 16×16 = 256 chips, axes (data, model).
+Multi pod:  2×16×16 = 512 chips, axes (pod, data, model) — the ``pod`` axis
+carries the data-parallel/client dimension across pods (DCN-ish boundary).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+class HW:
+    """TPU v5e hardware constants used by the roofline analysis."""
+
+    PEAK_FLOPS_BF16 = 197e12  # per chip
+    HBM_BW = 819e9  # bytes/s per chip
+    ICI_BW = 50e9  # bytes/s per link
+    HBM_BYTES = 16 * 2**30  # per chip

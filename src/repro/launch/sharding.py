@@ -1,0 +1,268 @@
+"""Logical-axis sharding: parameter/cache PartitionSpec trees + activation
+constraints (MaxText-style logical axis rules).
+
+* ``param_logical_specs(cfg)`` mirrors ``transformer.init_params`` with an
+  :class:`Ax` leaf (tuple of *logical* axis names) per tensor;
+* ``rules`` (per arch × mode, see ``repro.configs``) map each logical name to
+  a mesh axis (``'data'``, ``'model'``) or ``None`` (replicate); under the
+  multi-pod mesh every ``'data'`` entry widens to ``('pod', 'data')``
+  (:func:`resolve_axis`);
+* activation constraints are installed with :func:`use_rules` (a context
+  manager); model code calls :func:`constrain`, which is a no-op outside a
+  rules context — single-device smoke tests never see sharding machinery.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+__all__ = [
+    "Ax",
+    "ax",
+    "use_rules",
+    "constrain",
+    "resolve_axis",
+    "param_logical_specs",
+    "cache_logical_specs",
+    "specs_from_logical",
+    "optimizer_state_specs",
+]
+
+
+class Ax(tuple):
+    """Marker leaf: the logical axis names of one tensor's dims."""
+
+
+def ax(*names: Optional[str]) -> Ax:
+    return Ax(names)
+
+
+def _is_ax(x) -> bool:
+    return isinstance(x, Ax)
+
+
+_ACTIVE_RULES: contextvars.ContextVar[Optional[Dict]] = contextvars.ContextVar(
+    "repro_sharding_rules", default=None
+)
+
+
+def resolve_axis(axis, multi_pod: bool):
+    """'data' widens to ('pod', 'data') on the multi-pod mesh."""
+    if axis == "data" and multi_pod:
+        return ("pod", "data")
+    return axis
+
+
+def _resolve_rules(rules: Dict, multi_pod: bool) -> Dict:
+    return {k: resolve_axis(v, multi_pod) for k, v in rules.items()}
+
+
+@contextlib.contextmanager
+def use_rules(rules: Dict, multi_pod: bool = False):
+    """Install activation-constraint rules for model code running under jit."""
+    token = _ACTIVE_RULES.set(_resolve_rules(rules, multi_pod))
+    try:
+        yield
+    finally:
+        _ACTIVE_RULES.reset(token)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    rules = _ACTIVE_RULES.get()
+    if rules is None:
+        return x
+    spec = P(*(rules.get(l) if l else None for l in logical))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------- param specs
+
+
+def _attn_specs() -> Dict:
+    return {
+        "wq": {"w": ax("attn_in_w", "heads_w")},
+        "wk": {"w": ax("attn_in_w", "kv_w")},
+        "wv": {"w": ax("attn_in_w", "kv_w")},
+        "wo": {"w": ax("heads_w", "attn_out_w")},
+    }
+
+
+def _mlp_specs(cfg: ModelConfig) -> Dict:
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        return {
+            "wi": {"w": ax("embed_w", "mlp_w")},
+            "wg": {"w": ax("embed_w", "mlp_w")},
+            "wo": {"w": ax("mlp_w", "embed_w")},
+        }
+    return {"wi": {"w": ax("embed_w", "mlp_w")}, "wo": {"w": ax("mlp_w", "embed_w")}}
+
+
+def _moe_specs(cfg: ModelConfig) -> Dict:
+    s = {
+        "router": {"w": ax("embed_w", None)},
+        "wi": ax("experts_w", "expert_embed_w", "expert_mlp_w"),
+        "wg": ax("experts_w", "expert_embed_w", "expert_mlp_w"),
+        "wo": ax("experts_w", "expert_mlp_w", "expert_embed_w"),
+    }
+    if cfg.shared_expert:
+        s["shared"] = _mlp_specs(cfg)
+    return s
+
+
+def _rglru_specs() -> Dict:
+    return {
+        "w_in": {"w": ax("embed_w", "rnn_w")},
+        "w_gate": {"w": ax("embed_w", "rnn_w")},
+        "w_out": {"w": ax("rnn_w", "embed_w")},
+        "conv_w": ax(None, "rnn_w"),
+        "conv_b": ax("rnn_w"),
+        "w_r": {"w": ax(None, "rnn_w")},
+        "b_r": ax("rnn_w"),
+        "w_i": {"w": ax(None, "rnn_w")},
+        "b_i": ax("rnn_w"),
+        "lam": ax("rnn_w"),
+    }
+
+
+def _rwkv_tmix_specs() -> Dict:
+    vec = ax("embed_w_vec")
+    return {
+        "mu_x": vec, "mu_w": vec, "mu_k": vec, "mu_v": vec, "mu_r": vec, "mu_g": vec,
+        # decay path / per-head norm live in the attention (H·hd) dim, not the
+        # residual stream — "att_vec_w" lets variants co-shard them with att_w
+        # so the wkv inputs keep one consistent head sharding (see §Perf).
+        "w0": ax("att_vec_w"),
+        "a_w": ax("embed_w", None),
+        "b_w": ax(None, "att_vec_w"),
+        "u": ax(None, None),
+        "wr": {"w": ax("embed_w", "att_w")},
+        "wk": {"w": ax("embed_w", "att_w")},
+        "wv": {"w": ax("embed_w", "att_w")},
+        "wg": {"w": ax("embed_w", "att_w")},
+        "wo": {"w": ax("att_w", "embed_w")},
+        "ln_scale": ax("att_vec_w"),
+    }
+
+
+def _rwkv_cmix_specs() -> Dict:
+    return {
+        "mu_k": ax("embed_w_vec"),
+        "mu_r": ax("embed_w_vec"),
+        "wk": {"w": ax("embed_w", "mlp_w")},
+        "wv": {"w": ax("mlp_w", "embed_w")},
+        "wr": {"w": ax("embed_w", "att_w")},
+    }
+
+
+def _norm_specs(cfg: ModelConfig) -> Dict:
+    s = {"scale": ax("embed_w_vec")}
+    if cfg.norm_type == "layernorm":
+        s["bias"] = ax("embed_w_vec")
+    return s
+
+
+def _block_specs(cfg: ModelConfig, btype: str) -> Dict:
+    mixer, ffn = btype.split("+")
+    out = {"norm1": _norm_specs(cfg), "norm2": _norm_specs(cfg)}
+    out["mixer"] = (
+        _attn_specs()
+        if mixer in ("attn", "swa", "local")
+        else _rglru_specs() if mixer == "rglru" else _rwkv_tmix_specs()
+    )
+    out["ffn"] = (
+        _mlp_specs(cfg)
+        if ffn == "mlp"
+        else _moe_specs(cfg) if ffn == "moe" else _rwkv_cmix_specs()
+    )
+    return out
+
+
+def _prepend(tree, axis):
+    return jax.tree_util.tree_map(lambda t: Ax((axis,) + tuple(t)), tree, is_leaf=_is_ax)
+
+
+def param_logical_specs(cfg: ModelConfig) -> Dict:
+    pattern = cfg.block_pattern
+    reps, rem = divmod(cfg.num_layers, len(pattern))
+    specs: Dict = {
+        "embed": {"w": ax("vocab_w", "embed_w")},
+        "final_norm": _norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = {"w": ax("embed_w", "vocab_w")}
+    specs["unit"] = tuple(_prepend(_block_specs(cfg, b), None) for b in pattern)
+    specs["rem"] = tuple(_block_specs(cfg, pattern[j]) for j in range(rem))
+    return specs
+
+
+def cache_logical_specs(cfg: ModelConfig) -> Dict:
+    def block_cache(btype: str, stacked: bool):
+        mixer, _ = btype.split("+")
+        if mixer in ("attn", "swa", "local"):
+            c = {
+                "k": ax("act_batch", "cache_seq", None, None),
+                "v": ax("act_batch", "cache_seq", None, None),
+                "pos": ax(),
+            }
+        elif mixer == "rglru":
+            c = {
+                "conv": ax("act_batch", None, "rnn_w"),
+                "h": ax("act_batch", "rnn_w"),
+                "pos": ax(),
+            }
+        else:  # rwkv (tmix + cmix states)
+            c = {
+                "tm_x": ax("act_batch", "embed_act"),
+                "wkv": ax("act_batch", "rwkv_heads", None, None),
+                "cm_x": ax("act_batch", "embed_act"),
+                "pos": ax(),
+            }
+        if stacked:
+            c = _prepend(c, None)
+        return c
+
+    pattern = cfg.block_pattern
+    reps, rem = divmod(cfg.num_layers, len(pattern))
+    return {
+        "unit": tuple(block_cache(b, True) for b in pattern),
+        "rem": tuple(block_cache(pattern[j], False) for j in range(rem)),
+    }
+
+
+def specs_from_logical(logical_tree, rules: Dict, multi_pod: bool = False):
+    """Logical Ax leaves -> PartitionSpec tree under the given rules."""
+    rr = _resolve_rules(rules, multi_pod)
+
+    def to_spec(t: Ax):
+        return P(*(rr.get(l) if l else None for l in t))
+
+    return jax.tree_util.tree_map(to_spec, logical_tree, is_leaf=_is_ax)
+
+
+def optimizer_state_specs(opt_name: str, param_specs):
+    """PartitionSpec tree for optimizer state, derived from param specs."""
+    from repro.optim.optimizers import _AdafactorState, _AdamState
+
+    is_p = lambda s: isinstance(s, P)
+    if opt_name == "sgd":
+        return ()
+    if opt_name in ("adam", "adamw"):
+        return _AdamState(P(), param_specs, param_specs)
+    if opt_name == "adafactor":
+        vr = jax.tree_util.tree_map(
+            lambda s: P(*s[:-1]) if len(s) >= 2 else s, param_specs, is_leaf=is_p
+        )
+        vc = jax.tree_util.tree_map(
+            lambda s: P(*(tuple(s[:-2]) + (s[-1],))) if len(s) >= 2 else P(),
+            param_specs,
+            is_leaf=is_p,
+        )
+        return _AdafactorState(P(), vr, vc)
+    raise ValueError(opt_name)

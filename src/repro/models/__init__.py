@@ -1,0 +1,1 @@
+"""Model substrate: the paper's CNN + a composable decoder-LM stack."""

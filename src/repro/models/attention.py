@@ -1,0 +1,185 @@
+"""GQA attention (full + sliding-window) with KV-cache decode.
+
+Conventions:
+* activations: (B, S, D); q/k/v: (B, S, H|Hk, head_dim);
+* KV cache: {"k","v": (B, cache_len, Hk, hd), "pos": ()} — for SWA blocks the
+  cache is a ring buffer of ``window`` slots (slot = pos % window), so a
+  524k-token decode only ever holds ``window`` KV entries (the long_500k
+  story for dense archs, DESIGN.md §3);
+* GQA grouping: q heads are folded to (Hk, G) so k/v are used ungrouped — no
+  repeat_kv materialisation.
+
+``use_flash`` routes the no-cache causal path through the Pallas
+flash-attention kernel (TPU target; interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import constrain
+from repro.models import layers as L
+
+__all__ = ["init_attention", "init_cache", "apply_attention"]
+
+NEG_INF = -2.0e38
+
+
+def init_attention(key, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.init_dense(ks[0], cfg.d_model, cfg.q_dim, dtype),
+        "wk": L.init_dense(ks[1], cfg.d_model, cfg.kv_dim, dtype),
+        "wv": L.init_dense(ks[2], cfg.d_model, cfg.kv_dim, dtype),
+        "wo": L.init_dense(ks[3], cfg.q_dim, cfg.d_model, dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, window: Optional[int]) -> Dict:
+    """Preallocated KV cache; ring buffer of ``window`` slots for SWA."""
+    slots = min(cache_len, window) if window else cache_len
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((batch, slots, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, slots, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _positions_rope(cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    if cfg.pos_style == "mrope":
+        return L.apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    if cfg.pos_style == "rope":
+        if positions.ndim == 3:  # M-RoPE-style stream given to a RoPE model
+            positions = positions[0]
+        return L.apply_rope(x, positions, cfg.rope_theta)
+    return x  # sinusoidal/none handled at the embedding level
+
+
+def _attend(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, Hk, hd)
+    v: jax.Array,  # (B, Skv, Hk, hd)
+    q_pos: jax.Array,  # (B, Sq)
+    kv_pos: jax.Array,  # (B, Skv)
+    kv_valid: jax.Array,  # (B, Skv) bool
+    window: Optional[int],
+    chunk: Optional[int] = None,
+    unroll=1,
+) -> jax.Array:
+    """Exact masked GQA attention.
+
+    ``chunk=None`` materialises the full (B, Hk, G, Sq, Skv) score tensor —
+    fine for smoke tests, catastrophic at 32k+ sequence (S² fp32 temps blow
+    the 16 GB/chip budget; see EXPERIMENTS.md §Perf iteration 1).  With
+    ``chunk`` set, queries are processed in blocks via ``lax.scan`` so live
+    scores are (…, chunk, Skv) — the pure-jnp analogue of the Pallas flash
+    kernel (which remains the TPU fast path via ``use_flash``).
+    """
+    b, sq, h, hd = q.shape
+    hk = k.shape[2]
+    g = h // hk
+
+    def block(q_blk, qpos_blk):
+        # q_blk: (B, cq, H, hd); scores (B, Hk, G, cq, Skv) fp32
+        qg = q_blk.reshape(b, q_blk.shape[1], hk, g, hd)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+        scores = scores * (hd**-0.5)
+        mask = kv_pos[:, None, :] <= qpos_blk[:, :, None]
+        if window is not None:
+            mask &= kv_pos[:, None, :] > qpos_blk[:, :, None] - window
+        mask &= kv_valid[:, None, :]
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+        return out.reshape(b, q_blk.shape[1], h, hd)
+
+    if chunk is None or chunk >= sq:
+        return block(q, q_pos)
+
+    n, rem = divmod(sq, chunk)
+    qs = q[:, : n * chunk].reshape(b, n, chunk, h, hd).swapaxes(0, 1)
+    ps = q_pos[:, : n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+
+    def body(_, xs):
+        q_blk, p_blk = xs
+        return None, block(q_blk, p_blk)
+
+    _, outs = jax.lax.scan(body, None, (qs, ps), unroll=unroll)
+    out = outs.swapaxes(0, 1).reshape(b, n * chunk, h, hd)
+    if rem:
+        out = jnp.concatenate([out, block(q[:, n * chunk :], q_pos[:, n * chunk :])], axis=1)
+    return out
+
+
+def apply_attention(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[Dict] = None,
+    window: Optional[int] = None,
+    use_flash: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Attention block body.  ``cache=None`` → training (no cache returned);
+    with a cache: S == cache write length (prefill) or 1 (decode step)."""
+    b, s, _ = x.shape
+    q = L.dense(p["wq"], x).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = L.dense(p["wk"], x).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = L.dense(p["wv"], x).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+
+    if positions.ndim == 2:
+        q_pos = positions
+    else:  # mrope (3, B, S): causal masking follows the temporal stream
+        q_pos = positions[0]
+    q = _positions_rope(cfg, q, positions)
+    k = _positions_rope(cfg, k, positions)
+    # hillclimb-gated layouts (default no-op): batch-parallel attention for
+    # archs whose head counts can't shard the 16-way model axis (§Perf)
+    q = constrain(q, "act_attn_b", "act_seq", "act_attn_h", None)
+    k = constrain(k, "act_attn_b", "act_seq", "act_attn_kv", None)
+    v = constrain(v, "act_attn_b", "act_seq", "act_attn_kv", None)
+
+    if cache is None:
+        if use_flash and window is None:
+            from repro.kernels.flash_attention import ops as flash_ops
+
+            out = flash_ops.flash_attention(q, k, v, causal=True)
+        else:
+            valid = jnp.ones((b, s), bool)
+            out = _attend(q, k, v, q_pos, q_pos, valid, window,
+                          chunk=cfg.attention_chunk, unroll=cfg.loss_unroll)
+        new_cache = None
+    else:
+        slots = cache["k"].shape[1]
+        pos0 = cache["pos"]
+        if s == slots and window is None:
+            # prefill writing the whole cache
+            ck, cv = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+        else:
+            idx = (pos0 + jnp.arange(s)) % slots
+            ck = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
+        new_pos = pos0 + s
+        # absolute positions held in each slot (ring-aware)
+        slot_ids = jnp.arange(slots)
+        if window is None:
+            kv_pos = slot_ids[None, :].repeat(b, 0)
+            kv_valid = slot_ids[None, :] < new_pos
+        else:
+            # slot holds the latest absolute position congruent mod `slots`
+            last = new_pos - 1
+            kv_pos = last - ((last - slot_ids) % slots)
+            kv_pos = kv_pos[None, :].repeat(b, 0)
+            kv_valid = (kv_pos >= 0) & (kv_pos < new_pos)
+        out = _attend(q, ck, cv, q_pos, kv_pos, kv_valid, window,
+                      chunk=cfg.attention_chunk, unroll=cfg.loss_unroll)
+        new_cache = {"k": ck, "v": cv, "pos": new_pos}
+
+    y = L.dense(p["wo"], out.reshape(b, s, cfg.q_dim))
+    return y, new_cache

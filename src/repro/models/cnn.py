@@ -1,0 +1,137 @@
+"""The paper's CNN: two conv layers + two fully-connected layers (§4).
+
+Pure-JAX (init/apply pairs).  ``apply_with_features`` exposes the FC-1
+*pre-activation* outputs — exactly the ``h_q`` of Theorem 1 — for data
+profiling (eq. 11).  Four parameter-initialisation schemes are provided for
+the Fig. 4-6 robustness experiments: kaiming_{uniform,normal} and
+xavier_{uniform,normal}.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["init_cnn", "apply_cnn", "apply_with_features", "cnn_loss", "accuracy", "INIT_SCHEMES"]
+
+
+def _fan_in_out(shape):
+    if len(shape) == 4:  # HWIO conv kernel
+        rf = shape[0] * shape[1]
+        return shape[2] * rf, shape[3] * rf
+    return shape[0], shape[1]
+
+
+def _kaiming_uniform(key, shape, dtype=jnp.float32):
+    fan_in, _ = _fan_in_out(shape)
+    bound = jnp.sqrt(6.0 / fan_in)
+    return jax.random.uniform(key, shape, dtype, -bound, bound)
+
+
+def _kaiming_normal(key, shape, dtype=jnp.float32):
+    fan_in, _ = _fan_in_out(shape)
+    return jax.random.normal(key, shape, dtype) * jnp.sqrt(2.0 / fan_in)
+
+
+def _xavier_uniform(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = _fan_in_out(shape)
+    bound = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -bound, bound)
+
+
+def _xavier_normal(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = _fan_in_out(shape)
+    return jax.random.normal(key, shape, dtype) * jnp.sqrt(2.0 / (fan_in + fan_out))
+
+
+INIT_SCHEMES = {
+    "kaiming_uniform": _kaiming_uniform,
+    "kaiming_normal": _kaiming_normal,
+    "xavier_uniform": _xavier_uniform,
+    "xavier_normal": _xavier_normal,
+}
+
+
+def init_cnn(
+    key: jax.Array,
+    num_classes: int = 10,
+    in_hw: Tuple[int, int] = (28, 28),
+    channels: Tuple[int, int] = (16, 32),
+    fc1_dim: int = 128,
+    scheme: str = "kaiming_uniform",
+) -> Dict:
+    """Initialise the 2-conv/2-FC CNN; FC-1 width = Q = profile dimension."""
+    init = INIT_SCHEMES[scheme]
+    k = jax.random.split(key, 4)
+    h, w = in_hw
+    flat = (h // 4) * (w // 4) * channels[1]  # two 2x2 maxpools
+    return {
+        "conv1": {"w": init(k[0], (5, 5, 1, channels[0])), "b": jnp.zeros((channels[0],))},
+        "conv2": {"w": init(k[1], (5, 5, channels[0], channels[1])), "b": jnp.zeros((channels[1],))},
+        "fc1": {"w": init(k[2], (flat, fc1_dim)), "b": jnp.zeros((fc1_dim,))},
+        "fc2": {"w": init(k[3], (fc1_dim, num_classes)), "b": jnp.zeros((num_classes,))},
+    }
+
+
+def _conv(x, p):
+    y = lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def _maxpool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def apply_with_features(params: Dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Forward pass returning (logits, FC-1 pre-activations).
+
+    The FC-1 pre-activation is the Theorem-1 variable whose per-neuron mean
+    over the local dataset forms the client's data profile f_c (eq. 11).
+    """
+    h = jax.nn.relu(_conv(x, params["conv1"]))
+    h = _maxpool2(h)
+    h = jax.nn.relu(_conv(h, params["conv2"]))
+    h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    fc1_pre = h @ params["fc1"]["w"] + params["fc1"]["b"]
+    h = jax.nn.relu(fc1_pre)
+    logits = h @ params["fc2"]["w"] + params["fc2"]["b"]
+    return logits, fc1_pre
+
+
+def apply_cnn(params: Dict, x: jax.Array) -> jax.Array:
+    return apply_with_features(params, x)[0]
+
+
+def cnn_loss(params: Dict, x: jax.Array, y: jax.Array) -> jax.Array:
+    logits = apply_cnn(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("batch_size",))
+def accuracy(params: Dict, x: jax.Array, y: jax.Array, batch_size: int = 2048) -> jax.Array:
+    """Full-dataset accuracy via scan over fixed-size chunks (pads tail)."""
+    n = x.shape[0]
+    pad = (-n) % batch_size
+    xp = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    yp = jnp.pad(y, (0, pad), constant_values=-1)
+    xb = xp.reshape(-1, batch_size, *x.shape[1:])
+    yb = yp.reshape(-1, batch_size)
+
+    def body(acc, xy):
+        xc, yc = xy
+        pred = jnp.argmax(apply_cnn(params, xc), axis=-1)
+        return acc + jnp.sum((pred == yc) & (yc >= 0)), None
+
+    total, _ = lax.scan(body, jnp.zeros((), jnp.int32), (xb, yb))
+    return total / n

@@ -1,0 +1,155 @@
+"""Shared decoder-LM layers: norms, position encodings, MLP variants.
+
+Pure init/apply pairs over dict pytrees; everything is shape-polymorphic over
+a leading batch dim and takes the ``ModelConfig`` for variant switches.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "init_norm",
+    "apply_norm",
+    "rope_freqs",
+    "apply_rope",
+    "apply_mrope",
+    "sinusoidal_positions",
+    "init_mlp",
+    "apply_mlp",
+    "init_dense",
+    "dense",
+]
+
+
+def _init_dense_w(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    std = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype) -> Dict:
+    return {"w": _init_dense_w(key, (d_in, d_out), dtype)}
+
+
+def dense(p: Dict, x: jax.Array) -> jax.Array:
+    return x @ p["w"]
+
+
+# ----------------------------------------------------------------- norms
+
+
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None) -> Dict:
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.dtype(cfg.param_dtype))}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+# ----------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _rotate(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """Rotate pairs (half-split convention).  x: (..., head_dim); angles:
+    broadcastable (..., head_dim//2)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Standard RoPE.  x: (B, S, H, hd); positions: (B, S) int."""
+    inv = rope_freqs(x.shape[-1], theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, hd/2)
+    return _rotate(x, ang[:, :, None, :])
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float, sections: Tuple[int, int, int]
+) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL §2.1): the hd/2 frequency slots are split
+    into (t, h, w) sections, each rotated by its own position stream.
+
+    x: (B, S, H, hd); positions: (3, B, S) int — temporal, height, width.
+    For pure text all three streams are equal and M-RoPE == RoPE.
+    """
+    d2 = x.shape[-1] // 2
+    assert sum(sections) == d2, (sections, d2)
+    inv = rope_freqs(x.shape[-1], theta)  # (hd/2,)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections), total_repeat_length=d2)
+    pos_per_slot = jnp.take(positions.astype(jnp.float32), sec_id, axis=0)  # (d2,B,S)
+    ang = jnp.moveaxis(pos_per_slot, 0, -1) * inv  # (B, S, d2)
+    return _rotate(x, ang[:, :, None, :])
+
+
+def sinusoidal_positions(positions: jax.Array, d_model: int) -> jax.Array:
+    """Sinusoidal absolute embeddings (musicgen-style). positions: (B, S)."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------- MLPs
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        return {
+            "wi": init_dense(ks[0], cfg.d_model, ff, dtype),
+            "wg": init_dense(ks[1], cfg.d_model, ff, dtype),
+            "wo": init_dense(ks[2], ff, cfg.d_model, dtype),
+        }
+    return {
+        "wi": init_dense(ks[0], cfg.d_model, ff, dtype),
+        "wo": init_dense(ks[2], ff, cfg.d_model, dtype),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp_variant == "swiglu":
+        h = jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x)
+    elif cfg.mlp_variant == "geglu":
+        h = jax.nn.gelu(dense(p["wg"], x), approximate=True) * dense(p["wi"], x)
+    else:
+        h = jax.nn.gelu(dense(p["wi"], x), approximate=True)
+    return dense(p["wo"], h)

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts MLP with sort-based capacity dispatch.
+
+Static-shape, SPMD-friendly top-k routing (Switch/MaxText style):
+
+1. router logits -> top-k experts per token (softmax combine for mixtral,
+   sigmoid scaling for llama4-style top-1 + optional shared expert);
+2. routed (token, expert) pairs are *sorted by expert id* and packed into a
+   fixed ``(num_experts, capacity)`` slot grid — tokens past an expert's
+   capacity are dropped (capacity_factor controls slack, the standard
+   trade-off — no dynamic shapes anywhere);
+3. per-expert matmuls run as one stacked einsum over the expert dim, so the
+   expert dimension (and/or d_ff) can shard over mesh axes — XLA inserts the
+   all-to-alls for expert parallelism (inspected in §Roofline);
+4. outputs scatter back with the combine weights; aux load-balance loss
+   (Switch eq. 4) encourages uniform routing.
+
+FLOPs scale with *active* parameters (E·C ≈ T·k·cf), which is what the
+MODEL_FLOPS/HLO_FLOPs roofline ratio checks for the MoE archs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+__all__ = ["init_moe", "apply_moe"]
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    std = d**-0.5
+
+    def ew(k, shape):
+        return (jax.random.normal(k, shape) * std).astype(dtype)
+
+    p = {
+        "router": L.init_dense(ks[0], d, e, jnp.float32),  # router math in fp32
+        "wi": ew(ks[1], (e, d, f)),
+        "wg": ew(ks[2], (e, d, f)),
+        "wo": ew(ks[3], (e, f, d)) * (f**-0.5) / std,
+    }
+    if cfg.shared_expert:
+        p["shared"] = L.init_mlp(ks[4], cfg)
+    return p
+
+
+def _route(cfg: ModelConfig, logits: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (expert_idx (T,k), combine_w (T,k), aux_loss ())."""
+    t, e = logits.shape
+    k = cfg.experts_per_token
+    if cfg.router_type == "sigmoid":  # llama4: top-k then sigmoid gate
+        gate_val, idx = jax.lax.top_k(logits, k)
+        combine = jax.nn.sigmoid(gate_val)
+        probs = jax.nn.softmax(logits, axis=-1)  # aux loss still uses softmax
+    else:  # mixtral: softmax over the top-k logits
+        gate_val, idx = jax.lax.top_k(logits, k)
+        combine = jax.nn.softmax(gate_val, axis=-1)
+        probs = jax.nn.softmax(logits, axis=-1)
+    # Switch-style load-balance aux: E * Σ_e fraction_e * prob_e
+    frac = jnp.mean(
+        jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(axis=1), axis=0
+    ) / k
+    aux = e * jnp.sum(frac * jnp.mean(probs, axis=0)) * cfg.router_aux_coef
+    return idx, combine.astype(jnp.float32), aux
+
+
+def _capacity(cfg: ModelConfig, t: int) -> int:
+    cap = int(cfg.capacity_factor * t * cfg.experts_per_token / cfg.num_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for lane alignment
+
+
+def apply_moe(cfg: ModelConfig, p: Dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    cap = _capacity(cfg, t)
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    idx, combine, aux = _route(cfg, logits)  # (T,k)
+
+    # ---- pack (token, choice) pairs into (E, cap) slots by stable sort ----
+    flat_expert = idx.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_expert, stable=True)  # token pairs grouped by expert
+    # rank of each pair within its expert group:
+    sorted_e = flat_expert[order]
+    pos_in_sorted = jnp.arange(t * k)
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank = pos_in_sorted - group_start[sorted_e]
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_e * cap + rank, e * cap)  # overflow -> trash slot
+    token_of_pair = order // k
+
+    # gather tokens into the slot grid (+1 trash row)
+    slot_token = jnp.zeros((e * cap + 1,), jnp.int32).at[slot].set(
+        token_of_pair.astype(jnp.int32), mode="drop"
+    )
+    slot_used = jnp.zeros((e * cap + 1,), bool).at[slot].set(keep, mode="drop")
+    slot_token, slot_used = slot_token[:-1], slot_used[:-1]
+    xe = xf[slot_token].reshape(e, cap, d) * slot_used.reshape(e, cap, 1).astype(x.dtype)
+
+    # ---- expert computation (stacked over the expert dim) ----
+    h = jnp.einsum("ecd,edf->ecf", xe, p["wg"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", xe, p["wi"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"])  # (E, cap, D)
+
+    # ---- combine back ----
+    pair_weight = combine.reshape(-1)[order]  # aligned with sorted pairs
+    w_slot = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, pair_weight, 0.0), mode="drop"
+    )[:-1]
+    yf = jnp.zeros((t, d), jnp.float32)
+    yf = yf.at[slot_token].add(
+        ye.reshape(e * cap, d).astype(jnp.float32) * w_slot[:, None],
+        mode="drop",
+    )
+    y = yf.astype(x.dtype).reshape(b, s, d)
+    if cfg.shared_expert:
+        y = y + L.apply_mlp(cfg, p["shared"], x)
+    return y, aux

@@ -1,0 +1,134 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block:  y = W_out( GeLU(W_gate x) ⊙ RG-LRU(causal_conv1d(W_in x)) )
+
+RG-LRU (per channel):
+    r_t = σ(W_r ξ_t + b_r)                 recurrence gate
+    i_t = σ(W_i ξ_t + b_i)                 input gate
+    a_t = exp(−c · softplus(Λ) · r_t)      data-dependent decay (c = 8)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ ξ_t)
+
+Training uses ``jax.lax.associative_scan`` over the linear recurrence
+(h_t = a_t h_{t−1} + b_t is associative) — the TPU-friendly parallel form;
+decode carries (conv buffer, h) state with O(1) work per token.  This is the
+"recurrent-scan sharding" path the assignment calls out: the scan is over
+*time*, states shard over (batch, rnn-width) mesh axes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+__all__ = ["init_rglru", "init_rglru_state", "apply_rglru"]
+
+_C = 8.0
+_CONV_W = 4  # causal conv width (griffin uses 4)
+
+
+def _rnn_width(cfg: ModelConfig) -> int:
+    return cfg.rnn_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, dr = cfg.d_model, _rnn_width(cfg)
+    ks = jax.random.split(key, 7)
+    # Λ init so that a ∈ (0.9, 0.999) at r = 1 (griffin appendix)
+    u = jax.random.uniform(ks[0], (dr,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2.0 * _C)))  # softplus^-1
+    return {
+        "w_in": L.init_dense(ks[1], d, dr, dtype),
+        "w_gate": L.init_dense(ks[2], d, dr, dtype),
+        "w_out": L.init_dense(ks[3], dr, d, dtype),
+        "conv_w": (jax.random.normal(ks[4], (_CONV_W, dr)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_r": L.init_dense(ks[5], dr, dr, dtype),
+        "b_r": jnp.zeros((dr,), dtype),
+        "w_i": L.init_dense(ks[6], dr, dr, dtype),
+        "b_i": jnp.zeros((dr,), dtype),
+        "lam": lam.astype(jnp.float32),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> Dict:
+    dr = _rnn_width(cfg)
+    return {
+        "conv": jnp.zeros((batch, _CONV_W - 1, dr), jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _causal_conv(p: Dict, xi: jax.Array, buf: Optional[jax.Array]) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Depthwise causal conv over (B, S, dr); ``buf`` carries the last W-1
+    inputs for decode."""
+    if buf is not None:
+        full = jnp.concatenate([buf.astype(xi.dtype), xi], axis=1)
+        new_buf = full[:, -(_CONV_W - 1):, :]
+    else:
+        pad = jnp.zeros((xi.shape[0], _CONV_W - 1, xi.shape[2]), xi.dtype)
+        full = jnp.concatenate([pad, xi], axis=1)
+        new_buf = None
+    s = xi.shape[1]
+    out = sum(
+        full[:, i : i + s, :] * p["conv_w"][i] for i in range(_CONV_W)
+    ) + p["conv_b"]
+    return out, new_buf
+
+
+def _gates(p: Dict, xi: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    r = jax.nn.sigmoid((xi @ p["w_r"]["w"] + p["b_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xi @ p["w_i"]["w"] + p["b_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * xi.astype(jnp.float32)
+    )
+    return a, b
+
+
+def apply_rglru(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,
+    state: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, S, D) -> (y, new_state).  ``state=None`` → parallel train path
+    (associative scan from h_0 = 0); otherwise sequential from state["h"]."""
+    gate = jax.nn.gelu(L.dense(p["w_gate"], x), approximate=True)
+    xi = L.dense(p["w_in"], x)
+
+    if state is None:
+        xi, _ = _causal_conv(p, xi, None)
+        a, b = _gates(p, xi)  # (B, S, dr) fp32
+        # associative linear recurrence: (a, b) ∘ (a', b') = (aa', a'b + b')
+        def combine(lhs, rhs):
+            al, bl = lhs
+            ar, br = rhs
+            return al * ar, ar * bl + br
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_state = None
+    else:
+        xi, new_buf = _causal_conv(p, xi, state["conv"])
+        a, b = _gates(p, xi)
+
+        def step(h, ab):
+            a_t, b_t = ab
+            h = a_t * h + b_t
+            return h, h
+
+        h_last, h = jax.lax.scan(
+            step, state["h"], (a.swapaxes(0, 1), b.swapaxes(0, 1))
+        )
+        h = h.swapaxes(0, 1)
+        new_state = {"conv": new_buf, "h": h_last, "pos": state["pos"] + x.shape[1]}
+
+    y = L.dense(p["w_out"], (gate.astype(jnp.float32) * h).astype(x.dtype))
+    return y, new_state

@@ -1,0 +1,192 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892): attention-free time mix with
+data-dependent decay + squared-ReLU channel mix.
+
+Time mix (per head, k/v/r in R^hd):
+    S_t = diag(w_t) S_{t−1} + k_t v_tᵀ            state (hd_k × hd_v)
+    y_t = rᵀ_t (S_{t−1} + diag(u ⊙ k_t) v_tᵀ)     u = per-head bonus
+with w_t = exp(−exp(w0 + LoRA_w(x̃_t))) a *data-dependent* per-channel decay
+(the Finch contribution vs RWKV5's static decay), and all of r/k/v/w/g
+produced from data-dependent token-shift interpolations (ddlerp).
+
+The pure-jnp path scans over time (decode state is O(1) per token — the
+long_500k story for this arch); the Pallas ``rwkv6_scan`` kernel implements
+the chunked TPU form (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import constrain
+from repro.models import layers as L
+
+__all__ = ["init_rwkv_tmix", "init_rwkv_cmix", "init_rwkv_state", "apply_rwkv_tmix", "apply_rwkv_cmix", "wkv6_scan_ref"]
+
+_LORA_RANK = 32
+
+
+def _num_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def init_rwkv_tmix(key, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    h, hd = _num_heads(cfg), cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    mu = lambda k: jax.random.uniform(k, (d,), jnp.float32).astype(dtype)
+    return {
+        # ddlerp static mixes (x + (shift(x) − x) ⊙ mu_*)
+        "mu_x": mu(ks[0]),
+        "mu_w": mu(ks[1]),
+        "mu_k": mu(ks[2]),
+        "mu_v": mu(ks[3]),
+        "mu_r": mu(ks[4]),
+        "mu_g": mu(ks[5]),
+        # decay: w_t = exp(−exp(w0 + tanh(x̃ A_w) B_w))
+        "w0": (jax.random.uniform(ks[6], (d,), jnp.float32) * -1.0 - 5.0),
+        "a_w": (jax.random.normal(ks[7], (d, _LORA_RANK)) * 0.01).astype(dtype),
+        "b_w": (jax.random.normal(ks[8], (_LORA_RANK, d)) * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[9], (h, hd)) * 0.1).astype(jnp.float32),
+        "wr": L.init_dense(ks[10], d, d, dtype),
+        "wk": L.init_dense(ks[11], d, d, dtype),
+        "wv": L.init_dense(jax.random.fold_in(key, 101), d, d, dtype),
+        "wg": L.init_dense(jax.random.fold_in(key, 102), d, d, dtype),
+        "wo": L.init_dense(jax.random.fold_in(key, 103), d, d, dtype),
+        "ln_scale": jnp.ones((d,), dtype),  # per-head group norm scale
+    }
+
+
+def init_rwkv_cmix(key, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jax.random.uniform(ks[0], (d,), jnp.float32).astype(dtype),
+        "mu_r": jax.random.uniform(ks[1], (d,), jnp.float32).astype(dtype),
+        "wk": L.init_dense(ks[2], d, cfg.d_ff, dtype),
+        "wv": L.init_dense(jax.random.fold_in(key, 7), cfg.d_ff, d, dtype),
+        "wr": L.init_dense(jax.random.fold_in(key, 8), d, d, dtype),
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> Dict:
+    h, hd = _num_heads(cfg), cfg.rwkv_head_dim
+    return {
+        "tm_x": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "cm_x": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _shift(x: jax.Array, last: Optional[jax.Array]) -> jax.Array:
+    """Token shift: previous token's activation (zero/state at t = 0)."""
+    if last is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = last[:, None].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def wkv6_scan_ref(
+    r: jax.Array,  # (B, T, H, hd)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # (B, T, H, hd) decay in (0, 1)
+    u: jax.Array,  # (H, hd)
+    state: jax.Array,  # (B, H, hd, hd)
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential WKV6 recurrence (pure-jnp oracle for the Pallas kernel)."""
+
+    def step(s, rkvw):
+        r_t, k_t, v_t, w_t = rkvw  # (B, H, hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B, H, hd, hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state  # (B, T, H, hd), final state
+
+
+def _group_norm(x: jax.Array, scale: jax.Array, h: int) -> jax.Array:
+    """Per-head LayerNorm over hd (RWKV's GroupNorm(heads))."""
+    b, t, d = x.shape
+    xh = x.reshape(b, t, h, d // h).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (xh.reshape(b, t, d) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_rwkv_tmix(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,
+    state: Optional[Dict] = None,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    b, t, d = x.shape
+    h, hd = _num_heads(cfg), cfg.rwkv_head_dim
+    last = state["tm_x"] if state is not None else None
+    xx = _shift(x, last)
+    delta = xx - x
+
+    def lerp(mu):
+        return x + delta * mu
+
+    xw, xk, xv, xr, xg = (lerp(p[f"mu_{n}"]) for n in ("w", "k", "v", "r", "g"))
+    r = L.dense(p["wr"], xr).reshape(b, t, h, hd)
+    k = L.dense(p["wk"], xk).reshape(b, t, h, hd)
+    v = L.dense(p["wv"], xv).reshape(b, t, h, hd)
+    g = jax.nn.silu(L.dense(p["wg"], xg))
+    # data-dependent decay (Finch): w = exp(−exp(w0 + tanh(xw A) B))
+    dd = jnp.tanh(xw @ p["a_w"]) @ p["b_w"]
+    logw = -jnp.exp(
+        jnp.clip(p["w0"].astype(jnp.float32) + dd.astype(jnp.float32), -20.0, 8.0)
+    )
+    w = jnp.exp(logw).reshape(b, t, h, hd)
+    # keep the wkv inputs on ONE consistent head sharding — without this the
+    # replicated decay path forces (B,T,H,hd) fp32 regathers (§Perf rwkv)
+    r, k, v, w = (
+        constrain(x, "act_inner_b", "act_seq", "act_rwkv_h", None) for x in (r, k, v, w)
+    )
+
+    s0 = (
+        state["wkv"]
+        if state is not None
+        else jnp.zeros((b, h, hd, hd), jnp.float32)
+    )
+    if use_kernel:
+        from repro.kernels.rwkv6_scan import ops as wkv_ops
+
+        y, s_new = wkv_ops.wkv6(r, k, v, w, p["u"], s0)
+    else:
+        y, s_new = wkv6_scan_ref(r, k, v, w, p["u"], s0)
+
+    y = _group_norm(y.reshape(b, t, d).astype(x.dtype), p["ln_scale"], h)
+    out = L.dense(p["wo"], y * g)
+    new_state = None
+    if state is not None:
+        new_state = dict(state, tm_x=x[:, -1], wkv=s_new, pos=state["pos"] + t)
+    return out, new_state
+
+
+def apply_rwkv_cmix(
+    cfg: ModelConfig, p: Dict, x: jax.Array, state: Optional[Dict] = None
+) -> Tuple[jax.Array, Optional[Dict]]:
+    last = state["cm_x"] if state is not None else None
+    xx = _shift(x, last)
+    delta = xx - x
+    xk = x + delta * p["mu_k"]
+    xr = x + delta * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(L.dense(p["wk"], xk)))
+    out = jax.nn.sigmoid(L.dense(p["wr"], xr)) * L.dense(p["wv"], kk)
+    new_state = dict(state, cm_x=x[:, -1]) if state is not None else None
+    return out, new_state

@@ -1,0 +1,367 @@
+"""Composable decoder transformer covering all assigned architectures.
+
+A model is a ``block_pattern`` — a repeating unit of "mixer+ffn" layer specs:
+
+    mixers:  attn (full GQA) | swa (window=cfg.window) |
+             local (window=cfg.local_window) | rglru | rwkv
+    ffns:    mlp | moe | cmix
+
+e.g. granite = ("attn+mlp",); mixtral = ("swa+moe",);
+llama4 = ("attn+mlp", "attn+moe") (MoE every other layer);
+recurrentgemma = ("rglru+mlp", "rglru+mlp", "local+mlp"); rwkv6 = ("rwkv+cmix",).
+
+Layers run as ``lax.scan`` over repeats of the pattern unit (stacked params →
+HLO size ~independent of depth, which keeps all 80 dry-run compiles
+tractable), with the non-multiple remainder applied unstacked.  ``cfg.remat``
+wraps the scanned unit in ``jax.checkpoint``.
+
+The LM loss is *vocab-chunk-free but sequence-chunked*: logits are produced
+per sequence chunk inside a scan so the (B, S, V) tensor is never
+materialised — at gemma's 256k vocab that is the difference between 67 GB and
+<1 GB of live logits per device (see §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+
+__all__ = [
+    "init_params",
+    "init_caches",
+    "forward",
+    "lm_loss",
+    "decode_step",
+    "features",
+    "param_count",
+]
+
+
+def _parse(btype: str) -> Tuple[str, str]:
+    mixer, ffn = btype.split("+")
+    return mixer, ffn
+
+
+def _mixer_window(cfg: ModelConfig, mixer: str) -> Optional[int]:
+    return {"attn": None, "swa": cfg.window, "local": cfg.local_window}.get(mixer)
+
+
+def vocab_padded(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab_size // 128) * 128
+
+
+# ------------------------------------------------------------------ init
+
+
+def _init_block(key, cfg: ModelConfig, btype: str) -> Dict:
+    mixer, ffn = _parse(btype)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": L.init_norm(cfg), "norm2": L.init_norm(cfg)}
+    if mixer in ("attn", "swa", "local"):
+        p["mixer"] = attn_mod.init_attention(ks[0], cfg)
+    elif mixer == "rglru":
+        p["mixer"] = rglru_mod.init_rglru(ks[0], cfg)
+    elif mixer == "rwkv":
+        p["mixer"] = rwkv_mod.init_rwkv_tmix(ks[0], cfg)
+    else:
+        raise ValueError(mixer)
+    if ffn == "mlp":
+        p["ffn"] = L.init_mlp(ks[1], cfg)
+    elif ffn == "moe":
+        p["ffn"] = moe_mod.init_moe(ks[1], cfg)
+    elif ffn == "cmix":
+        p["ffn"] = rwkv_mod.init_rwkv_cmix(ks[1], cfg)
+    else:
+        raise ValueError(ffn)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    pattern = cfg.block_pattern
+    reps, rem = divmod(cfg.num_layers, len(pattern))
+    ks = jax.random.split(key, 4 + len(pattern))
+    v = vocab_padded(cfg)
+    params: Dict[str, Any] = {
+        "embed": {"w": (jax.random.normal(ks[0], (v, cfg.d_model)) * 0.02).astype(dtype)},
+        "final_norm": L.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(ks[1], cfg.d_model, v, dtype)
+    unit = []
+    for j, btype in enumerate(pattern):
+        rep_keys = jax.random.split(ks[3 + j], max(reps, 1))
+        stacked = jax.vmap(lambda k, b=btype: _init_block(k, cfg, b))(rep_keys)
+        if reps == 0:
+            stacked = jax.tree_util.tree_map(lambda x: x[:0], stacked)
+        unit.append(stacked)
+    params["unit"] = tuple(unit)
+    params["rem"] = tuple(
+        _init_block(jax.random.fold_in(ks[2], j), cfg, pattern[j]) for j in range(rem)
+    )
+    return params
+
+
+def _init_block_cache(cfg: ModelConfig, btype: str, batch: int, cache_len: int):
+    mixer, _ = _parse(btype)
+    if mixer in ("attn", "swa", "local"):
+        return attn_mod.init_cache(cfg, batch, cache_len, _mixer_window(cfg, mixer))
+    if mixer == "rglru":
+        return rglru_mod.init_rglru_state(cfg, batch)
+    return rwkv_mod.init_rwkv_state(cfg, batch)
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int) -> Dict:
+    pattern = cfg.block_pattern
+    reps, rem = divmod(cfg.num_layers, len(pattern))
+    unit = []
+    for btype in pattern:
+        one = _init_block_cache(cfg, btype, batch, cache_len)
+        unit.append(
+            jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (reps,) + x.shape).copy(), one
+            )
+        )
+    rem_caches = tuple(
+        _init_block_cache(cfg, pattern[j], batch, cache_len) for j in range(rem)
+    )
+    return {"unit": tuple(unit), "rem": rem_caches}
+
+
+# ------------------------------------------------------------------ blocks
+
+
+def _apply_block(
+    cfg: ModelConfig,
+    p: Dict,
+    btype: str,
+    x: jax.Array,
+    positions: jax.Array,
+    cache,
+    use_flash: bool,
+) -> Tuple[jax.Array, Any, jax.Array]:
+    mixer, ffn = _parse(btype)
+    h = L.apply_norm(cfg, p["norm1"], x)
+    if mixer in ("attn", "swa", "local"):
+        y, new_cache = attn_mod.apply_attention(
+            cfg, p["mixer"], h, positions, cache, _mixer_window(cfg, mixer), use_flash
+        )
+    elif mixer == "rglru":
+        y, new_cache = rglru_mod.apply_rglru(cfg, p["mixer"], h, cache)
+    else:
+        y, new_cache = rwkv_mod.apply_rwkv_tmix(cfg, p["mixer"], h, cache)
+    x = x + y
+
+    h = L.apply_norm(cfg, p["norm2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "mlp":
+        y = L.apply_mlp(cfg, p["ffn"], h)
+    elif ffn == "moe":
+        y, aux = moe_mod.apply_moe(cfg, p["ffn"], h)
+    else:  # cmix shares the rwkv state dict
+        y, new_cache = rwkv_mod.apply_rwkv_cmix(cfg, p["ffn"], h, new_cache)
+    return x + y, new_cache, aux
+
+
+# ------------------------------------------------------------------ forward
+
+
+def _embed_in(cfg, params, tokens, positions, embeds):
+    if embeds is not None:
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+    else:
+        x = params["embed"]["w"][tokens].astype(jnp.dtype(cfg.dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.pos_style == "sinusoidal":
+        pos = positions if positions.ndim == 2 else positions[0]
+        x = x + L.sinusoidal_positions(pos, cfg.d_model).astype(x.dtype)
+    return x
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Dict,
+    tokens: Optional[jax.Array],
+    positions: jax.Array,
+    caches: Optional[Dict] = None,
+    embeds: Optional[jax.Array] = None,
+    use_flash: bool = False,
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """-> (final hidden (B, S, D), new caches, total aux loss)."""
+    pattern = cfg.block_pattern
+    x = _embed_in(cfg, params, tokens, positions, embeds)
+    x = constrain(x, "act_batch", "act_seq", "act_embed")
+
+    if caches is None:
+
+        def unit_body(carry, unit_slice):
+            x, aux = carry
+            for j, btype in enumerate(pattern):
+                x, _, a = _apply_block(cfg, unit_slice[j], btype, x, positions, None, use_flash)
+                x = constrain(x, "act_batch", "act_seq", "act_embed")
+                aux = aux + a
+            return (x, aux), None
+
+        body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+        (x, aux), _ = lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["unit"],
+            unroll=cfg.scan_unroll,
+        )
+        for j, p in enumerate(params["rem"]):
+            x, _, a = _apply_block(cfg, p, pattern[j], x, positions, None, use_flash)
+            aux = aux + a
+        new_caches = None
+    else:
+
+        def unit_body(x, xs):
+            unit_slice, cache_slice = xs
+            new_slice = []
+            for j, btype in enumerate(pattern):
+                x, nc, _ = _apply_block(
+                    cfg, unit_slice[j], btype, x, positions, cache_slice[j], use_flash
+                )
+                new_slice.append(nc)
+            return x, tuple(new_slice)
+
+        x, new_unit = lax.scan(
+            unit_body, x, (params["unit"], caches["unit"]), unroll=cfg.scan_unroll
+        )
+        new_rem = []
+        for j, p in enumerate(params["rem"]):
+            x, nc, _ = _apply_block(
+                cfg, p, pattern[j], x, positions, caches["rem"][j], use_flash
+            )
+            new_rem.append(nc)
+        new_caches = {"unit": new_unit, "rem": tuple(new_rem)}
+        aux = jnp.zeros((), jnp.float32)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, new_caches, aux
+
+
+def _head_weight(cfg: ModelConfig, params: Dict) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"]["w"].T  # (D, V)
+    return params["lm_head"]["w"]
+
+
+def logits_from_hidden(cfg: ModelConfig, params: Dict, hidden: jax.Array) -> jax.Array:
+    logits = hidden @ _head_weight(cfg, params).astype(hidden.dtype)
+    if cfg.logits_soft_cap:
+        c = cfg.logits_soft_cap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def lm_loss(
+    cfg: ModelConfig,
+    params: Dict,
+    tokens: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    loss_chunk: Optional[int] = None,
+    use_flash: bool = False,
+    embeds: Optional[jax.Array] = None,
+    targets: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Next-token CE, sequence-chunked so (B, S, V) logits never materialise.
+
+    VLM/audio stubs pass ``embeds`` (frontend output) + ``targets``; text LMs
+    pass ``tokens`` and targets default to the shifted tokens."""
+    b, s = tokens.shape[:2] if tokens is not None else embeds.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.pos_style == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+    hidden, _, aux = forward(
+        cfg, params, tokens, positions, embeds=embeds, use_flash=use_flash
+    )
+    h_in = hidden[:, :-1]
+    if targets is None:
+        targets = tokens[:, 1:]
+    else:
+        targets = targets[:, 1:] if targets.shape[1] == s else targets
+    n = h_in.shape[1]
+    chunk = min(loss_chunk or cfg.loss_chunk, n)
+    n_chunks, tail = divmod(n, chunk)
+    w = _head_weight(cfg, params)
+
+    def ce(h_c, t_c):
+        logits = h_c @ w.astype(h_c.dtype)
+        if cfg.logits_soft_cap:
+            logits = jnp.tanh(logits / cfg.logits_soft_cap) * cfg.logits_soft_cap
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t_c[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    def body(tot, xs):
+        h_c, t_c = xs
+        return tot + ce(h_c, t_c), None
+
+    h_main = h_in[:, : n_chunks * chunk].reshape(b, n_chunks, chunk, -1).swapaxes(0, 1)
+    t_main = targets[:, : n_chunks * chunk].reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    total, _ = lax.scan(
+        body, jnp.zeros((), jnp.float32), (h_main, t_main), unroll=cfg.loss_unroll
+    )
+    if tail:
+        total = total + ce(h_in[:, n_chunks * chunk :], targets[:, n_chunks * chunk :])
+    return total / (b * n) + aux
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Dict,
+    tokens: jax.Array,  # (B, 1) int32 (or embeds via kwarg)
+    caches: Dict,
+    embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict]:
+    """One-token decode against the cache -> (logits (B, 1, V), new caches)."""
+    b = tokens.shape[0] if tokens is not None else embeds.shape[0]
+    pos = _cache_pos(caches)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.pos_style == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, b, 1))
+    hidden, new_caches, _ = forward(cfg, params, tokens, positions, caches, embeds)
+    return logits_from_hidden(cfg, params, hidden), new_caches
+
+
+def _cache_pos(caches: Dict) -> jax.Array:
+    first = caches["unit"][0] if caches["unit"] else caches["rem"][0]
+    leaf = first["pos"]
+    return leaf[0] if leaf.ndim else leaf  # stacked (reps,) or scalar
+
+
+def features(
+    cfg: ModelConfig,
+    params: Dict,
+    tokens: jax.Array,
+    positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """(logits over last position, mean pre-logits hidden) — the FL data
+    profile for LM clients (DESIGN.md §3: Theorem-1 analogue)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.pos_style == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+    hidden, _, _ = forward(cfg, params, tokens, positions)
+    feats = hidden.mean(axis=1)  # (B, D)
+    logits = logits_from_hidden(cfg, params, hidden[:, -1:])
+    return logits, feats
+
+
+def param_count(params: Dict) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,11 @@
+"""Native optimizers (no optax): functional ``init/update`` pairs."""
+
+from repro.optim.optimizers import (
+    Optimizer,
+    adafactor,
+    adam,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    sgd,
+)

@@ -1,0 +1,185 @@
+"""Functional optimizers.
+
+API (optax-shaped, dependency-free)::
+
+    opt = adam(3e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+``sgd`` is the FL-local optimizer (paper eq. 3-4 is plain SGD — stateless when
+momentum = 0, which is what lets Mode-A client-parallel rounds avoid
+replicating optimizer state per client).  ``adafactor`` provides the factored
+second moment needed to fit llama4-maverick-400b optimizer state in HBM
+(DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer",
+    "apply_updates",
+    "clip_by_global_norm",
+    "sgd",
+    "adam",
+    "adamw",
+    "adafactor",
+]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], Tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def sgd(lr: float, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        if momentum == 0.0:
+            return jax.tree_util.tree_map(lambda g: -lr * g, grads), ()
+        new_m = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(lambda m, g: -lr * (momentum * m + g), new_m, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+class _AdamState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adam(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return _AdamState(jnp.zeros((), jnp.int32), *(
+            jax.tree_util.tree_map(zeros32, params) for _ in range(2)
+        ))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if weight_decay and params is not None:
+            updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        else:
+            updates = jax.tree_util.tree_map(lambda m, v: upd(m, v, None), mu, nu)
+        return updates, _AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+class _AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: PyTree  # row second moments (or full v for <2D tensors)
+    vc: PyTree  # col second moments (or () for <2D tensors)
+
+
+def adafactor(
+    lr: float = 1e-2,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+) -> Optimizer:
+    """Adafactor (Shazeer & Stern) with factored second moments for >=2-D
+    tensors — O(n+m) optimizer state instead of O(n·m)."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vr_init(p):
+            if _factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc_init(p):
+            if _factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return _AdafactorState(
+            jnp.zeros((), jnp.int32),
+            jax.tree_util.tree_map(vr_init, params),
+            jax.tree_util.tree_map(vc_init, params),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        beta = 1.0 - (step.astype(jnp.float32)) ** (-decay)
+
+        def upd(g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if g.ndim >= 2:
+                vr_n = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc_n = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = vr_n / jnp.maximum(jnp.mean(vr_n, axis=-1, keepdims=True), eps)
+                v = r[..., None] * vc_n[..., None, :]
+            else:
+                vr_n = beta * vr + (1 - beta) * g2
+                vc_n = vc
+                v = vr_n
+            u = g / jnp.sqrt(jnp.maximum(v, eps))
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr * u, vr_n, vc_n
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_vr = treedef.flatten_up_to(state.vr)
+        flat_vc = treedef.flatten_up_to(state.vc)
+        out = [upd(g, vr, vc) for g, vr, vc in zip(flat_g, flat_vr, flat_vc)]
+        updates = treedef.unflatten([o[0] for o in out])
+        vr = treedef.unflatten([o[1] for o in out])
+        vc = treedef.unflatten([o[2] for o in out])
+        return updates, _AdafactorState(step, vr, vc)
+
+    return Optimizer(init, update)

@@ -1,0 +1,84 @@
+"""Tests for the HLO collective parser and roofline term computation."""
+
+import numpy as np
+
+from repro.analysis import hlo
+from repro.analysis.roofline import active_param_count, analyse, model_flops
+from repro.configs import get_arch
+
+HLO_SNIPPET = """
+  %all-gather = f32[4,8]{0,1} all-gather(%bitcast), channel_id=1, replica_groups=[4,2]<=[2,4]T(1,0), dimensions={1}
+  %all-reduce = bf16[16,128]{1,0} all-reduce(%dot), channel_id=2, replica_groups=[2,4]<=[8], to_apply=%add
+  %rs = f32[2,8]{1,0} reduce-scatter(%x), channel_id=3, replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = f32[64]{0} collective-permute(%y), source_target_pairs={{0,1}}
+  %ag-done = f32[4,8]{0,1} all-gather-done(%ag-start)
+  %dot.1 = f32[128,128]{1,0} dot(%a, %b)
+"""
+
+
+def test_collective_bytes_parser():
+    out = hlo.collective_bytes(HLO_SNIPPET)
+    assert out["all-gather"] == 4 * 8 * 4  # result bytes
+    assert out["all-reduce"] == 2 * 16 * 128 * 2  # 2x bf16 bytes
+    assert out["reduce-scatter"] == 2 * 8 * 4 * 4  # result x group(4)
+    assert out["collective-permute"] == 64 * 4
+    # -done ops must not double count: only 4 collectives + totals
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+    assert len([k for k in out if k != "total"]) == 4
+
+
+def test_op_histogram():
+    h = hlo.op_histogram(HLO_SNIPPET)
+    assert h.get("dot") == 1
+    assert h.get("all-gather") == 1
+
+
+def test_active_params_moe_smaller_than_total():
+    cfg = get_arch("mixtral-8x7b").model
+    act = active_param_count(cfg)
+    tot = active_param_count(cfg, total=True)
+    assert act < tot
+    # mixtral: ~13B active vs ~47B total (non-embedding)
+    assert 0.2 < act / tot < 0.4
+
+
+def test_llama4_active_params_about_17b():
+    cfg = get_arch("llama4-maverick-400b-a17b").model
+    act = active_param_count(cfg)
+    tot = active_param_count(cfg, total=True)
+    assert 350e9 < tot < 450e9, tot  # ~400B total
+    assert 10e9 < act < 25e9, act  # ~17B active
+
+
+def test_model_flops_monotonic_in_shape():
+    f_train = model_flops("granite-3-2b", "train_4k", "client_parallel", 4)
+    f_prefill = model_flops("granite-3-2b", "prefill_32k", "serve")
+    f_decode = model_flops("granite-3-2b", "decode_32k", "serve")
+    assert f_train > f_prefill > f_decode > 0
+
+
+def test_analyse_terms_and_dominant():
+    rec = dict(
+        ok=True, mesh="16x16", arch="granite-3-2b", shape="decode_32k",
+        fl_mode="serve",
+        cost={"flops": 1e9, "bytes accessed": 5e9},
+        collectives={"all-reduce": 1e6, "total": 1e6},
+        memory={},
+    )
+    rows = analyse([rec])
+    assert len(rows) == 1
+    r = rows[0]
+    np.testing.assert_allclose(r["t_compute"], 1e9 / 197e12)
+    np.testing.assert_allclose(r["t_memory"], 5e9 / 819e9)
+    np.testing.assert_allclose(r["t_collective"], 1e6 / 50e9)
+    assert r["dominant"] == "memory"
+    assert r["useful_ratio"] > 0
+
+
+def test_analyse_skips_failed_and_wrong_mesh():
+    recs = [
+        dict(ok=False, mesh="16x16", arch="granite-3-2b", shape="train_4k"),
+        dict(ok=True, mesh="2x16x16", arch="granite-3-2b", shape="train_4k",
+             fl_mode="client_parallel", cost={}, collectives={}, memory={}),
+    ]
+    assert analyse(recs) == []

@@ -1,0 +1,104 @@
+"""Tests for the k-DPP sampler (paper §3.2, eq. 12-13)."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dpp, similarity
+
+
+def _random_kernel(rng, c, q=5):
+    f = rng.normal(size=(c, q)).astype(np.float32)
+    return np.asarray(similarity.kernel_from_profiles(jnp.asarray(f)))
+
+
+def test_elementary_symmetric_matches_numpy():
+    lam = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    e = dpp.elementary_symmetric(lam, 3)
+    # e_1 = 10, e_2 = 35, e_3 = 50 over all four
+    assert np.isclose(e[1, 4], 10.0)
+    assert np.isclose(e[2, 4], 35.0)
+    assert np.isclose(e[3, 4], 50.0)
+    assert np.allclose(np.asarray(e[0, :]), 1.0)
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_kdpp_matches_bruteforce_distribution(k):
+    rng = np.random.default_rng(0)
+    c = 5
+    kern = _random_kernel(rng, c)
+    subsets = list(itertools.combinations(range(c), k))
+    dets = np.array([max(np.linalg.det(kern[np.ix_(s, s)]), 0.0) for s in subsets])
+    p_true = dets / dets.sum()
+
+    ns = 1500
+    keys = jax.random.split(jax.random.key(k), ns)
+    out = np.asarray(jax.vmap(lambda kk: dpp.sample_kdpp(kk, jnp.asarray(kern), k))(keys))
+    counts = {s: 0 for s in subsets}
+    for row in out:
+        s = tuple(sorted(row.tolist()))
+        assert len(set(s)) == k  # always k distinct items
+        counts[s] += 1
+    p_emp = np.array([counts[s] / ns for s in subsets])
+    tv = 0.5 * np.abs(p_emp - p_true).sum()
+    assert tv < 0.08, (tv, p_true, p_emp)
+
+
+def test_greedy_map_finds_argmax_on_small_instance():
+    rng = np.random.default_rng(1)
+    kern = _random_kernel(rng, 7)
+    k = 3
+    subsets = list(itertools.combinations(range(7), k))
+    dets = np.array([np.linalg.det(kern[np.ix_(s, s)]) for s in subsets])
+    best = set(subsets[int(np.argmax(dets))])
+    got = set(np.asarray(dpp.greedy_map_kdpp(jnp.asarray(kern), k)).tolist())
+    # greedy is not guaranteed optimal, but must be distinct, size-k and
+    # within a constant factor of optimal on these easy instances.
+    assert len(got) == k
+    got_det = np.linalg.det(kern[np.ix_(sorted(got), sorted(got))])
+    # Greedy MAP is a (1/e)-style approximation, not exact — require the
+    # chosen subset to be within a constant factor of the true optimum.
+    assert got_det >= 0.25 * dets.max(), (got, best, got_det, dets.max())
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(min_value=3, max_value=12),
+    k=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kdpp_property_distinct_and_in_range(c, k, seed):
+    """Property: samples are always k distinct, in-range indices."""
+    k = min(k, c)
+    rng = np.random.default_rng(seed)
+    kern = _random_kernel(rng, c)
+    idx = np.asarray(dpp.sample_kdpp(jax.random.key(seed), jnp.asarray(kern), k))
+    assert idx.shape == (k,)
+    assert len(set(idx.tolist())) == k
+    assert (idx >= 0).all() and (idx < c).all()
+
+
+def test_kdpp_repels_duplicates():
+    """Two identical clients should (almost) never be co-selected."""
+    rng = np.random.default_rng(2)
+    f = rng.normal(size=(6, 8)).astype(np.float32)
+    f[1] = f[0]  # duplicate client
+    kern = jnp.asarray(np.asarray(similarity.kernel_from_profiles(jnp.asarray(f))))
+    keys = jax.random.split(jax.random.key(0), 300)
+    out = np.asarray(jax.vmap(lambda kk: dpp.sample_kdpp(kk, kern, 2))(keys))
+    both = sum(1 for row in out if set(row.tolist()) == {0, 1})
+    assert both <= 3  # det of the {0,1} submatrix is ~0
+
+
+def test_log_det_subset():
+    rng = np.random.default_rng(3)
+    kern = _random_kernel(rng, 6)
+    idx = jnp.asarray([0, 2, 4])
+    want = np.linalg.slogdet(kern[np.ix_([0, 2, 4], [0, 2, 4])])[1]
+    got = dpp.log_det_subset(jnp.asarray(kern), idx)
+    assert np.isclose(got, want, rtol=1e-4)

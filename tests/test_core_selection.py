@@ -1,0 +1,130 @@
+"""Tests for selection strategies and the GEMD metric."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import metrics, selection, similarity
+
+
+def _state(c=20, q=6, seed=0, with_losses=True):
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray(rng.normal(size=(c, q)).astype(np.float32))
+    kern = similarity.kernel_from_profiles(f)
+    return selection.RoundState(
+        num_clients=c,
+        kernel=kern,
+        profiles=f,
+        losses=jnp.asarray(rng.uniform(0.1, 3.0, size=(c,)).astype(np.float32))
+        if with_losses
+        else None,
+        client_sizes=jnp.full((c,), 50.0),
+    )
+
+
+def test_all_strategies_return_k_distinct():
+    st_ = _state()
+    for strat in [
+        selection.UniformSelection(),
+        selection.DPPSelection(),
+        selection.DPPSelection(mode="map"),
+        selection.FedSAESelection(),
+        selection.ClusterSelection(),
+        selection.PowerOfChoiceSelection(d=10),
+    ]:
+        idx = np.asarray(strat.select(jax.random.key(0), st_, 5))
+        assert idx.shape == (5,), strat.name
+        assert len(set(idx.tolist())) == 5, strat.name
+        assert (idx >= 0).all() and (idx < st_.num_clients).all()
+
+
+def test_fedsae_prefers_high_loss():
+    st_ = _state(c=30)
+    losses = np.asarray(st_.losses)
+    hits = np.zeros(30)
+    for i in range(200):
+        idx = np.asarray(
+            selection.FedSAESelection().select(jax.random.key(i), st_, 5)
+        )
+        hits[idx] += 1
+    top = np.argsort(-losses)[:10]
+    bot = np.argsort(losses)[:10]
+    assert hits[top].mean() > 1.5 * hits[bot].mean()
+
+
+def test_cluster_selection_one_per_cluster():
+    # Three well-separated blobs of fingerprints -> with k=3, each pick
+    # comes from a different blob.
+    rng = np.random.default_rng(0)
+    centers = 5.0 * np.eye(3, 4)  # three orthogonal directions (cosine-separable)
+    blobs = [c + rng.normal(0, 0.05, size=(5, 4)) for c in centers]
+    f = jnp.asarray(np.concatenate(blobs).astype(np.float32))
+    st_ = selection.RoundState(num_clients=15, profiles=f, client_sizes=jnp.ones((15,)))
+    idx = np.asarray(selection.ClusterSelection().select(jax.random.key(0), st_, 3))
+    groups = set(i // 5 for i in idx.tolist())
+    assert groups == {0, 1, 2}
+
+
+def test_gemd_zero_for_perfect_mix():
+    # two complementary clients average to the global distribution
+    dists = jnp.asarray([[1.0, 0.0], [0.0, 1.0]])
+    sizes = jnp.asarray([10.0, 10.0])
+    g = metrics.gemd(dists, sizes, jnp.asarray([0, 1]), jnp.asarray([0.5, 0.5]))
+    assert np.isclose(float(g), 0.0, atol=1e-6)
+
+
+def test_gemd_max_for_single_class_cohort():
+    dists = jnp.asarray([[1.0, 0.0], [0.0, 1.0]])
+    sizes = jnp.asarray([10.0, 10.0])
+    g = metrics.gemd(dists, sizes, jnp.asarray([0, 0]), jnp.asarray([0.5, 0.5]))
+    assert np.isclose(float(g), 1.0, atol=1e-6)  # |1-0.5|+|0-0.5|
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.integers(min_value=2, max_value=10),
+    n=st.integers(min_value=2, max_value=6),
+    seed=st.integers(min_value=0, max_value=10**6),
+)
+def test_gemd_bounds_property(c, n, seed):
+    """Property: 0 <= GEMD <= 2 (L1 distance of two distributions)."""
+    rng = np.random.default_rng(seed)
+    d = rng.dirichlet(np.ones(n), size=c).astype(np.float32)
+    sizes = rng.integers(1, 100, size=c).astype(np.float32)
+    global_d = (sizes[:, None] * d).sum(0) / sizes.sum()
+    sel = rng.choice(c, size=min(3, c), replace=False)
+    g = float(
+        metrics.gemd(jnp.asarray(d), jnp.asarray(sizes), jnp.asarray(sel), jnp.asarray(global_d))
+    )
+    assert -1e-5 <= g <= 2.0 + 1e-5
+
+
+def test_dpp_selection_lowers_gemd_vs_uniform():
+    """The paper's headline mechanism: DPP cohorts are more diverse (lower
+    GEMD) than uniform cohorts when profiles reflect label skew."""
+    rng = np.random.default_rng(0)
+    c, n = 30, 10
+    labels = np.arange(c) % n  # one class per client (xi = 1)
+    dists = np.eye(n, dtype=np.float32)[labels]
+    # profiles = class embedding + tiny noise (ideal profiling)
+    centers = rng.normal(size=(n, 8)).astype(np.float32)
+    f = centers[labels] + 0.01 * rng.normal(size=(c, 8)).astype(np.float32)
+    kern = similarity.kernel_from_profiles(jnp.asarray(f))
+    sizes = jnp.full((c,), 10.0)
+    global_d = jnp.asarray(dists.mean(0))
+    st_ = selection.RoundState(
+        num_clients=c, kernel=kern, profiles=jnp.asarray(f), client_sizes=sizes
+    )
+
+    def avg_gemd(strat, rounds=40):
+        tot = 0.0
+        for i in range(rounds):
+            idx = strat.select(jax.random.key(i), st_, n)
+            tot += float(metrics.gemd(jnp.asarray(dists), sizes, idx, global_d))
+        return tot / rounds
+
+    g_dpp = avg_gemd(selection.DPPSelection())
+    g_uni = avg_gemd(selection.UniformSelection())
+    assert g_dpp < 0.7 * g_uni, (g_dpp, g_uni)

@@ -1,0 +1,54 @@
+"""Tests for eq.-(14) similarity matrix and the L = SᵀS kernel."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import similarity
+
+
+def test_pairwise_matches_naive():
+    rng = np.random.default_rng(0)
+    f = rng.normal(size=(10, 7)).astype(np.float32)
+    naive = np.linalg.norm(f[:, None, :] - f[None, :, :], axis=-1)
+    got = np.asarray(similarity.pairwise_dists(jnp.asarray(f)))
+    # fp32 ‖a‖²+‖b‖²−2ab expansion: allow cancellation-level error
+    np.testing.assert_allclose(got, naive, atol=3e-3)
+    np.testing.assert_allclose(np.diag(got), 0.0, atol=0)
+
+
+def test_similarity_eq14_range_and_diagonal():
+    rng = np.random.default_rng(1)
+    f = rng.normal(size=(12, 5)).astype(np.float32)
+    s = np.asarray(similarity.similarity_matrix(jnp.asarray(f)))
+    assert (s >= -1e-6).all() and (s <= 1 + 1e-6).all()
+    np.testing.assert_allclose(np.diag(s), 1.0, atol=1e-6)  # min(S0)=0 on diag
+    # the most distant pair gets similarity exactly 0
+    assert np.isclose(s.min(), 0.0, atol=1e-6)
+    np.testing.assert_allclose(s, s.T, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    hnp.arrays(
+        np.float32,
+        hnp.array_shapes(min_dims=2, max_dims=2, min_side=2, max_side=16),
+        elements=st.floats(-100, 100, width=32),
+    )
+)
+def test_kernel_is_psd(f):
+    """Property: L = SᵀS is PSD for any profile matrix."""
+    kern = np.asarray(similarity.kernel_from_profiles(jnp.asarray(f)))
+    eig = np.linalg.eigvalsh(kern)
+    assert eig.min() >= -1e-3 * max(1.0, abs(eig).max())
+    np.testing.assert_allclose(kern, kern.T, atol=1e-4)
+
+
+def test_similarity_monotone_in_distance():
+    """Closer profiles must be scored at least as similar (eq. 14 is affine
+    decreasing in distance)."""
+    f = jnp.asarray([[0.0, 0.0], [0.1, 0.0], [3.0, 0.0]])
+    s = np.asarray(similarity.similarity_matrix(f))
+    assert s[0, 1] > s[0, 2]

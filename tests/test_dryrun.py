@@ -1,0 +1,49 @@
+"""Dry-run smoke (CI): spawn the launcher as a subprocess (it forces 512 host
+devices, which must never leak into this test process) on reduced configs."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(*args):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=560, env=env, cwd=REPO,
+    )
+
+
+@pytest.mark.slow
+def test_dryrun_reduced_train_single_pod(tmp_path):
+    out = tmp_path / "dr.jsonl"
+    r = _run_dryrun("--arch", "smollm-360m", "--shape", "train_4k",
+                    "--reduced", "--out", str(out))
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["ok"], rec.get("error")
+    assert rec["mesh"] == "16x16"
+    assert rec["cost"].get("flops", 0) > 0
+    assert "total" in rec["collectives"]
+
+
+@pytest.mark.slow
+def test_dryrun_reduced_decode_multi_pod(tmp_path):
+    out = tmp_path / "dr.jsonl"
+    r = _run_dryrun("--arch", "rwkv6-7b", "--shape", "decode_32k",
+                    "--reduced", "--multi-pod", "--out", str(out))
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["ok"], rec.get("error")
+    assert rec["mesh"] == "2x16x16"
+
+
+def test_main_process_still_single_device():
+    import jax
+
+    assert len(jax.devices()) == 1  # the XLA_FLAGS hack must not leak

@@ -1,0 +1,167 @@
+"""Tests for data/, optim/, checkpoint/ substrates."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import optim
+from repro.checkpoint import latest_step, restore, save
+from repro.data import (
+    batch_iterator,
+    dirichlet_partition,
+    make_image_dataset,
+    make_token_dataset,
+    skewness_partition,
+)
+
+# ---------------------------------------------------------------- data
+
+
+def test_image_dataset_shapes_and_normalisation():
+    ds = make_image_dataset(n=2000, seed=0)
+    assert ds.xs.shape == (2000, 28, 28, 1)
+    assert ds.ys.shape == (2000,)
+    assert abs(float(ds.xs.mean())) < 0.05
+    assert 0.8 < float(ds.xs.std()) < 1.2
+    assert set(np.unique(ds.ys)) <= set(range(10))
+
+
+@pytest.mark.parametrize("xi,expect_dom", [(1.0, 1.0), (0.8, 0.8), (0.5, 0.5), ("H", 0.5)])
+def test_skewness_partition_matches_protocol(xi, expect_dom):
+    ds = make_image_dataset(n=6000, seed=1)
+    shards = skewness_partition(ds.ys, num_clients=10, xi=xi, num_classes=10,
+                                samples_per_client=500, seed=0)
+    assert len(shards) == 10
+    for c, idx in enumerate(shards):
+        assert len(idx) == 500
+        labels = ds.ys[idx]
+        counts = np.bincount(labels, minlength=10)
+        dom_frac = counts.max() / 500
+        assert abs(dom_frac - expect_dom) < 0.05, (xi, c, dom_frac)
+        if xi == "H":
+            assert (counts > 0).sum() == 2  # exactly two classes
+        if xi == 1.0:
+            assert (counts > 0).sum() == 1
+
+
+def test_partitions_are_disjoint():
+    ds = make_image_dataset(n=6000, seed=2)
+    shards = skewness_partition(ds.ys, 10, 0.8, 10, samples_per_client=400, seed=0)
+    all_idx = np.concatenate(shards)
+    assert len(all_idx) == len(set(all_idx.tolist()))
+
+
+def test_dirichlet_partition_covers_everything_once():
+    ds = make_image_dataset(n=3000, seed=3)
+    shards = dirichlet_partition(ds.ys, 7, alpha=0.5, num_classes=10, seed=0)
+    all_idx = np.concatenate(shards)
+    assert sorted(all_idx.tolist()) == list(range(3000))
+
+
+def test_token_dataset_topic_structure():
+    docs, topics = make_token_dataset(n_docs=200, doc_len=64, vocab=100, num_topics=5)
+    band = 100 // 5
+    for t in range(5):
+        d = docs[topics == t]
+        in_band = ((d >= t * band) & (d < (t + 1) * band)).mean()
+        assert in_band > 0.6
+
+
+def test_batch_iterator_static_shapes():
+    ds = make_image_dataset(n=1000, seed=4)
+    it = batch_iterator(ds.xs, ds.ys, batch_size=128, seed=0)
+    for _ in range(10):
+        xb, yb = next(it)
+        assert xb.shape == (128, 28, 28, 1)
+        assert yb.shape == (128,)
+
+
+# ---------------------------------------------------------------- optim
+
+
+def _quadratic_losses():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum(p["b"] ** 2)
+
+    params = {"w": jnp.zeros(3), "b": jnp.ones(2)}
+    return loss, params
+
+
+@pytest.mark.parametrize(
+    "opt",
+    [
+        optim.sgd(0.1),
+        optim.sgd(0.05, momentum=0.9),
+        optim.adam(0.1),
+        optim.adamw(0.1, weight_decay=0.001),
+        optim.adafactor(0.3),
+    ],
+    ids=["sgd", "sgd-momentum", "adam", "adamw", "adafactor"],
+)
+def test_optimizers_minimise_quadratic(opt):
+    loss, params = _quadratic_losses()
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = optim.apply_updates(params, upd)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_sgd_matches_analytic_step():
+    opt = optim.sgd(0.5)
+    p = {"w": jnp.asarray([2.0])}
+    g = {"w": jnp.asarray([3.0])}
+    upd, _ = opt.update(g, opt.init(p), p)
+    new = optim.apply_updates(p, upd)
+    assert np.isclose(float(new["w"][0]), 2.0 - 0.5 * 3.0)
+
+
+def test_adafactor_state_is_factored():
+    opt = optim.adafactor(0.1)
+    p = {"m": jnp.zeros((64, 32))}
+    state = opt.init(p)
+    assert state.vr["m"].shape == (64,)
+    assert state.vc["m"].shape == (32,)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+    clipped = optim.clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-5)
+    not_clipped = optim.clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(np.asarray(not_clipped["a"]), [3.0, 4.0], rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_apply_updates_roundtrip_property(seed):
+    rng = np.random.default_rng(seed)
+    p = {"x": jnp.asarray(rng.normal(size=(4,)).astype(np.float32))}
+    u = {"x": jnp.asarray(rng.normal(size=(4,)).astype(np.float32))}
+    out = optim.apply_updates(p, u)
+    np.testing.assert_allclose(np.asarray(out["x"]), np.asarray(p["x"]) + np.asarray(u["x"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------- checkpoint
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    save(str(tmp_path), 7, tree)
+    save(str(tmp_path), 12, jax.tree_util.tree_map(lambda x: x + 1, tree))
+    assert latest_step(str(tmp_path)) == 12
+    template = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    got = restore(str(tmp_path), template)  # latest
+    np.testing.assert_allclose(np.asarray(got["params"]["w"]), np.arange(6).reshape(2, 3) + 1)
+    got7 = restore(str(tmp_path), template, step=7)
+    assert int(got7["step"]) == 7
