@@ -10,10 +10,11 @@ Scale via env: REPRO_BENCH_SCALE = tiny | bench (default) | paper.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -21,14 +22,14 @@ import numpy as np
 from repro.configs import paper_cnn
 from repro.core import make_strategy
 from repro.data import make_image_dataset, skewness_partition
-from repro.fl import FLConfig, FLTrainer
+from repro.fl import FLConfig, FLTrainer, engine
 from repro.models import cnn
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 GRID_PATH = os.path.join(RESULTS, "fl_grid.json")
 
 # two synthetic datasets stand in for MNIST / Fashion-MNIST (data gate —
-# DESIGN.md §6): same shape/scale, different generative seeds & noise.
+# DESIGN.md §4): same shape/scale, different generative seeds & noise.
 DATASETS = {"synth-mnist": dict(seed=11, noise=0.5), "synth-fashion": dict(seed=23, noise=0.8)}
 
 
@@ -118,14 +119,72 @@ def _swap_profiles(trainer: FLTrainer, kind: str) -> None:
     trainer.round_state.kernel = kernel_from_profiles(f)
 
 
+def _case_key(dataset, xi, method, seed, exp, init_scheme="kaiming_uniform",
+              profile_kind="fc1") -> str:
+    return (
+        f"{dataset}|xi={xi}|{method}|seed={seed}|init={init_scheme}|prof={profile_kind}|"
+        f"C={exp.num_clients}x{exp.samples_per_client}|T={exp.rounds}"
+    )
+
+
+def prefill_grid(
+    datasets: Sequence[str], xis: Sequence, methods: Sequence[str], exp=None
+) -> int:
+    """Fill the fl_grid cache for a (dataset × ξ × method × seed) sweep
+    through the scanned federation engine.
+
+    All methods share ONE multi-strategy ``round_fn`` (``lax.switch`` on
+    ``ServerState.strategy_index``), so the entire grid executes through a
+    single compiled scan program — the per-case data/params/kernel ride in
+    the state.  Returns the number of newly computed cases.
+    """
+    exp = exp or scale()
+    grid = _load_grid()
+    missing = [
+        (ds, xi, m, s)
+        for ds in datasets
+        for xi in xis
+        for m in methods
+        for s in range(exp.seeds)
+        if _case_key(ds, xi, m, s, exp) not in grid
+    ]
+    if not missing:
+        return 0
+    methods = tuple(methods)
+    strategies = tuple(make_strategy(m) for m in methods)
+    cfg = paper_cnn.fl_config(exp, seed=0)
+    round_fn = engine.make_round_fn(
+        cfg, cnn.cnn_loss, strategies, accuracy_fn=cnn.accuracy
+    )
+    for ds, xi, m, s in missing:
+        t0 = time.time()
+        trainer = build_trainer(exp, ds, xi, m, s)
+        state = dataclasses.replace(
+            trainer.server_state(),
+            strategy_index=np.int32(methods.index(m)),
+        )
+        state_f, outs = engine.run_scanned(round_fn, state, exp.rounds)
+        final_acc = None
+        if exp.rounds % exp.eval_every != 0:
+            xs = trainer.client_xs.reshape((-1,) + trainer.client_xs.shape[2:])
+            final_acc = float(cnn.accuracy(state_f.params, xs, trainer.client_ys.reshape(-1)))
+        hist = engine.history_from_outputs(
+            jax.tree_util.tree_map(np.asarray, outs), exp.eval_every, final_acc=final_acc
+        )
+        hist["wall_s"] = time.time() - t0
+        grid = _load_grid()
+        grid[_case_key(ds, xi, m, s, exp)] = hist
+        _save_grid(grid)
+    return len(missing)
+
+
 def run_case(
     dataset: str, xi, method: str, seed: int, exp=None,
     init_scheme: str = "kaiming_uniform", profile_kind: str = "fc1",
     force: bool = False,
 ) -> Dict[str, List]:
     exp = exp or scale()
-    key = f"{dataset}|xi={xi}|{method}|seed={seed}|init={init_scheme}|prof={profile_kind}|" \
-          f"C={exp.num_clients}x{exp.samples_per_client}|T={exp.rounds}"
+    key = _case_key(dataset, xi, method, seed, exp, init_scheme, profile_kind)
     grid = _load_grid()
     if key in grid and not force:
         return grid[key]

@@ -17,6 +17,8 @@ from repro.configs.paper_cnn import METHODS, XIS
 def run(datasets=None, xis=XIS, methods=METHODS, quiet=False):
     exp = common.scale()
     datasets = datasets or list(common.DATASETS)
+    # one shared multi-strategy scan program fills every missing grid case
+    common.prefill_grid(datasets, xis, methods, exp)
     rows = []
     for ds in datasets:
         for xi in xis:

@@ -17,6 +17,7 @@ import time
 def main() -> None:
     from benchmarks import (
         dpp_scaling,
+        engine_bench,
         fig1_convergence,
         fig2_gemd,
         fig3_profiling,
@@ -30,6 +31,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     kernels_bench.main()
     dpp_scaling.main()
+    engine_bench.main()
     fig45_init_invariance.main()
     fig1_convergence.main()
     fig2_gemd.main()

@@ -15,6 +15,8 @@ from repro.configs.paper_cnn import METHODS
 
 def run(target=None, quiet=False):
     exp = common.scale()
+    # one shared multi-strategy scan program fills every missing grid case
+    common.prefill_grid(["synth-mnist"], [1.0], METHODS, exp)
     # choose a target all methods can reach at this scale
     hists = {
         m: [common.run_case("synth-mnist", 1.0, m, s, exp) for s in range(exp.seeds)]

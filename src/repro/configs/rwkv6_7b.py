@@ -4,7 +4,7 @@ vocab=65536 — Finch, data-dependent decay [arXiv:2404.05892].
 64 WKV heads of dim 64; decode state is O(1) in sequence length
 (tm_x + (H, 64, 64) wkv state + cm_x per layer) ⇒ long_500k is native.
 The paper's technique applies unchanged: profiles are activation means and
-the k-DPP never looks at the mixer type (DESIGN.md §Arch-applicability)."""
+the k-DPP never looks at the mixer type (DESIGN.md §3)."""
 
 from repro.configs.base import FLRunConfig, ModelConfig
 from repro.configs.registry import SERVE_RULES, TRAIN_RULES, ArchSpec

@@ -10,14 +10,27 @@
 * :class:`PowerOfChoiceSelection` — beyond-paper extra baseline (Cho et al.):
   d uniform candidates, keep the C_p with the highest loss.
 
-All strategies share ``select(key, state) -> (C_p,) int32 indices``.
-``RoundState`` carries whatever the server legitimately knows: the one-shot
-profiles/kernel, last-known local losses, and client sizes — never raw data.
+Two layers of API (DESIGN.md §7):
+
+* ``select_fn(key, SelectionState, k) -> (k,) int32`` — **pure and
+  jit/vmap/scan-compatible**.  :class:`SelectionState` is a registered pytree
+  of concrete arrays (kernel, losses, sizes, precomputed cluster labels), so
+  the whole federation round — selection included — compiles into a single
+  ``lax.scan`` with zero host round-trips (see ``repro.fl.engine``).
+  Anything that genuinely needs the host (agglomerative clustering) happens
+  once in ``fit()``, not per round.
+* ``select(key, RoundState, k)`` — the legacy convenience wrapper.
+  ``RoundState`` carries whatever the server legitimately knows: the one-shot
+  profiles/kernel, last-known local losses, and client sizes — never raw
+  data.  It builds a :class:`SelectionState` (running ``fit()`` if needed)
+  and delegates to ``select_fn``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
 from typing import Optional
 
 import jax
@@ -28,6 +41,8 @@ from repro.core import dpp as dpp_mod
 
 __all__ = [
     "RoundState",
+    "SelectionState",
+    "selection_state",
     "SelectionStrategy",
     "UniformSelection",
     "DPPSelection",
@@ -35,12 +50,13 @@ __all__ = [
     "ClusterSelection",
     "PowerOfChoiceSelection",
     "make_strategy",
+    "STRATEGY_NAMES",
 ]
 
 
 @dataclasses.dataclass
 class RoundState:
-    """Server-side knowledge available to a selection strategy."""
+    """Server-side knowledge available to a selection strategy (host view)."""
 
     num_clients: int
     round: int = 0
@@ -51,11 +67,65 @@ class RoundState:
     grad_profiles: Optional[jax.Array] = None  # (C, G) representative gradients
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SelectionState:
+    """Pure-array view of :class:`RoundState` — a pytree every ``select_fn``
+    can consume under ``jit``/``vmap``/``scan``.  All fields are concrete
+    (no ``None``) so the pytree structure is stable across rounds."""
+
+    kernel: jax.Array  # (C, C) PSD profile kernel
+    losses: jax.Array  # (C,) last-known local losses
+    client_sizes: jax.Array  # (C,) n_c
+    cluster_labels: jax.Array  # (C,) int32 — host-fitted, 0 when unused
+
+    @property
+    def num_clients(self) -> int:
+        return self.losses.shape[0]
+
+
+def selection_state(
+    num_clients: int,
+    kernel: Optional[jax.Array] = None,
+    losses: Optional[jax.Array] = None,
+    client_sizes: Optional[jax.Array] = None,
+    cluster_labels: Optional[jax.Array] = None,
+) -> SelectionState:
+    """Build a :class:`SelectionState`, filling neutral defaults for the
+    signals a given strategy does not use."""
+    c = num_clients
+    return SelectionState(
+        kernel=jnp.eye(c, dtype=jnp.float32) if kernel is None else kernel,
+        losses=jnp.ones((c,), jnp.float32) if losses is None else losses,
+        client_sizes=(
+            jnp.ones((c,), jnp.float32) if client_sizes is None else client_sizes
+        ),
+        cluster_labels=(
+            jnp.zeros((c,), jnp.int32) if cluster_labels is None else cluster_labels
+        ),
+    )
+
+
 class SelectionStrategy:
     name = "base"
 
-    def select(self, key: jax.Array, state: RoundState, k: int) -> jax.Array:
+    # -- pure path (engine) -------------------------------------------------
+    def select_fn(self, key: jax.Array, state: SelectionState, k: int) -> jax.Array:
+        """Pure, jittable selection: (key, SelectionState, static k) -> (k,)."""
         raise NotImplementedError
+
+    def prepare(self, state: RoundState, k: int) -> SelectionState:
+        """RoundState -> SelectionState (host-side; runs ``fit`` if any)."""
+        return selection_state(
+            state.num_clients,
+            kernel=state.kernel,
+            losses=state.losses,
+            client_sizes=state.client_sizes,
+        )
+
+    # -- legacy path --------------------------------------------------------
+    def select(self, key: jax.Array, state: RoundState, k: int) -> jax.Array:
+        return self.select_fn(key, self.prepare(state, k), k)
 
 
 class UniformSelection(SelectionStrategy):
@@ -63,7 +133,7 @@ class UniformSelection(SelectionStrategy):
 
     name = "fedavg"
 
-    def select(self, key, state, k):
+    def select_fn(self, key, state, k):
         return jax.random.choice(
             key, state.num_clients, shape=(k,), replace=False
         ).astype(jnp.int32)
@@ -84,11 +154,14 @@ class DPPSelection(SelectionStrategy):
         if mode == "map":
             self.name = "fl-dp3s-map"
 
-    def select(self, key, state, k):
-        assert state.kernel is not None, "DPPSelection needs the profile kernel"
+    def select_fn(self, key, state, k):
         if self.mode == "map":
             return dpp_mod.greedy_map_kdpp(state.kernel, k)
         return dpp_mod.sample_kdpp(key, state.kernel, k)
+
+    def prepare(self, state, k):
+        assert state.kernel is not None, "DPPSelection needs the profile kernel"
+        return super().prepare(state, k)
 
 
 def _gumbel_topk_without_replacement(key, log_weights, k):
@@ -103,11 +176,8 @@ class FedSAESelection(SelectionStrategy):
 
     name = "fedsae"
 
-    def select(self, key, state, k):
-        losses = state.losses
-        if losses is None:
-            losses = jnp.ones((state.num_clients,))
-        w = jnp.maximum(losses, 1e-8)
+    def select_fn(self, key, state, k):
+        w = jnp.maximum(state.losses, 1e-8)
         return _gumbel_topk_without_replacement(key, jnp.log(w), k)
 
 
@@ -119,31 +189,47 @@ class PowerOfChoiceSelection(SelectionStrategy):
     def __init__(self, d: int = 30):
         self.d = d
 
-    def select(self, key, state, k):
+    def select_fn(self, key, state, k):
         d = min(self.d, state.num_clients)
         k1, _ = jax.random.split(key)
         cand = jax.random.choice(k1, state.num_clients, shape=(d,), replace=False)
-        losses = state.losses if state.losses is not None else jnp.zeros((state.num_clients,))
-        order = jnp.argsort(-losses[cand])
+        order = jnp.argsort(-state.losses[cand])
         return cand[order[:k]].astype(jnp.int32)
+
+    def prepare(self, state, k):
+        # unknown losses -> all-equal weights => pure power-of-d over uniforms
+        losses = state.losses
+        if losses is None:
+            losses = jnp.zeros((state.num_clients,))
+        return selection_state(
+            state.num_clients, kernel=state.kernel, losses=losses,
+            client_sizes=state.client_sizes,
+        )
 
 
 class ClusterSelection(SelectionStrategy):
     """Clustered sampling (Fraboni et al., Alg. 2).
 
-    Agglomerative average-linkage clustering (cosine distance) of client
-    fingerprints (representative gradients / profiles) into ``k`` clusters;
-    each round one client is drawn per cluster with probability ∝ n_c.
-    Clustering runs on host once (or whenever fingerprints refresh).
+    Split into the engine-friendly two phases (DESIGN.md §7):
+
+    * :meth:`fit` — **one-shot, host**: agglomerative average-linkage
+      clustering (cosine distance) of client fingerprints (representative
+      gradients / profiles) into ``k`` clusters.  The labels are cached on
+      the *content* of the fingerprints (not just their shape), so refreshed
+      profiles — e.g. ``FLConfig.reprofile_every`` — correctly re-cluster.
+    * :meth:`select_fn` — **pure, per round**: one client drawn per cluster
+      with probability ∝ n_c via ``jax.random.categorical`` over masked
+      logits; jit/scan-compatible.
     """
 
     name = "cluster"
 
     def __init__(self):
-        self._labels = None
-        self._for_shape = None
+        self._labels: Optional[np.ndarray] = None
+        self._fingerprint = None
 
-    def _cluster(self, feats: np.ndarray, k: int) -> np.ndarray:
+    @staticmethod
+    def _cluster(feats: np.ndarray, k: int) -> np.ndarray:
         c = feats.shape[0]
         norm = np.linalg.norm(feats, axis=1, keepdims=True)
         f = feats / np.maximum(norm, 1e-12)
@@ -173,39 +259,65 @@ class ClusterSelection(SelectionStrategy):
             labels[np.asarray(clusters[a])] = lbl
         return labels
 
-    def select(self, key, state, k):
-        # Fraboni et al. cluster on representative gradients when available.
-        feats = state.grad_profiles if state.grad_profiles is not None else state.profiles
-        assert feats is not None, "ClusterSelection needs client fingerprints"
-        feats = np.asarray(feats)
-        if self._labels is None or self._for_shape != (feats.shape, k):
+    def fit(self, feats, k: int) -> jax.Array:
+        """Cluster fingerprints into ``k`` labels (cached on content)."""
+        feats = np.asarray(feats, np.float32)
+        fp = (feats.shape, k, hashlib.sha1(feats.tobytes()).hexdigest())
+        if self._fingerprint != fp:
             self._labels = self._cluster(feats, k)
-            self._for_shape = (feats.shape, k)
-        sizes = (
-            np.asarray(state.client_sizes)
-            if state.client_sizes is not None
-            else np.ones(state.num_clients)
-        )
-        rng = np.random.default_rng(np.asarray(jax.random.key_data(key)).ravel()[-1].item())
+            self._fingerprint = fp
+        return jnp.asarray(self._labels, jnp.int32)
+
+    def select_fn(self, key, state, k):
+        labels = state.cluster_labels
+        log_sizes = jnp.log(jnp.maximum(state.client_sizes, 1e-30))
+        keys = jax.random.split(key, k)
         picks = []
         for lbl in range(k):
-            members = np.nonzero(self._labels == lbl)[0]
-            if len(members) == 0:  # degenerate cluster — fall back to uniform
-                members = np.arange(state.num_clients)
-            p = sizes[members] / sizes[members].sum()
-            picks.append(int(rng.choice(members, p=p)))
-        return jnp.asarray(picks, jnp.int32)
+            member = labels == lbl
+            logits = jnp.where(member, log_sizes, -jnp.inf)
+            # degenerate/empty cluster — fall back to size-weighted over all
+            logits = jnp.where(jnp.any(member), logits, log_sizes)
+            picks.append(jax.random.categorical(keys[lbl], logits))
+        return jnp.stack(picks).astype(jnp.int32)
+
+    def prepare(self, state, k):
+        # Fraboni et al. cluster on representative gradients when available.
+        feats = (
+            state.grad_profiles if state.grad_profiles is not None else state.profiles
+        )
+        assert feats is not None, "ClusterSelection needs client fingerprints"
+        return selection_state(
+            state.num_clients,
+            kernel=state.kernel,
+            losses=state.losses,
+            client_sizes=state.client_sizes,
+            cluster_labels=self.fit(feats, k),
+        )
+
+
+_REGISTRY = {
+    "fedavg": UniformSelection,
+    "uniform": UniformSelection,
+    "fl-dp3s": DPPSelection,
+    "dpp": DPPSelection,
+    "fl-dp3s-map": functools.partial(DPPSelection, mode="map"),
+    "fedsae": FedSAESelection,
+    "cluster": ClusterSelection,
+    "power-of-choice": PowerOfChoiceSelection,
+}
+
+STRATEGY_NAMES = tuple(sorted(_REGISTRY))
 
 
 def make_strategy(name: str, **kw) -> SelectionStrategy:
-    table = {
-        "fedavg": UniformSelection,
-        "uniform": UniformSelection,
-        "fl-dp3s": DPPSelection,
-        "dpp": DPPSelection,
-        "fl-dp3s-map": lambda: DPPSelection(mode="map"),
-        "fedsae": FedSAESelection,
-        "cluster": ClusterSelection,
-        "power-of-choice": PowerOfChoiceSelection,
-    }
-    return table[name](**kw) if name not in ("fl-dp3s-map",) else table[name]()
+    """Build a strategy by registry name; ``**kw`` forwards uniformly to the
+    constructor for every name (e.g. ``make_strategy('power-of-choice', d=20)``
+    or ``make_strategy('fl-dp3s', mode='map')``)."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown selection strategy {name!r}; known: {list(STRATEGY_NAMES)}"
+        ) from None
+    return factory(**kw)

@@ -1,4 +1,4 @@
-"""Synthetic class-conditional datasets (simulated data gate — DESIGN.md §6).
+"""Synthetic class-conditional datasets (simulated data gate — DESIGN.md §4).
 
 MNIST / Fashion-MNIST are not available offline, so the paper's experiments
 run on a *class-structured* synthetic image dataset with the same interface:

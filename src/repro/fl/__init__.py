@@ -1,5 +1,16 @@
-"""Federated runtime: local updates (eq. 3-5), aggregation (eq. 6), rounds."""
+"""Federated runtime: local updates (eq. 3-5), aggregation (eq. 6), rounds,
+and the scan-compiled federation engine (DESIGN.md §7)."""
 
+from repro.fl.engine import (
+    ServerState,
+    history_from_outputs,
+    init_server_state,
+    make_round_fn,
+    run_many,
+    run_scanned,
+    stack_states,
+    unstack_outputs,
+)
 from repro.fl.rounds import (
     build_client_parallel_round,
     build_fedsgd_step,

@@ -1,0 +1,422 @@
+"""Functional federation engine — N rounds as one compiled program.
+
+The legacy :class:`~repro.fl.trainer.FLTrainer` runs Algorithm 1 as a host
+Python loop: every round pays host↔device round-trips for selection, the loss
+refresh, GEMD, and eval, and every (strategy, seed) pair re-runs the whole
+loop serially.  This module replaces that with a **pure state machine**
+(DESIGN.md §7):
+
+* :class:`ServerState` — one pytree holding everything the server evolves:
+  global params, the PRNG key, the profile kernel, last-known local losses,
+  the (host-prefitted) cluster labels, the simulated client shards, and the
+  round counter.  Because *all* fields are concrete arrays, the state can be
+  carried through ``lax.scan`` and stacked/vmapped across seeds and
+  strategies.
+* :func:`make_round_fn` — builds the pure ``round_fn(state, _) -> (state,
+  metrics)`` for a static :class:`FLConfig`: select cohort (via the pure
+  ``select_fn`` layer of ``repro.core.selection``, dispatched through
+  ``lax.switch`` on ``state.strategy_index``) → build local batches → Mode-A
+  round step (eq. 3-6) → refresh last-known losses → GEMD → (conditional)
+  eval.  Zero host synchronisation anywhere.
+* :func:`run_scanned` — compiles ``num_rounds`` applications of ``round_fn``
+  into a single ``lax.scan``; per-round metrics come back as stacked scan
+  outputs (one device→host transfer for the whole run).
+* :func:`run_many` — vmaps ``run_scanned`` over a stacked batch of states,
+  so S seeds × K strategies of the paper protocol execute as **one** XLA
+  program (the Fig.-1 / Table-1 sweep workload).
+
+Host-only work (agglomerative cluster fitting, profile refresh for
+``reprofile_every``) happens *between* scans: callers run scan segments and
+refresh state on the segment boundary (see ``FLTrainer.run``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import metrics as metrics_lib
+from repro.core import profiles as profiles_lib
+from repro.core import selection as selection_lib
+from repro.core import similarity as similarity_lib
+from repro.fl import rounds as rounds_lib
+
+__all__ = [
+    "FLConfig",
+    "ServerState",
+    "make_round_fn",
+    "run_scanned",
+    "run_many",
+    "stack_states",
+    "unstack_outputs",
+    "init_server_state",
+    "history_from_outputs",
+]
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class FLConfig:
+    """Static federation protocol configuration (hashable trace constants)."""
+
+    num_clients: int = 100
+    clients_per_round: int = 10
+    local_epochs: int = 2  # E in eq. (3)
+    local_batch_size: Optional[int] = None  # None = full-batch GD (paper eq. 4)
+    lr: float = 0.05
+    rounds: int = 100
+    eval_every: int = 5
+    num_classes: int = 10
+    seed: int = 0
+    reprofile_every: Optional[int] = None  # beyond-paper: refresh profiles
+    use_pallas_kernel: bool = False  # pairwise distances through Pallas
+    grad_clip: Optional[float] = None  # stabilises late-round full-batch SGD
+    local_steps: Optional[int] = None  # explicit steps/round (token workloads)
+    sample_with_replacement: bool = False  # iid batch draws instead of perms
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ServerState:
+    """Everything the server evolves across rounds, as one pytree.
+
+    Leading-axis stacking of several states (see :func:`stack_states`) yields
+    a batch state that :func:`run_many` vmaps over — per-seed client shards,
+    per-seed params, and per-combination strategy indices all ride along.
+    """
+
+    params: PyTree  # global model
+    key: jax.Array  # server PRNG key
+    round: jax.Array  # int32 scalar, rounds completed
+    losses: jax.Array  # (C,) last-known local losses
+    kernel: jax.Array  # (C, C) eq.-(14) DPP kernel
+    profiles: jax.Array  # (C, Q) eq.-(11) client profiles
+    cluster_labels: jax.Array  # (C,) int32, host-prefitted (0 if unused)
+    client_xs: jax.Array  # (C, n_c, ...) simulated client shards
+    client_ys: jax.Array  # (C, n_c)
+    client_sizes: jax.Array  # (C,) n_c
+    client_label_dists: jax.Array  # (C, num_classes)
+    global_label_dist: jax.Array  # (num_classes,)
+    strategy_index: jax.Array  # int32 scalar into the round_fn's strategies
+
+    @property
+    def num_clients(self) -> int:
+        return self.losses.shape[0]
+
+    def selection_state(self) -> selection_lib.SelectionState:
+        return selection_lib.SelectionState(
+            kernel=self.kernel,
+            losses=self.losses,
+            client_sizes=self.client_sizes,
+            cluster_labels=self.cluster_labels,
+        )
+
+
+# ----------------------------------------------------------------- batches
+
+
+def _steps_per_round(cfg: FLConfig, n_c: int) -> int:
+    if cfg.local_steps is not None:
+        return cfg.local_steps
+    if cfg.local_batch_size is None:
+        return cfg.local_epochs  # E full-batch passes (paper eq. 4)
+    return cfg.local_epochs * max(1, n_c // cfg.local_batch_size)
+
+
+def make_client_batches(cfg: FLConfig, key, client_xs, client_ys, sel):
+    """Slice the selected clients' data into (C_p, steps, B, ...) batches.
+
+    Pure/jittable; shared by the scanned engine and the legacy trainer loop
+    so both execute bit-identical batch construction.
+    """
+    xs = jnp.take(client_xs, sel, axis=0)
+    ys = jnp.take(client_ys, sel, axis=0)
+    n_c = xs.shape[1]
+    steps = _steps_per_round(cfg, n_c)
+    if cfg.local_batch_size is None:
+        # full-batch: each local step sees the whole local dataset
+        xb = jnp.broadcast_to(xs[:, None], (xs.shape[0], steps) + xs.shape[1:])
+        yb = jnp.broadcast_to(ys[:, None], (ys.shape[0], steps) + ys.shape[1:])
+        return (xb, yb)
+    b = cfg.local_batch_size
+    if cfg.sample_with_replacement:
+        # token-style workloads: iid uniform draws per step (replacement)
+        ids = jax.vmap(
+            lambda k: jax.random.randint(k, (steps, b), 0, n_c)
+        )(jax.random.split(key, xs.shape[0]))
+        xb = jax.vmap(jnp.take, in_axes=(0, 0, None))(xs, ids, 0)
+        yb = jax.vmap(jnp.take, in_axes=(0, 0, None))(ys, ids, 0)
+        return (xb, yb)
+    nb = max(1, n_c // b)
+    perm = jax.vmap(
+        lambda k: jax.random.permutation(k, n_c)
+    )(jax.random.split(key, xs.shape[0]))
+    xs = jnp.take_along_axis(
+        xs, perm.reshape(perm.shape + (1,) * (xs.ndim - 2)), axis=1
+    )
+    ys = jnp.take_along_axis(ys, perm, axis=1)
+    xb = xs[:, : nb * b].reshape(xs.shape[0], nb, b, *xs.shape[2:])
+    yb = ys[:, : nb * b].reshape(ys.shape[0], nb, b)
+    reps = cfg.local_epochs
+    xb = jnp.tile(xb, (1, reps) + (1,) * (xb.ndim - 2))
+    yb = jnp.tile(yb, (1, reps, 1))
+    return (xb, yb)
+
+
+# ---------------------------------------------------------------- round_fn
+
+
+def make_round_fn(
+    cfg: FLConfig,
+    loss_fn: Callable,  # loss_fn(params, x, y) -> scalar
+    strategies: Sequence[selection_lib.SelectionStrategy],
+    accuracy_fn: Optional[Callable] = None,
+    eval_data: Optional[Tuple[jax.Array, jax.Array]] = None,
+    sequential_clients: bool = True,
+) -> Callable[[ServerState, Any], Tuple[ServerState, Dict[str, jax.Array]]]:
+    """Build the pure per-round transition ``round_fn(state, _)``.
+
+    ``strategies`` is the static tuple the traced ``state.strategy_index``
+    dispatches over via ``lax.switch`` — pass one strategy for single runs or
+    the full method grid for :func:`run_many`.  ``accuracy_fn(params, xs, ys)``
+    is evaluated every ``cfg.eval_every`` rounds under ``lax.cond`` (NaN on
+    the other rounds); with ``eval_data=None`` it scores the union training
+    set (the paper's Fig.-1 protocol).
+    """
+    strategies = tuple(strategies)
+    k = cfg.clients_per_round
+    batched_loss = lambda p, batch: loss_fn(p, batch[0], batch[1])
+    loss_of = jax.vmap(loss_fn, in_axes=(None, 0, 0))
+    branches = tuple(
+        functools.partial(
+            lambda strat, key, sstate: strat.select_fn(key, sstate, k), strat
+        )
+        for strat in strategies
+    )
+
+    def round_fn(state: ServerState, _=None):
+        t = state.round + 1
+        key, k_sel, k_batch = jax.random.split(state.key, 3)
+        if len(branches) == 1:
+            sel = branches[0](k_sel, state.selection_state())
+        else:
+            sel = lax.switch(state.strategy_index, branches, k_sel, state.selection_state())
+        batches = make_client_batches(cfg, k_batch, state.client_xs, state.client_ys, sel)
+        weights = jnp.take(state.client_sizes, sel)
+        steps = _steps_per_round(cfg, state.client_xs.shape[1])
+        round_step = rounds_lib.build_client_parallel_round(
+            batched_loss, cfg.lr, steps, grad_clip=cfg.grad_clip,
+            sequential_clients=sequential_clients,
+        )
+        params, mean_loss = round_step(state.params, batches, weights)
+
+        # refresh last-known losses for the selected clients
+        sel_losses = loss_of(
+            params, jnp.take(state.client_xs, sel, 0), jnp.take(state.client_ys, sel, 0)
+        )
+        losses = state.losses.at[sel].set(sel_losses)
+
+        g = metrics_lib.gemd(
+            state.client_label_dists, state.client_sizes, sel, state.global_label_dist
+        )
+
+        if accuracy_fn is None:
+            acc = jnp.float32(jnp.nan)
+        else:
+            if eval_data is not None:
+                exs, eys = eval_data
+            else:
+                exs = state.client_xs.reshape((-1,) + state.client_xs.shape[2:])
+                eys = state.client_ys.reshape(-1)
+            acc = lax.cond(
+                t % cfg.eval_every == 0,
+                lambda p: jnp.asarray(accuracy_fn(p, exs, eys), jnp.float32),
+                lambda p: jnp.float32(jnp.nan),
+                params,
+            )
+
+        new_state = dataclasses.replace(
+            state, params=params, key=key, round=t, losses=losses
+        )
+        out = {
+            "round": t,
+            "acc": acc,
+            "gemd": jnp.asarray(g, jnp.float32),
+            "loss": jnp.asarray(mean_loss, jnp.float32),
+            "selected": sel,
+        }
+        return new_state, out
+
+    return round_fn
+
+
+# ------------------------------------------------------------------ runners
+
+
+@functools.lru_cache(maxsize=64)
+def _scanned(round_fn, num_rounds: int):
+    return jax.jit(
+        lambda state: lax.scan(round_fn, state, None, length=num_rounds)
+    )
+
+
+def run_scanned(
+    round_fn, state: ServerState, num_rounds: int
+) -> Tuple[ServerState, Dict[str, jax.Array]]:
+    """Run ``num_rounds`` rounds as ONE compiled ``lax.scan`` program.
+
+    Returns the final state and the per-round metrics stacked on a leading
+    ``(num_rounds,)`` axis.  Re-invocations with the same ``round_fn`` object
+    and round count reuse the compiled executable.
+    """
+    return _scanned(round_fn, num_rounds)(state)
+
+
+@functools.lru_cache(maxsize=64)
+def _vmapped(round_fn, num_rounds: int):
+    return jax.jit(
+        jax.vmap(lambda state: lax.scan(round_fn, state, None, length=num_rounds))
+    )
+
+
+def run_many(
+    round_fn, stacked_state: ServerState, num_rounds: int
+) -> Tuple[ServerState, Dict[str, jax.Array]]:
+    """Batched simulation: vmap the scanned run over stacked states.
+
+    ``stacked_state`` is a :class:`ServerState` whose every leaf carries a
+    leading batch axis (see :func:`stack_states`) — e.g. S seeds × K
+    strategies flattened to one axis.  One XLA program executes the whole
+    grid; outputs keep the ``(batch, num_rounds, ...)`` layout.
+    """
+    return _vmapped(round_fn, num_rounds)(stacked_state)
+
+
+def stack_states(states: Sequence[ServerState]) -> ServerState:
+    """Stack per-run states leaf-wise onto a leading batch axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_outputs(outputs: Dict[str, jax.Array]) -> List[Dict[str, np.ndarray]]:
+    """Split ``run_many`` outputs back into one per-run metrics dict each."""
+    outs = {k: np.asarray(v) for k, v in outputs.items()}
+    n = next(iter(outs.values())).shape[0]
+    return [{k: v[i] for k, v in outs.items()} for i in range(n)]
+
+
+# -------------------------------------------------------------- state build
+
+
+def init_server_state(
+    cfg: FLConfig,
+    params: PyTree,
+    loss_fn: Callable,
+    feature_fn: Optional[Callable],
+    client_xs,
+    client_ys,
+    strategy: Optional[selection_lib.SelectionStrategy] = None,
+    strategy_index: int = 0,
+    key: Optional[jax.Array] = None,
+    profiles: Optional[jax.Array] = None,
+    kernel: Optional[jax.Array] = None,
+    losses: Optional[jax.Array] = None,
+    cluster_labels: Optional[jax.Array] = None,
+) -> ServerState:
+    """Algorithm-1 initialisation as a :class:`ServerState`.
+
+    Profiles every client once with the fresh global model (Alg. 1 lines
+    2-5), builds the eq.-(14) kernel, takes one loss pass for the initial
+    last-known losses, and — when ``strategy`` is a
+    :class:`~repro.core.selection.ClusterSelection` — runs the one-shot host
+    ``fit`` so the per-round draw is pure.  Any precomputed piece can be
+    passed in to skip recomputation.
+    """
+    client_xs = jnp.asarray(client_xs)
+    client_ys = jnp.asarray(client_ys)
+    c, n_c = client_xs.shape[0], client_xs.shape[1]
+    if profiles is None:
+        assert feature_fn is not None, "need feature_fn to compute profiles"
+        profiles = profiles_lib.profile_all_clients(
+            jax.jit(feature_fn), params, list(client_xs)
+        )
+    if kernel is None:
+        kernel = similarity_lib.kernel_from_profiles(
+            profiles, use_kernel=cfg.use_pallas_kernel
+        )
+    if losses is None:
+        losses = jax.jit(jax.vmap(loss_fn, in_axes=(None, 0, 0)))(
+            params, client_xs, client_ys
+        )
+    if cluster_labels is None:
+        if isinstance(strategy, selection_lib.ClusterSelection):
+            gp = jnp.stack([
+                profiles_lib.representative_gradient_profile(
+                    loss_fn, params, client_xs[i], client_ys[i]
+                )
+                for i in range(c)
+            ])
+            cluster_labels = strategy.fit(gp, cfg.clients_per_round)
+        else:
+            cluster_labels = jnp.zeros((c,), jnp.int32)
+    label_dists = jnp.stack([
+        metrics_lib.label_distribution(client_ys[i], cfg.num_classes)
+        for i in range(c)
+    ])
+    global_dist = metrics_lib.label_distribution(
+        client_ys.reshape(-1), cfg.num_classes
+    )
+    return ServerState(
+        params=params,
+        key=key if key is not None else jax.random.key(cfg.seed),
+        round=jnp.asarray(0, jnp.int32),
+        losses=losses,
+        kernel=kernel,
+        profiles=profiles,
+        cluster_labels=cluster_labels,
+        client_xs=client_xs,
+        client_ys=client_ys,
+        client_sizes=jnp.full((c,), float(n_c)),
+        client_label_dists=label_dists,
+        global_label_dist=global_dist,
+        strategy_index=jnp.asarray(strategy_index, jnp.int32),
+    )
+
+
+# ------------------------------------------------------------------ history
+
+
+def history_from_outputs(
+    outputs: Dict[str, jax.Array],
+    eval_every: int,
+    final_acc: Optional[float] = None,
+) -> Dict[str, List]:
+    """Stacked scan outputs -> the legacy FLTrainer history dict.
+
+    Keeps the legacy recording protocol: one entry per round where
+    ``t % eval_every == 0``, plus the final round.  ``final_acc`` fills the
+    accuracy of a final round that is not an eval round (the scan only
+    evaluates on the eval grid)."""
+    rounds = np.asarray(outputs["round"]).astype(int)
+    acc = np.asarray(outputs["acc"], np.float64)
+    gemd = np.asarray(outputs["gemd"], np.float64)
+    loss = np.asarray(outputs["loss"], np.float64)
+    n = int(rounds[-1])
+    hist: Dict[str, List] = {"round": [], "acc": [], "gemd": [], "loss": []}
+    for i, t in enumerate(rounds):
+        t = int(t)
+        if t % eval_every == 0 or t == n:
+            a = acc[i]
+            if np.isnan(a) and t == n and final_acc is not None:
+                a = final_acc
+            hist["round"].append(t)
+            hist["acc"].append(float(a))
+            hist["gemd"].append(float(gemd[i]))
+            hist["loss"].append(float(loss[i]))
+    return hist

@@ -2,9 +2,16 @@
 
 Simulates the full federation on one host: profiles every client once with
 the freshly initialised global model (Alg. 1 lines 2-5), builds the eq.-(14)
-kernel, then loops: select cohort → vmapped local updates (eq. 3-5) →
+kernel, then runs rounds: select cohort → vmapped local updates (eq. 3-5) →
 eq.-(6) aggregation.  Metrics: training-set accuracy (Fig. 1 protocol), GEMD
 per round (Fig. 2), last-known local losses (FedSAE's signal).
+
+Since the engine refactor (DESIGN.md §7) this class is a thin compatibility
+wrapper over :mod:`repro.fl.engine`: :meth:`run` packs the server knowledge
+into a :class:`~repro.fl.engine.ServerState` and executes all rounds as
+``lax.scan`` segments with zero per-round host round-trips, falling back to
+the legacy Python loop (:meth:`run_legacy`) only for custom strategies that
+don't expose a pure ``select_fn``.
 
 Works for any model exposing ``loss_fn(params, x, y)`` and
 ``feature_fn(params, x) -> (logits, feats)``; the paper's CNN is the default.
@@ -24,7 +31,9 @@ from repro.core import metrics as metrics_lib
 from repro.core import profiles as profiles_lib
 from repro.core import selection as selection_lib
 from repro.core import similarity as similarity_lib
+from repro.fl import engine as engine_lib
 from repro.fl import rounds as rounds_lib
+from repro.fl.engine import FLConfig
 
 __all__ = ["FLConfig", "FLTrainer"]
 
@@ -46,20 +55,40 @@ def _cached_loss_of(loss_fn):
     return jax.jit(jax.vmap(loss_fn, in_axes=(None, 0, 0)))
 
 
-@dataclasses.dataclass
-class FLConfig:
-    num_clients: int = 100
-    clients_per_round: int = 10
-    local_epochs: int = 2  # E in eq. (3)
-    local_batch_size: Optional[int] = None  # None = full-batch GD (paper eq. 4)
-    lr: float = 0.05
-    rounds: int = 100
-    eval_every: int = 5
-    num_classes: int = 10
-    seed: int = 0
-    reprofile_every: Optional[int] = None  # beyond-paper: refresh profiles
-    use_pallas_kernel: bool = False  # pairwise distances through Pallas
-    grad_clip: Optional[float] = None  # stabilises late-round full-batch SGD
+# round_fns are cached across trainers on the *semantics* of the round, not
+# on instance identity, so a benchmark grid (datasets × ξ × seeds) compiles
+# each (method, rounds) scan exactly once — the data rides in ServerState.
+_ROUND_FN_CACHE: Dict = {}
+
+
+def _strategy_sig(s: selection_lib.SelectionStrategy):
+    return (
+        type(s).__module__,
+        type(s).__qualname__,
+        getattr(s, "mode", None),
+        getattr(s, "d", None),
+    )
+
+
+def _cached_round_fn(cfg: FLConfig, loss_fn, accuracy_fn, strategy):
+    key = (
+        loss_fn,
+        accuracy_fn,
+        _strategy_sig(strategy),
+        cfg.clients_per_round,
+        cfg.local_epochs,
+        cfg.local_batch_size,
+        cfg.lr,
+        cfg.grad_clip,
+        cfg.eval_every,
+        cfg.local_steps,
+        cfg.sample_with_replacement,
+    )
+    if key not in _ROUND_FN_CACHE:
+        _ROUND_FN_CACHE[key] = engine_lib.make_round_fn(
+            cfg, loss_fn, (strategy,), accuracy_fn=accuracy_fn
+        )
+    return _ROUND_FN_CACHE[key]
 
 
 class FLTrainer:
@@ -88,6 +117,7 @@ class FLTrainer:
         self.eval_ys = jnp.asarray(eval_ys) if eval_ys is not None else None
         self.accuracy_fn = accuracy_fn
         self.key = jax.random.key(cfg.seed)
+        self._eval_round_fn = None
 
         n_c = client_xs.shape[1]
         self.client_sizes = jnp.full((cfg.num_clients,), float(n_c))
@@ -120,9 +150,7 @@ class FLTrainer:
 
     # ------------------------------------------------------------------
     def _steps_per_round(self, n_c: int) -> int:
-        if self.cfg.local_batch_size is None:
-            return self.cfg.local_epochs  # E full-batch passes (paper eq. 4)
-        return self.cfg.local_epochs * max(1, n_c // self.cfg.local_batch_size)
+        return engine_lib._steps_per_round(self.cfg, n_c)
 
     def _init_profiles(self):
         """Alg. 1 lines 2-5: one-shot FC-1 profiling + kernel construction."""
@@ -145,33 +173,141 @@ class FLTrainer:
 
     def _make_client_batches(self, key, sel: jax.Array):
         """Slice the selected clients' data into (C_p, steps, B, ...) batches."""
-        xs = jnp.take(self.client_xs, sel, axis=0)
-        ys = jnp.take(self.client_ys, sel, axis=0)
-        steps = self._steps_per_round(xs.shape[1])
-        if self.cfg.local_batch_size is None:
-            # full-batch: each local step sees the whole local dataset
-            xb = jnp.broadcast_to(xs[:, None], (xs.shape[0], steps) + xs.shape[1:])
-            yb = jnp.broadcast_to(ys[:, None], (ys.shape[0], steps) + ys.shape[1:])
-            return (xb, yb)
-        b = self.cfg.local_batch_size
-        n_c = xs.shape[1]
-        nb = max(1, n_c // b)
-        perm = jax.vmap(
-            lambda k: jax.random.permutation(k, n_c)
-        )(jax.random.split(key, xs.shape[0]))
-        xs = jnp.take_along_axis(
-            xs, perm.reshape(perm.shape + (1,) * (xs.ndim - 2)), axis=1
+        return engine_lib.make_client_batches(
+            self.cfg, key, self.client_xs, self.client_ys, sel
         )
-        ys = jnp.take_along_axis(ys, perm, axis=1)
-        xb = xs[:, : nb * b].reshape(xs.shape[0], nb, b, *xs.shape[2:])
-        yb = ys[:, : nb * b].reshape(ys.shape[0], nb, b)
-        reps = self.cfg.local_epochs
-        xb = jnp.tile(xb, (1, reps) + (1,) * (xb.ndim - 2))
-        yb = jnp.tile(yb, (1, reps, 1))
-        return (xb, yb)
+
+    # ------------------------------------------------------------------
+    def _supports_engine(self) -> bool:
+        """Pure-selection strategies run scanned; host-only customs fall back."""
+        return (
+            type(self.strategy).select_fn
+            is not selection_lib.SelectionStrategy.select_fn
+        )
+
+    def _cluster_labels(self) -> jax.Array:
+        cfg = self.cfg
+        if isinstance(self.strategy, selection_lib.ClusterSelection):
+            feats = (
+                self.round_state.grad_profiles
+                if self.round_state.grad_profiles is not None
+                else self.round_state.profiles
+            )
+            return self.strategy.fit(feats, cfg.clients_per_round)
+        return jnp.zeros((cfg.num_clients,), jnp.int32)
+
+    def server_state(self) -> engine_lib.ServerState:
+        """Pack the trainer's current server knowledge into a ServerState."""
+        cfg = self.cfg
+        cluster_labels = self._cluster_labels()
+        return engine_lib.ServerState(
+            params=self.params,
+            key=self.key,
+            round=jnp.asarray(self.round_state.round, jnp.int32),
+            losses=self.losses,
+            kernel=self.round_state.kernel,
+            profiles=self.round_state.profiles,
+            cluster_labels=cluster_labels,
+            client_xs=self.client_xs,
+            client_ys=self.client_ys,
+            client_sizes=self.client_sizes,
+            client_label_dists=self.client_label_dists,
+            global_label_dist=self.global_label_dist,
+            strategy_index=jnp.asarray(0, jnp.int32),
+        )
+
+    def round_fn(self):
+        """The engine's pure per-round transition for this trainer."""
+        if self.eval_xs is not None:
+            # held-out eval data lives in the closure -> memoise per trainer
+            # (a fresh closure per call would defeat the engine's compiled-
+            # scan cache and recompile the whole program every run())
+            if self._eval_round_fn is None:
+                self._eval_round_fn = engine_lib.make_round_fn(
+                    self.cfg, self.loss_fn, (self.strategy,),
+                    accuracy_fn=self.accuracy_fn,
+                    eval_data=(self.eval_xs, self.eval_ys),
+                )
+            return self._eval_round_fn
+        return _cached_round_fn(self.cfg, self.loss_fn, self.accuracy_fn, self.strategy)
+
+    def _absorb(self, state: engine_lib.ServerState):
+        """Pull the scanned segment's final state back into trainer fields."""
+        self.params = state.params
+        self.key = state.key
+        self.losses = state.losses
+        self.round_state.losses = self.losses
+        self.round_state.round = int(state.round)
 
     # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None, progress: bool = False) -> Dict[str, List]:
+        """Run rounds through the scanned engine (legacy loop as fallback).
+
+        Profile refreshes (``reprofile_every``) happen on scan-segment
+        boundaries: each segment is one compiled ``lax.scan``, then profiles
+        / kernel / cluster labels are re-fitted on host and the next segment
+        starts from the refreshed state.
+        """
+        cfg = self.cfg
+        rounds = rounds or cfg.rounds
+        if not self._supports_engine():
+            return self.run_legacy(rounds=rounds, progress=progress)
+
+        round_fn = self.round_fn()
+        segment = cfg.reprofile_every or rounds
+        start_round = self.round_state.round
+        done = 0
+        outs: List[Dict] = []
+        state = self.server_state()
+        while done < rounds:
+            n = min(segment, rounds - done)
+            state, seg_outs = engine_lib.run_scanned(round_fn, state, n)
+            outs.append(jax.tree_util.tree_map(np.asarray, seg_outs))
+            done += n
+            if done < rounds and cfg.reprofile_every:
+                self._absorb(state)
+                self._init_profiles()  # host: re-profile + re-fit clusters
+                state = dataclasses.replace(
+                    state,
+                    kernel=self.round_state.kernel,
+                    profiles=self.round_state.profiles,
+                    cluster_labels=self._cluster_labels(),
+                )
+        self._absorb(state)
+        merged = {
+            k: np.concatenate([o[k] for o in outs], axis=0) for k in outs[0]
+        }
+        final_acc = None
+        total = start_round + rounds
+        if total % cfg.eval_every != 0:
+            final_acc = self._evaluate()
+        hist = engine_lib.history_from_outputs(
+            merged, cfg.eval_every, final_acc=final_acc
+        )
+        for k in self.history:
+            self.history[k].extend(hist[k])
+        if progress:
+            for t, a, g, l in zip(
+                hist["round"], hist["acc"], hist["gemd"], hist["loss"]
+            ):
+                print(
+                    f"[{self.strategy.name}] round {t:4d} acc={a:.4f} "
+                    f"gemd={g:.3f} loss={l:.4f}"
+                )
+        return self.history
+
+    def run_legacy(
+        self, rounds: Optional[int] = None, progress: bool = False
+    ) -> Dict[str, List]:
+        """The host loop: one jitted step per round, selection and metrics
+        dispatched from host.  Kept as the oracle for the scanned engine (see
+        ``benchmarks/engine_bench.py``) and for strategies without a pure
+        ``select_fn``.
+
+        Note: selection math is the *current* pure layer for both paths —
+        in particular ``ClusterSelection``'s per-round draw is now a jax
+        categorical (was a host numpy RNG pre-engine), so 'cluster' cohorts
+        differ from pre-engine runs at the same seed (same distribution)."""
         cfg = self.cfg
         rounds = rounds or cfg.rounds
         for t in range(1, rounds + 1):

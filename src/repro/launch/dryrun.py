@@ -84,6 +84,7 @@ class DryRunCase:
     multi_pod: bool
     reduced: bool = False
     accounting: bool = False  # unroll scans so static HLO counts are exact
+    scan_rounds: int = 1  # >1: engine-style lax.scan over N FL rounds
 
     @property
     def mesh_name(self) -> str:
@@ -128,8 +129,14 @@ def _uses_embeds(cfg) -> bool:
     return cfg.arch_type == "vlm"
 
 
-def _train_case(spec, cfg, dims, mesh, multi_pod, steps_unroll=1):
-    """Build (step_fn, example_args_sds) for the training shape."""
+def _train_case(spec, cfg, dims, mesh, multi_pod, steps_unroll=1, scan_rounds=1):
+    """Build (step_fn, example_args_sds) for the training shape.
+
+    ``scan_rounds > 1`` wraps the Mode-A round step the way the federation
+    engine does (``repro.fl.engine``): N rounds compile into one ``lax.scan``
+    program — proving the multi-round engine graph lowers/fits at production
+    shapes, with per-round batches stacked on a leading ``(N,)`` axis.
+    """
     rules = spec.train_rules
     b, s = dims["batch"], dims["seq"]
     uses_embeds = _uses_embeds(cfg)
@@ -183,6 +190,21 @@ def _train_case(spec, cfg, dims, mesh, multi_pod, steps_unroll=1):
                 "tokens": jax.ShapeDtypeStruct((n_clients, steps, local_b, s), jnp.int32)
             }
             batch_specs = {"tokens": P(batch_ax, None, None, None)}
+        if scan_rounds > 1:
+            inner = step
+
+            def step(params, batches, weights):  # noqa: F811
+                def body(p, b):
+                    p2, loss = inner(p, b, weights)
+                    return p2, loss
+
+                return jax.lax.scan(body, params, batches)
+
+            batch_shapes = {
+                k: jax.ShapeDtypeStruct((scan_rounds,) + v.shape, v.dtype)
+                for k, v in batch_shapes.items()
+            }
+            batch_specs = {k: P(None, *v) for k, v in batch_specs.items()}
         batch_sds = _sds(batch_specs, batch_shapes, mesh)
         w_sds = jax.ShapeDtypeStruct(
             (n_clients,), jnp.float32, sharding=NamedSharding(mesh, P(batch_ax))
@@ -264,7 +286,7 @@ def _serve_case(spec, cfg, dims, mesh, multi_pod, prefill: bool):
 # ------------------------------------------------------------------ runner
 
 
-def _compile_once(spec, cfg, dims, mesh, multi_pod, steps_unroll=1):
+def _compile_once(spec, cfg, dims, mesh, multi_pod, steps_unroll=1, scan_rounds=1):
     """Lower+compile one variant; return compiled.
 
     Buffers are donated the way the production loop would donate them
@@ -273,7 +295,8 @@ def _compile_once(spec, cfg, dims, mesh, multi_pod, steps_unroll=1):
     """
     if dims["kind"] == "train":
         step, args = _train_case(spec, cfg, dims, mesh, multi_pod,
-                                 steps_unroll=steps_unroll)
+                                 steps_unroll=steps_unroll,
+                                 scan_rounds=scan_rounds)
         rules = spec.train_rules
         if spec.fl.mode == "client_parallel":
             # the client axis owns 'data'; activation constraints inside the
@@ -288,7 +311,9 @@ def _compile_once(spec, cfg, dims, mesh, multi_pod, steps_unroll=1):
         )
         rules = spec.serve_rules
         donate = (2,)  # caches
-    with jax.set_mesh(mesh), sh.use_rules(rules, multi_pod):
+    # jax.set_mesh is >= 0.5; entering the Mesh object is the older spelling
+    mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+    with mesh_ctx, sh.use_rules(rules, multi_pod):
         compiled = jax.jit(step, donate_argnums=donate).lower(*args).compile()
     return compiled
 
@@ -355,6 +380,15 @@ def run_case(case: DryRunCase, dump_hlo: Optional[str] = None,
         "fl_mode": spec.fl.mode if dims["kind"] == "train" else "serve",
         "reduced": case.reduced,
         "accounting": case.accounting,
+        # the scan wrapper only applies to client_parallel train compiles;
+        # record the EFFECTIVE value so sweep records stay comparable
+        "scan_rounds": case.scan_rounds
+        if (
+            dims["kind"] == "train"
+            and spec.fl.mode == "client_parallel"
+            and not case.accounting
+        )
+        else 1,
     }
     try:
         if case.accounting:
@@ -367,7 +401,8 @@ def run_case(case: DryRunCase, dump_hlo: Optional[str] = None,
             rec["total_s"] = round(time.time() - t0, 2)
             return rec
 
-        compiled = _compile_once(spec, cfg, dims, mesh, case.multi_pod)
+        compiled = _compile_once(spec, cfg, dims, mesh, case.multi_pod,
+                                 scan_rounds=case.scan_rounds)
         rec["compile_s"] = round(time.time() - t0, 2)
         rec["params"] = int(
             sum(
@@ -433,13 +468,17 @@ def main():
                     help="reduced configs + tiny shapes (CI smoke)")
     ap.add_argument("--accounting", action="store_true",
                     help="unroll scans for exact static HLO counts (§Roofline)")
+    ap.add_argument("--scan-rounds", type=int, default=1,
+                    help="compile N FL rounds as one engine-style lax.scan "
+                         "(client_parallel train shapes; DESIGN.md §7)")
     ap.add_argument("--out", default=None, help="append JSONL records here")
     ap.add_argument("--dump-hlo", default=None)
     args = ap.parse_args()
 
     if args.sweep:
         cases = [
-            DryRunCase(a, s, mp, reduced=args.reduced, accounting=args.accounting)
+            DryRunCase(a, s, mp, reduced=args.reduced, accounting=args.accounting,
+                       scan_rounds=args.scan_rounds)
             for a in ARCH_NAMES
             for s in SHAPE_NAMES
             for mp in ((False, True) if args.both_meshes else (args.multi_pod,))
@@ -449,7 +488,7 @@ def main():
         meshes = (False, True) if args.both_meshes else (args.multi_pod,)
         cases = [
             DryRunCase(args.arch, args.shape, mp, reduced=args.reduced,
-                       accounting=args.accounting)
+                       accounting=args.accounting, scan_rounds=args.scan_rounds)
             for mp in meshes
         ]
 

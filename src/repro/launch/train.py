@@ -22,8 +22,9 @@ import numpy as np
 from repro import optim as optim_lib
 from repro.checkpoint import save
 from repro.configs import ARCH_NAMES, get_arch
-from repro.core import RoundState, kernel_from_profiles, make_strategy
+from repro.core import make_strategy
 from repro.data import make_token_dataset
+from repro.fl import engine as engine_lib
 from repro.fl import rounds as rounds_lib
 from repro.models import transformer as T
 
@@ -46,11 +47,23 @@ def _token_clients(cfg, num_clients, docs_per_client, seq, seed=0):
 
 
 def run_fl(args):
+    """Federated LM training through the scanned engine (DESIGN.md §7).
+
+    Algorithm-1 init (profiles → eq.-14 kernel) runs once on host; then all
+    ``--rounds`` rounds — selection, per-client local steps, aggregation,
+    loss refresh, topic-GEMD — execute as ONE compiled ``lax.scan``.
+    """
     spec = get_arch(args.arch)
     cfg = spec.model.reduced(param_dtype="float32", dtype="float32", remat=False)
     params = T.init_params(jax.random.key(args.seed), cfg)
     clients = _token_clients(cfg, args.clients, args.docs_per_client, args.seq)
     c, n_docs, _ = clients.shape
+    num_topics = min(10, args.clients)
+    # per-doc topic labels (one topic per client) — the engine's GEMD then
+    # measures how topic-representative each selected cohort is
+    topics = np.stack(
+        [np.full((n_docs,), ci % num_topics, np.int32) for ci in range(c)]
+    )
 
     # --- Alg. 1 init: profile every client once, build the eq.-14 kernel ---
     feats = []
@@ -58,36 +71,35 @@ def run_fl(args):
     for ci in range(c):
         feats.append(feat_fn(params, jnp.asarray(clients[ci][: min(8, n_docs)])))
     profiles = jnp.stack(feats)
-    state = RoundState(
-        num_clients=c,
-        profiles=profiles,
-        kernel=kernel_from_profiles(profiles),
-        client_sizes=jnp.full((c,), float(n_docs)),
-        losses=jnp.ones((c,)),
-    )
     strategy = make_strategy(args.selection)
 
-    loss_fn = lambda p, batch: T.lm_loss(cfg, p, batch)
-    round_step = jax.jit(
-        rounds_lib.build_client_parallel_round(loss_fn, spec.fl.lr, args.local_steps)
+    loss_fn = lambda p, x, y: T.lm_loss(cfg, p, x)  # topics only feed GEMD
+    flcfg = engine_lib.FLConfig(
+        num_clients=c,
+        clients_per_round=args.per_round,
+        local_batch_size=args.local_batch,
+        local_steps=args.local_steps,
+        sample_with_replacement=True,
+        lr=spec.fl.lr,
+        rounds=args.rounds,
+        eval_every=max(args.log_every, 1),
+        num_classes=num_topics,
+        seed=args.seed,
     )
-    key = jax.random.key(args.seed)
+    state = engine_lib.init_server_state(
+        flcfg, params, loss_fn, None, clients, topics,
+        strategy=strategy, profiles=profiles, losses=jnp.ones((c,)),
+    )
+    round_fn = engine_lib.make_round_fn(flcfg, loss_fn, (strategy,))
+    state, outs = engine_lib.run_scanned(round_fn, state, args.rounds)
+    sels = np.asarray(outs["selected"])
+    losses = np.asarray(outs["loss"])
+    gemds = np.asarray(outs["gemd"])
     for t in range(1, args.rounds + 1):
-        key, k_sel, k_b = jax.random.split(key, 3)
-        sel = np.asarray(strategy.select(k_sel, state, args.per_round))
-        batch = []
-        for ci in sel:
-            ids = jax.random.choice(
-                jax.random.fold_in(k_b, int(ci)), n_docs,
-                shape=(args.local_steps, args.local_batch), replace=True,
-            )
-            batch.append(clients[ci][np.asarray(ids)])
-        batch = jnp.asarray(np.stack(batch))  # (C_p, steps, B, S)
-        weights = jnp.full((len(sel),), float(n_docs))
-        params, loss = round_step(params, batch, weights)
         if t % args.log_every == 0 or t == args.rounds:
-            print(f"[fl:{args.selection}] round {t:4d} sel={sel.tolist()} "
-                  f"loss={float(loss):.4f}")
+            print(f"[fl:{args.selection}] round {t:4d} sel={sels[t - 1].tolist()} "
+                  f"loss={losses[t - 1]:.4f} gemd={gemds[t - 1]:.3f}")
+    params = state.params
     if args.ckpt:
         save(args.ckpt, args.rounds, params)
         print(f"checkpoint -> {args.ckpt}")

@@ -3,10 +3,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
 
-from repro.core import metrics, selection, similarity
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core import metrics, selection, similarity  # noqa: E402
 
 
 def _state(c=20, q=6, seed=0, with_losses=True):

@@ -5,8 +5,9 @@ All kernels run in interpret mode on CPU (TPU is the compile target)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.kernels.flash_attention import ops as flash_ops
 from repro.kernels.flash_attention import ref as flash_ref

@@ -1,0 +1,127 @@
+"""Registry + pure-selection tests (no optional deps — always collected).
+
+Covers every ``make_strategy`` name, uniform kwargs forwarding, the pure
+``select_fn`` layer under jit, and the content-based cluster-cache
+invalidation regression (labels used to be cached on fingerprint *shape*
+only, so refreshed profiles silently never re-clustered)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import selection, similarity
+
+
+def _sstate(c=20, q=6, seed=0, k_clusters=None):
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray(rng.normal(size=(c, q)).astype(np.float32))
+    labels = None
+    if k_clusters is not None:
+        labels = jnp.asarray(np.arange(c) % k_clusters, jnp.int32)
+    return selection.selection_state(
+        c,
+        kernel=similarity.kernel_from_profiles(f),
+        losses=jnp.asarray(rng.uniform(0.1, 3.0, size=(c,)).astype(np.float32)),
+        client_sizes=jnp.full((c,), 50.0),
+        cluster_labels=labels,
+    )
+
+
+def test_make_strategy_every_name_constructs():
+    for name in selection.STRATEGY_NAMES:
+        s = selection.make_strategy(name)
+        assert isinstance(s, selection.SelectionStrategy), name
+
+
+def test_make_strategy_kwargs_forward_uniformly():
+    assert selection.make_strategy("power-of-choice", d=7).d == 7
+    assert selection.make_strategy("fl-dp3s", mode="map").mode == "map"
+    assert selection.make_strategy("dpp", mode="sample").mode == "sample"
+    # the fl-dp3s-map alias pre-binds mode but still accepts no extra kwargs
+    assert selection.make_strategy("fl-dp3s-map").mode == "map"
+    assert selection.make_strategy("fl-dp3s-map").name == "fl-dp3s-map"
+
+
+def test_make_strategy_unknown_name_raises():
+    with pytest.raises(KeyError, match="unknown selection strategy"):
+        selection.make_strategy("nope")
+
+
+def test_every_strategy_select_fn_is_pure_and_jittable():
+    k = 5
+    for name in selection.STRATEGY_NAMES:
+        s = selection.make_strategy(name)
+        st = _sstate(k_clusters=k)
+        jitted = jax.jit(lambda key, ss, s=s: s.select_fn(key, ss, k))
+        idx = np.asarray(jitted(jax.random.key(1), st))
+        assert idx.shape == (k,), name
+        assert len(set(idx.tolist())) == k, (name, idx)
+        assert (idx >= 0).all() and (idx < st.num_clients).all(), name
+        # pure: same key, same state -> same cohort
+        idx2 = np.asarray(jitted(jax.random.key(1), st))
+        np.testing.assert_array_equal(idx, idx2, err_msg=name)
+
+
+def test_power_of_choice_d_limits_candidates():
+    s = selection.make_strategy("power-of-choice", d=3)
+    st = _sstate(c=30)
+    idx = np.asarray(s.select_fn(jax.random.key(0), st, 3))
+    assert len(set(idx.tolist())) == 3
+    # d > C clips to C without error
+    big = selection.make_strategy("power-of-choice", d=10_000)
+    idx = np.asarray(big.select_fn(jax.random.key(0), st, 5))
+    assert len(set(idx.tolist())) == 5
+
+
+def test_cluster_fit_invalidates_on_content():
+    """Regression: same-shape, different-content fingerprints must re-fit
+    (labels were cached on ``(shape, k)`` only, so a reprofile with unchanged
+    shapes silently kept the stale clustering)."""
+    rng = np.random.default_rng(0)
+    centers = 5.0 * np.eye(3, 4)
+    blobs = [c + rng.normal(0, 0.05, size=(4, 4)) for c in centers]
+    feats = np.concatenate(blobs).astype(np.float32)  # clients 0-3|4-7|8-11
+    strat = selection.ClusterSelection()
+    labels1 = np.asarray(strat.fit(feats, 3))
+    assert labels1[0] == labels1[3] and labels1[0] != labels1[8]
+    # same shape, new content: clients 0-1 now sit in blob 2's location
+    feats2 = feats.copy()
+    feats2[[0, 1]] = centers[2] + rng.normal(0, 0.05, size=(2, 4))
+    labels2 = np.asarray(strat.fit(feats2.astype(np.float32), 3))
+    assert labels2[0] == labels2[8], (labels1, labels2)  # re-clustered
+    assert labels2[0] != labels2[2], (labels1, labels2)
+    # identical content -> served from the cache, identical labels
+    again = np.asarray(strat.fit(feats2.astype(np.float32), 3))
+    np.testing.assert_array_equal(labels2, again)
+
+
+def test_cluster_select_fn_one_pick_per_cluster():
+    c, k = 12, 3
+    st = selection.selection_state(
+        c,
+        client_sizes=jnp.ones((c,)),
+        cluster_labels=jnp.asarray(np.arange(c) % k, jnp.int32),
+    )
+    strat = selection.ClusterSelection()
+    for i in range(10):
+        idx = np.asarray(strat.select_fn(jax.random.key(i), st, k))
+        assert sorted(int(j) % k for j in idx) == [0, 1, 2]
+
+
+def test_legacy_select_wrapper_matches_pure_path():
+    """select(key, RoundState) must equal prepare() + select_fn(key, ...)."""
+    rng = np.random.default_rng(4)
+    f = jnp.asarray(rng.normal(size=(15, 5)).astype(np.float32))
+    rs = selection.RoundState(
+        num_clients=15,
+        kernel=similarity.kernel_from_profiles(f),
+        profiles=f,
+        losses=jnp.asarray(rng.uniform(0.1, 2.0, size=(15,)).astype(np.float32)),
+        client_sizes=jnp.full((15,), 10.0),
+    )
+    for name in selection.STRATEGY_NAMES:
+        s = selection.make_strategy(name)
+        a = np.asarray(s.select(jax.random.key(7), rs, 4))
+        b = np.asarray(s.select_fn(jax.random.key(7), s.prepare(rs, 4), 4))
+        np.testing.assert_array_equal(a, b, err_msg=name)
