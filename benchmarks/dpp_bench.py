@@ -1,0 +1,200 @@
+"""Spectral-cache benchmark: scanned FL-DP³S rounds/sec, eigh-per-round vs
+the cached O(k²·C) draw, plus fused-vs-jnp kernel-build latency.
+
+The workload is the engine's scanned federation round (selection → local
+step → aggregation → loss refresh → GEMD) on a deliberately tiny linear
+model, so the measurement isolates the *selection* cost the spectral cache
+amortises: the baseline (``DPPSelection(use_cache=False)``) re-runs the
+O(C³) ``eigh`` inside every scanned round, the cached path
+(``DPPSelection()``) draws from the ``ServerState.eig_state`` computed once
+at init.  Both paths must pick **bit-identical cohorts** for the same keys —
+asserted per federation size.
+
+Writes ``BENCH_dpp.json`` (repo root).  ``--smoke`` runs tiny shapes with no
+perf assertions (CI keeps the harness from rotting):
+
+    PYTHONPATH=src python -m benchmarks.dpp_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dpp, selection, similarity
+from repro.fl import engine
+
+# smoke mode writes to a separate path so the CI harness check can never
+# clobber a real full-run benchmark record
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_dpp.json")
+SMOKE_OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_dpp_smoke.json")
+
+FEAT, N_C, NUM_CLASSES = 16, 4, 4
+
+
+def linear_loss(params, x, y):
+    logits = x @ params["w"] + params["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+
+def build_state(c: int, k: int, seed: int = 0) -> engine.ServerState:
+    """A selection-bound ServerState: tiny linear model, C clients."""
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(c, N_C, FEAT)).astype(np.float32))
+    ys = jnp.asarray(rng.integers(0, NUM_CLASSES, size=(c, N_C)), jnp.int32)
+    params = {
+        "w": jnp.asarray(0.01 * rng.normal(size=(FEAT, NUM_CLASSES)).astype(np.float32)),
+        "b": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+    profiles = xs.mean(axis=1)
+    kernel = similarity.kernel_from_profiles(profiles)
+    label_dists = jax.nn.one_hot(ys, NUM_CLASSES).mean(axis=1)
+    losses = jax.vmap(linear_loss, in_axes=(None, 0, 0))(params, xs, ys)
+    return engine.ServerState(
+        params=params,
+        key=jax.random.key(seed),
+        round=jnp.asarray(0, jnp.int32),
+        losses=losses,
+        kernel=kernel,
+        profiles=profiles,
+        eig_state=dpp.kdpp_sampler_state(kernel, k),
+        cluster_labels=jnp.zeros((c,), jnp.int32),
+        client_xs=xs,
+        client_ys=ys,
+        client_sizes=jnp.full((c,), float(N_C)),
+        client_label_dists=label_dists,
+        global_label_dist=label_dists.mean(axis=0),
+        strategy_index=jnp.asarray(0, jnp.int32),
+    )
+
+
+def _timed_scan(round_fn, state, rounds, reps: int = 1):
+    """Compile (warm run), then time ``reps`` scanned executions (best-of)."""
+    out = engine.run_scanned(round_fn, state, rounds)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = engine.run_scanned(round_fn, state, rounds)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out[1]
+
+
+def bench_rounds(c: int, k: int, rounds: int) -> dict:
+    cfg = engine.FLConfig(
+        num_clients=c, clients_per_round=k, local_epochs=1, lr=0.1,
+        rounds=rounds, eval_every=10, num_classes=NUM_CLASSES, seed=0,
+    )
+    state = build_state(c, k)
+    jax.block_until_ready(state)
+    fns = {
+        name: engine.make_round_fn(cfg, linear_loss, (strat,))
+        for name, strat in (
+            ("baseline", selection.DPPSelection(use_cache=False)),
+            ("cached", selection.DPPSelection()),
+        )
+    }
+    row = {"rounds": rounds}
+    selected = {}
+    reps = 5 if c <= 256 else 1  # small-C runs are fast but noisy
+    for name, fn in fns.items():
+        dt, outs = _timed_scan(fn, state, rounds, reps=reps)
+        row[name] = rounds / dt
+        selected[name] = np.asarray(outs["selected"])
+    row["speedup"] = row["cached"] / row["baseline"]
+    # same keys, same kernel -> the cached draw must pick identical cohorts
+    row["bit_identical"] = bool(
+        np.array_equal(selected["baseline"], selected["cached"])
+    )
+    assert row["bit_identical"], f"C={c}: cached selections diverged from baseline"
+    return row
+
+
+def bench_kernel_build(c: int, q: int) -> dict:
+    from repro.kernels.gram import ops as gram_ops
+
+    rng = np.random.default_rng(0)
+    f = jnp.asarray(rng.normal(size=(c, q)).astype(np.float32))
+    jnp_fn = jax.jit(lambda x: similarity.kernel_from_profiles(x))
+    out = {"C": c, "Q": q, "interpret_mode": jax.default_backend() != "tpu"}
+    for name, fn in (("jnp", jnp_fn), ("fused_pallas", gram_ops.kernel_from_profiles)):
+        jax.block_until_ready(fn(f))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(f))
+        out[f"{name}_ms"] = (time.perf_counter() - t0) * 1e3
+    # numerical contract, always checked
+    err = float(
+        jnp.max(jnp.abs(gram_ops.kernel_from_profiles(f) - jnp_fn(f)))
+    )
+    out["max_abs_err"] = err
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny shapes, no perf assertions (CI harness check)",
+    )
+    args = ap.parse_args()
+
+    k = 8
+    if args.smoke:
+        grid = {16: 2, 32: 2}
+        kb = bench_kernel_build(32, 16)
+    else:
+        grid = {64: 20, 256: 10, 1024: 4, 4096: 2}
+        kb = bench_kernel_build(256, 64)
+
+    report = {
+        "smoke": args.smoke,
+        "backend": jax.default_backend(),
+        "k": k,
+        "scanned_rounds_per_sec": {},
+        "kernel_build_ms": kb,
+    }
+    for c, rounds in grid.items():
+        row = bench_rounds(c, k, rounds)
+        report["scanned_rounds_per_sec"][str(c)] = row
+        print(
+            f"C={c:5d}  baseline={row['baseline']:8.2f} r/s  "
+            f"cached={row['cached']:8.2f} r/s  speedup={row['speedup']:6.1f}x  "
+            f"bit_identical={row['bit_identical']}"
+        )
+    # acceptance gate (recorded, engine_bench-style): >=5x at C >= 512 with
+    # bit-identical cohorts everywhere — smoke shapes never reach the gate
+    report["target_speedup"] = 5.0
+    gated = [
+        row for c, row in report["scanned_rounds_per_sec"].items() if int(c) >= 512
+    ]
+    report["ok"] = all(
+        r["bit_identical"] for r in report["scanned_rounds_per_sec"].values()
+    ) and all(r["speedup"] >= report["target_speedup"] for r in gated)
+    if not report["ok"]:
+        for c, row in report["scanned_rounds_per_sec"].items():
+            if int(c) >= 512 and row["speedup"] < report["target_speedup"]:
+                print(f"FAIL: speedup at C={c} below 5x: {row['speedup']:.1f}")
+    print(
+        f"kernel build C={kb['C']} Q={kb['Q']}: jnp={kb['jnp_ms']:.2f} ms, "
+        f"fused={kb['fused_pallas_ms']:.2f} ms "
+        f"(interpret={kb['interpret_mode']} — the fused win is a TPU story; "
+        f"CPU runs the kernel body under the Pallas interpreter)"
+    )
+    out_path = SMOKE_OUT_PATH if args.smoke else OUT_PATH
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"ok={report['ok']}  wrote {os.path.abspath(out_path)}")
+    if not args.smoke and not report["ok"]:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,11 +4,14 @@ The paper's primary contribution as a composable JAX module — see DESIGN.md §
 """
 
 from repro.core.dpp import (
+    KDPPSamplerState,
     elementary_symmetric,
     greedy_map_kdpp,
     kdpp_log_prob,
+    kdpp_sampler_state,
     log_det_subset,
     sample_kdpp,
+    sample_kdpp_from_eigh,
 )
 from repro.core.metrics import cohort_label_distribution, gemd, label_distribution
 from repro.core.profiles import (

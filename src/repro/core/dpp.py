@@ -4,11 +4,21 @@ This is the selection engine of FL-DP3S (paper eq. (12)-(13)): given a PSD
 similarity kernel ``L`` over ``C`` clients, sample a subset of fixed size
 ``k = C_p`` with probability proportional to ``det(L_Y)``.
 
-Everything here is jit-compatible (static ``k``); the eigendecomposition uses
-``jnp.linalg.eigh``. Two samplers are provided:
+The sampler is factored into a **spectral cache** and a **cheap per-round
+draw** so that callers who keep the kernel fixed between reprofile boundaries
+(the federation engine, ``repro.fl.engine``) never pay the O(C³) ``eigh``
+inside the scanned round:
 
-* :func:`sample_kdpp` — exact k-DPP sampling (two-phase eigenvector algorithm,
-  Kulesza & Taskar Alg. 8 specialised to fixed cardinality).
+* :func:`kdpp_sampler_state` — one ``jnp.linalg.eigh`` plus the elementary-
+  symmetric-polynomial table, packed into a :class:`KDPPSamplerState` pytree.
+  Computed once per kernel refresh; O(C³) but amortised over all rounds of a
+  reprofile segment.
+* :func:`sample_kdpp_from_eigh` — a pure draw from the cached spectrum:
+  phase 1 walks the precomputed ESP table (O(C)), phase 2 samples the k items
+  with rank-1 Householder orthogonal-complement conditioning (O(k²·C) total,
+  bit-reproducible).  jit/vmap/scan-compatible with static ``k``.
+* :func:`sample_kdpp` — the legacy one-shot convenience: decompose + draw in
+  one call.  Bit-identical to the two-step path given the same key.
 * :func:`greedy_map_kdpp` — deterministic greedy MAP inference (Chen et al.,
   NeurIPS'18 fast greedy MAP), a beyond-paper variant that is O(C·k) per step,
   device-friendly and reproducible — useful at serving scale.
@@ -16,6 +26,7 @@ Everything here is jit-compatible (static ``k``); the eigendecomposition uses
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -23,12 +34,28 @@ import jax.numpy as jnp
 from jax import lax
 
 __all__ = [
+    "KDPPSamplerState",
     "elementary_symmetric",
-    "sample_kdpp",
-    "greedy_map_kdpp",
-    "log_det_subset",
+    "identity_sampler_state",
     "kdpp_log_prob",
+    "kdpp_sampler_state",
+    "log_det_subset",
+    "greedy_map_kdpp",
+    "sample_kdpp",
+    "sample_kdpp_from_eigh",
+    "sampler_dtype",
 ]
+
+
+def sampler_dtype() -> jnp.dtype:
+    """The float dtype the sampler runs in: float64 under x64, else float32.
+
+    Shared dtype-promotion helper for the spectral cache and the one-shot
+    path (replaces the deprecated ``jax.config.read("jax_enable_x64")``
+    probe): ``canonicalize_dtype`` maps float64 onto the widest enabled
+    float type.
+    """
+    return jax.dtypes.canonicalize_dtype(jnp.float64)
 
 
 def elementary_symmetric(lam: jax.Array, k: int) -> jax.Array:
@@ -53,24 +80,94 @@ def elementary_symmetric(lam: jax.Array, k: int) -> jax.Array:
     return e  # (k+1, N+1)
 
 
-def _phase1_select_eigenvectors(key: jax.Array, lam: jax.Array, k: int) -> jax.Array:
+# ------------------------------------------------------------ spectral cache
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KDPPSamplerState:
+    """Everything :func:`sample_kdpp_from_eigh` needs — one eigh, many draws.
+
+    ``lam`` holds the clipped eigenvalues *after* the scale normalisation
+    phase 1 uses for stability (divide by mean |λ|), so ``esp`` and ``lam``
+    share one scale and a draw touches neither the kernel nor ``eigh``.
+    All fields are concrete arrays, so the state threads through
+    ``lax.scan`` / ``vmap`` and stacks across a run grid.
+    """
+
+    lam: jax.Array  # (C,) normalised non-negative eigenvalues
+    vecs: jax.Array  # (C, C) orthonormal eigenvectors (columns)
+    esp: jax.Array  # (k+1, C+1) elementary-symmetric table of ``lam``
+
+    @property
+    def num_items(self) -> int:
+        return self.lam.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.esp.shape[0] - 1
+
+
+def _sampler_state(kernel: jax.Array, k: int) -> KDPPSamplerState:
+    kernel = kernel.astype(sampler_dtype())
+    lam, vecs = jnp.linalg.eigh(kernel)
+    lam = jnp.maximum(lam, 0.0)  # clip tiny negative eigenvalues
+    lam = lam / jnp.maximum(jnp.mean(jnp.abs(lam)), 1e-30)
+    return KDPPSamplerState(
+        lam=lam, vecs=vecs, esp=elementary_symmetric(lam, k)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def kdpp_sampler_state(kernel: jax.Array, k: int) -> KDPPSamplerState:
+    """Spectral cache for the k-DPP on PSD ``kernel``: the one O(C³) step.
+
+    Compute once per kernel refresh (``init_server_state`` /
+    ``reprofile_every`` boundaries in the engine); every subsequent draw via
+    :func:`sample_kdpp_from_eigh` is O(k²·C).
+    """
+    return _sampler_state(kernel, k)
+
+
+@functools.partial(jax.jit, static_argnames=("num_items", "k"))
+def identity_sampler_state(num_items: int, k: int) -> KDPPSamplerState:
+    """The spectral cache of the identity kernel, built in O(k·C) (no eigh).
+
+    Used as the neutral ``SelectionState`` default for strategies that never
+    draw from a DPP — same pytree structure as a real cache, so the engine's
+    ``lax.switch`` branches all consume one state layout.
+    """
+    dt = sampler_dtype()
+    lam = jnp.ones((num_items,), dt)
+    return KDPPSamplerState(
+        lam=lam,
+        vecs=jnp.eye(num_items, dtype=dt),
+        esp=elementary_symmetric(lam, k),
+    )
+
+
+# ------------------------------------------------------------------ phases
+
+
+def _phase1_select_eigenvectors(
+    key: jax.Array, lam: jax.Array, esp: jax.Array, k: int
+) -> jax.Array:
     """Phase 1: choose exactly ``k`` eigenvectors; returns a bool mask (N,).
 
     Iterates n = N..1; eigenvector n is kept with probability
     ``lam_n * E[r-1, n-1] / E[r, n]`` where ``r`` is the number of vectors
-    still to pick.  Scale-invariant in ``lam`` (we normalise for stability).
+    still to pick.  ``lam``/``esp`` come precomputed from the sampler state
+    (one shared normalised scale), so this is O(N) per draw.
     """
     n = lam.shape[0]
-    lam = lam / jnp.maximum(jnp.mean(jnp.abs(lam)), 1e-30)
-    e = elementary_symmetric(lam, k)  # (k+1, N+1)
 
     def body(carry, idx):
         key, rem = carry
         # idx runs 0..N-1 mapping to n = N-idx
         nn = n - idx
         key, sub = jax.random.split(key)
-        denom = e[rem, nn]
-        num = lam[nn - 1] * e[jnp.maximum(rem - 1, 0), nn - 1]
+        denom = esp[rem, nn]
+        num = lam[nn - 1] * esp[jnp.maximum(rem - 1, 0), nn - 1]
         p = jnp.where(denom > 0, num / denom, 0.0)
         # Force-take when we must (rem == nn) and never take when rem == 0.
         p = jnp.where(rem == nn, 1.0, p)
@@ -88,28 +185,14 @@ def _phase2_sample_items(key: jax.Array, v_sel: jax.Array, k: int) -> jax.Array:
     """Phase 2: sample ``k`` items from the elementary DPP given by ``v_sel``.
 
     ``v_sel`` is (N, k) whose columns are the selected eigenvectors (already
-    orthonormal).  Returns int32 indices of shape (k,).  Uses the standard
-    conditioning step: after picking item ``i`` via p(i) ∝ Σ_c V[i, c]^2,
-    project V onto the complement of e_i and re-orthonormalise (masked
-    modified Gram-Schmidt keeps shapes static).
+    orthonormal).  Returns int32 indices of shape (k,).  After picking item
+    ``i`` via p(i) ∝ Σ_c V[i, c]², the subspace is conditioned on the
+    complement of e_i with one **rank-1 Householder reflection** in
+    coefficient space: H maps row i of V onto a single pivot column, so
+    ``V ← V·H`` (an O(k·N) rank-1 update) followed by zeroing that column
+    leaves an exactly orthonormal basis of span(V) ∩ e_i^⊥.  O(k²·N) total —
+    no per-step Gram-Schmidt re-orthonormalisation — and bit-reproducible.
     """
-    n = v_sel.shape[0]
-
-    def gram_schmidt(v):
-        # Masked MGS over the k columns; zero columns stay zero.
-        def gs_col(v, c):
-            col = v[:, c]
-            def gs_prev(col, j):
-                prev = v[:, j]
-                coef = jnp.where(j < c, jnp.dot(prev, col), 0.0)
-                return col - coef * prev, None
-            col, _ = lax.scan(gs_prev, col, jnp.arange(v.shape[1]))
-            nrm = jnp.linalg.norm(col)
-            col = jnp.where(nrm > 1e-8, col / jnp.maximum(nrm, 1e-30), jnp.zeros_like(col))
-            return v.at[:, c].set(col), None
-
-        v, _ = lax.scan(gs_col, v, jnp.arange(v.shape[1]))
-        return v
 
     def body(carry, _):
         key, v = carry
@@ -117,37 +200,58 @@ def _phase2_sample_items(key: jax.Array, v_sel: jax.Array, k: int) -> jax.Array:
         weights = jnp.sum(v * v, axis=1)  # (N,)
         logits = jnp.log(jnp.maximum(weights, 1e-30))
         i = jax.random.categorical(k_i, logits)
-        # Column with the largest |V[i, c]| to pivot on.
-        row = v[i, :]
-        c_star = jnp.argmax(jnp.abs(row))
-        pivot = v[:, c_star]
-        denom = jnp.where(jnp.abs(row[c_star]) > 1e-30, row[c_star], 1.0)
-        v = v - jnp.outer(pivot, row / denom)
-        v = v.at[:, c_star].set(jnp.zeros((n,), v.dtype))
-        v = gram_schmidt(v)
+        row = v[i, :]  # (k,) coefficients of e_i in the current basis
+        c_star = jnp.argmax(jnp.abs(row))  # pivot column (stability)
+        # Householder u = row + sign(row_c)·‖row‖·e_c ; H = I − 2uuᵀ/‖u‖².
+        # H·row = ∓‖row‖·e_c, so (V·H) has row i supported on the pivot
+        # column only; columns already consumed (zero) have u = 0 and stay
+        # untouched.
+        u = row.at[c_star].add(jnp.copysign(jnp.linalg.norm(row), row[c_star]))
+        beta = 2.0 / jnp.maximum(jnp.dot(u, u), 1e-30)
+        v = v - jnp.outer(v @ u, u) * beta
+        v = v.at[:, c_star].set(0.0)
         return (key, v), i
 
     (_, _), items = lax.scan(body, (key, v_sel), None, length=k)
     return items.astype(jnp.int32)
 
 
+def _sample_from_state(key: jax.Array, state: KDPPSamplerState, k: int) -> jax.Array:
+    key1, key2 = jax.random.split(key)
+    mask = _phase1_select_eigenvectors(key1, state.lam, state.esp, k)
+    # Pack the selected eigenvectors into the first k columns (static shape):
+    # order columns by (selected desc, index) and take the top k.
+    order = jnp.argsort(~mask, stable=True)  # selected first
+    vecs = state.vecs
+    v_sel = vecs[:, order[:k]] * mask[order[:k]][None, :].astype(vecs.dtype)
+    return _phase2_sample_items(key2, v_sel, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def sample_kdpp_from_eigh(
+    key: jax.Array, state: KDPPSamplerState, k: int
+) -> jax.Array:
+    """Draw ``k`` distinct indices from the cached spectrum — no ``eigh``.
+
+    O(k²·C) per draw; pure and scan/vmap-safe.  ``k`` must match the table
+    the state was built with (``state.k``).
+    """
+    if state.esp.shape[0] != k + 1:
+        raise ValueError(
+            f"sampler state was built for k={state.esp.shape[0] - 1}, got k={k}"
+        )
+    return _sample_from_state(key, state, k)
+
+
 @functools.partial(jax.jit, static_argnames=("k",))
 def sample_kdpp(key: jax.Array, kernel: jax.Array, k: int) -> jax.Array:
     """Sample ``k`` distinct indices from the k-DPP defined by PSD ``kernel``.
 
-    Returns int32 indices of shape ``(k,)`` (unordered, distinct).
+    One-shot convenience (decompose + draw): O(C³) per call.  Returns int32
+    indices of shape ``(k,)`` (unordered, distinct).  Bit-identical to
+    ``sample_kdpp_from_eigh(key, kdpp_sampler_state(kernel, k), k)``.
     """
-    kernel = kernel.astype(jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
-    lam, vecs = jnp.linalg.eigh(kernel)
-    lam = jnp.maximum(lam, 0.0)  # clip tiny negative eigenvalues
-    key1, key2 = jax.random.split(key)
-    mask = _phase1_select_eigenvectors(key1, lam, k)
-    # Pack the selected eigenvectors into the first k columns (static shape):
-    # order columns by (selected desc, index) and take the top k.
-    order = jnp.argsort(~mask, stable=True)  # selected first
-    v_sel = vecs[:, order[:k]] * mask[order[:k]][None, :].astype(vecs.dtype)
-    items = _phase2_sample_items(key2, v_sel, k)
-    return items
+    return _sample_from_state(key, _sampler_state(kernel, k), k)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

@@ -72,12 +72,18 @@ class RoundState:
 class SelectionState:
     """Pure-array view of :class:`RoundState` — a pytree every ``select_fn``
     can consume under ``jit``/``vmap``/``scan``.  All fields are concrete
-    (no ``None``) so the pytree structure is stable across rounds."""
+    (no ``None``) so the pytree structure is stable across rounds.
+
+    ``eig_state`` is the k-DPP **spectral cache** (one eigh + ESP table,
+    DESIGN.md §6): the engine computes it at init / reprofile boundaries so
+    the per-round DPP draw never re-decomposes.  Strategies that never draw
+    from a DPP carry the cheap identity-kernel cache (same pytree layout)."""
 
     kernel: jax.Array  # (C, C) PSD profile kernel
     losses: jax.Array  # (C,) last-known local losses
     client_sizes: jax.Array  # (C,) n_c
     cluster_labels: jax.Array  # (C,) int32 — host-fitted, 0 when unused
+    eig_state: dpp_mod.KDPPSamplerState  # spectral cache of ``kernel``
 
     @property
     def num_clients(self) -> int:
@@ -86,14 +92,28 @@ class SelectionState:
 
 def selection_state(
     num_clients: int,
+    k: int,
     kernel: Optional[jax.Array] = None,
     losses: Optional[jax.Array] = None,
     client_sizes: Optional[jax.Array] = None,
     cluster_labels: Optional[jax.Array] = None,
+    eig_state: Optional[dpp_mod.KDPPSamplerState] = None,
+    decompose_kernel: bool = False,
 ) -> SelectionState:
     """Build a :class:`SelectionState`, filling neutral defaults for the
-    signals a given strategy does not use."""
+    signals a given strategy does not use.
+
+    ``k`` (the cohort size) shapes the spectral cache's ESP table.  The
+    eigendecomposition is only paid when ``decompose_kernel=True`` (the DPP
+    strategy's ``prepare``) and no precomputed ``eig_state`` is passed in;
+    every other strategy gets the O(k·C) identity cache.
+    """
     c = num_clients
+    if eig_state is None:
+        if decompose_kernel and kernel is not None:
+            eig_state = dpp_mod.kdpp_sampler_state(kernel, k)
+        else:
+            eig_state = dpp_mod.identity_sampler_state(c, k)
     return SelectionState(
         kernel=jnp.eye(c, dtype=jnp.float32) if kernel is None else kernel,
         losses=jnp.ones((c,), jnp.float32) if losses is None else losses,
@@ -103,11 +123,16 @@ def selection_state(
         cluster_labels=(
             jnp.zeros((c,), jnp.int32) if cluster_labels is None else cluster_labels
         ),
+        eig_state=eig_state,
     )
 
 
 class SelectionStrategy:
     name = "base"
+    # True when select_fn draws from SelectionState.eig_state: tells state
+    # builders (engine init, reprofile boundaries) to pay the O(C³) eigh;
+    # everyone else gets the O(k·C) identity-layout placeholder.
+    uses_spectral_cache = False
 
     # -- pure path (engine) -------------------------------------------------
     def select_fn(self, key: jax.Array, state: SelectionState, k: int) -> jax.Array:
@@ -118,6 +143,7 @@ class SelectionStrategy:
         """RoundState -> SelectionState (host-side; runs ``fit`` if any)."""
         return selection_state(
             state.num_clients,
+            k,
             kernel=state.kernel,
             losses=state.losses,
             client_sizes=state.client_sizes,
@@ -144,24 +170,40 @@ class DPPSelection(SelectionStrategy):
 
     ``mode='sample'`` is the paper's stochastic k-DPP; ``mode='map'`` is the
     deterministic greedy-MAP variant (beyond paper; see DESIGN.md §6).
+
+    ``use_cache=True`` (default) draws from ``SelectionState.eig_state`` —
+    the spectral cache the engine refreshes only at reprofile boundaries, so
+    each scanned round is O(k²·C).  ``use_cache=False`` keeps the
+    eigh-per-draw path (the perf baseline; bit-identical selections).
     """
 
     name = "fl-dp3s"
 
-    def __init__(self, mode: str = "sample"):
+    def __init__(self, mode: str = "sample", use_cache: bool = True):
         assert mode in ("sample", "map")
         self.mode = mode
+        self.use_cache = use_cache
+        self.uses_spectral_cache = mode == "sample" and use_cache
         if mode == "map":
             self.name = "fl-dp3s-map"
 
     def select_fn(self, key, state, k):
         if self.mode == "map":
             return dpp_mod.greedy_map_kdpp(state.kernel, k)
+        if self.use_cache:
+            return dpp_mod.sample_kdpp_from_eigh(key, state.eig_state, k)
         return dpp_mod.sample_kdpp(key, state.kernel, k)
 
     def prepare(self, state, k):
         assert state.kernel is not None, "DPPSelection needs the profile kernel"
-        return super().prepare(state, k)
+        return selection_state(
+            state.num_clients,
+            k,
+            kernel=state.kernel,
+            losses=state.losses,
+            client_sizes=state.client_sizes,
+            decompose_kernel=self.uses_spectral_cache,
+        )
 
 
 def _gumbel_topk_without_replacement(key, log_weights, k):
@@ -202,7 +244,7 @@ class PowerOfChoiceSelection(SelectionStrategy):
         if losses is None:
             losses = jnp.zeros((state.num_clients,))
         return selection_state(
-            state.num_clients, kernel=state.kernel, losses=losses,
+            state.num_clients, k, kernel=state.kernel, losses=losses,
             client_sizes=state.client_sizes,
         )
 
@@ -269,17 +311,20 @@ class ClusterSelection(SelectionStrategy):
         return jnp.asarray(self._labels, jnp.int32)
 
     def select_fn(self, key, state, k):
+        # One vmapped masked-categorical draw over all k clusters (the
+        # unrolled Python loop emitted k separate categorical ops into every
+        # scanned round).  Row l masks the size-logits to cluster l's
+        # members; an empty/degenerate cluster falls back to size-weighted
+        # sampling over all clients.
         labels = state.cluster_labels
         log_sizes = jnp.log(jnp.maximum(state.client_sizes, 1e-30))
-        keys = jax.random.split(key, k)
-        picks = []
-        for lbl in range(k):
-            member = labels == lbl
-            logits = jnp.where(member, log_sizes, -jnp.inf)
-            # degenerate/empty cluster — fall back to size-weighted over all
-            logits = jnp.where(jnp.any(member), logits, log_sizes)
-            picks.append(jax.random.categorical(keys[lbl], logits))
-        return jnp.stack(picks).astype(jnp.int32)
+        member = labels[None, :] == jnp.arange(k, dtype=labels.dtype)[:, None]
+        logits = jnp.where(member, log_sizes[None, :], -jnp.inf)
+        logits = jnp.where(
+            jnp.any(member, axis=1, keepdims=True), logits, log_sizes[None, :]
+        )
+        picks = jax.vmap(jax.random.categorical)(jax.random.split(key, k), logits)
+        return picks.astype(jnp.int32)
 
     def prepare(self, state, k):
         # Fraboni et al. cluster on representative gradients when available.
@@ -289,6 +334,7 @@ class ClusterSelection(SelectionStrategy):
         assert feats is not None, "ClusterSelection needs client fingerprints"
         return selection_state(
             state.num_clients,
+            k,
             kernel=state.kernel,
             losses=state.losses,
             client_sizes=state.client_sizes,

@@ -4,9 +4,18 @@ Implements eq. (14): pairwise L2 distances between profiles, min-max
 normalised and flipped into similarities ``S``, then the PSD DPP kernel
 ``L = Sᵀ S`` (eq. below (13)).
 
-The O(C²·Q) pairwise-distance hot spot can run through the Pallas
-``pairwise_l2`` TPU kernel (``use_kernel=True``); the default pure-jnp path is
-the oracle and the CPU path.
+Two execution paths (DESIGN.md §5/§7):
+
+* **Pure jnp** (default, ``use_kernel=False``) — the oracle and the CPU
+  path: a chain of XLA ops (expansion distances → sqrt → min-max → matmul).
+* **Fused Pallas** (``use_kernel=True``) — :func:`kernel_from_profiles`
+  runs the whole chain as **two TPU kernel launches**
+  (``repro.kernels.pairwise_l2`` distance tiles with a sqrt/min-max-stats
+  epilogue, then the ``repro.kernels.gram`` normalise-and-Gram kernel); the
+  similarity matrix never materialises in HBM.  Dtype contract: fp32
+  profiles match the oracle to ~1e-5; bf16 profiles keep bf16 MXU inputs
+  with fp32 accumulation.  The stage-wise helpers (:func:`pairwise_sq_dists`
+  etc.) keep routing just the distance stage through Pallas.
 """
 
 from __future__ import annotations
@@ -64,5 +73,13 @@ def dpp_kernel(s: jax.Array) -> jax.Array:
 
 
 def kernel_from_profiles(f: jax.Array, use_kernel: bool = False) -> jax.Array:
-    """Profiles (C, Q) -> PSD k-DPP kernel (C, C): eq. (14) then L = SᵀS."""
+    """Profiles (C, Q) -> PSD k-DPP kernel (C, C): eq. (14) then L = SᵀS.
+
+    ``use_kernel=True`` runs the fused two-launch Pallas pipeline (distance
+    tiles + normalise-and-Gram) instead of the XLA op chain.
+    """
+    if use_kernel:
+        from repro.kernels.gram import ops as _gram_ops
+
+        return _gram_ops.kernel_from_profiles(f)
     return dpp_kernel(similarity_matrix(f, use_kernel=use_kernel))

@@ -27,7 +27,11 @@ loop serially.  This module replaces that with a **pure state machine**
 
 Host-only work (agglomerative cluster fitting, profile refresh for
 ``reprofile_every``) happens *between* scans: callers run scan segments and
-refresh state on the segment boundary (see ``FLTrainer.run``).
+refresh state on the segment boundary (see ``FLTrainer.run``).  The k-DPP
+**spectral cache** (``ServerState.eig_state``, DESIGN.md §6) follows the same
+lifecycle: :func:`init_server_state` pays the one O(C³) ``eigh``, reprofile
+boundaries rebuild it together with the kernel, and the scanned round only
+ever draws from it — O(k²·C) per round instead of an in-scan decomposition.
 """
 
 from __future__ import annotations
@@ -41,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import dpp as dpp_lib
 from repro.core import metrics as metrics_lib
 from repro.core import profiles as profiles_lib
 from repro.core import selection as selection_lib
@@ -98,6 +103,7 @@ class ServerState:
     losses: jax.Array  # (C,) last-known local losses
     kernel: jax.Array  # (C, C) eq.-(14) DPP kernel
     profiles: jax.Array  # (C, Q) eq.-(11) client profiles
+    eig_state: dpp_lib.KDPPSamplerState  # spectral cache of ``kernel``
     cluster_labels: jax.Array  # (C,) int32, host-prefitted (0 if unused)
     client_xs: jax.Array  # (C, n_c, ...) simulated client shards
     client_ys: jax.Array  # (C, n_c)
@@ -116,6 +122,7 @@ class ServerState:
             losses=self.losses,
             client_sizes=self.client_sizes,
             cluster_labels=self.cluster_labels,
+            eig_state=self.eig_state,
         )
 
 
@@ -259,12 +266,44 @@ def make_round_fn(
 
 # ------------------------------------------------------------------ runners
 
+# Program-cache contract (identity keying): compiled scan/vmap executables
+# are cached ON the round_fn object itself (``round_fn.__engine_programs__``),
+# keyed by (kind, num_rounds).  Reuse of the compiled program therefore
+# requires passing the SAME round_fn object — callers that rebuild a closure
+# per call recompile, but the stale executables die with the closure instead
+# of accumulating in a global table pinning their closed-over arrays (eval
+# data!) alive.  ``FLTrainer`` memoises its round_fn per instance (plus a
+# semantics-keyed cross-trainer cache) to hit this cache.  Callables that
+# reject attributes (e.g. functools.partial) fall back to a small bounded
+# FIFO table.
 
-@functools.lru_cache(maxsize=64)
+_FALLBACK_PROGRAMS: Dict = {}
+_FALLBACK_LIMIT = 8
+
+
+def _programs(round_fn) -> Dict:
+    cache = getattr(round_fn, "__engine_programs__", None)
+    if cache is None:
+        cache = {}
+        try:
+            round_fn.__engine_programs__ = cache
+        except AttributeError:
+            if round_fn not in _FALLBACK_PROGRAMS:
+                while len(_FALLBACK_PROGRAMS) >= _FALLBACK_LIMIT:
+                    _FALLBACK_PROGRAMS.pop(next(iter(_FALLBACK_PROGRAMS)))
+                _FALLBACK_PROGRAMS[round_fn] = cache
+            return _FALLBACK_PROGRAMS[round_fn]
+    return cache
+
+
 def _scanned(round_fn, num_rounds: int):
-    return jax.jit(
-        lambda state: lax.scan(round_fn, state, None, length=num_rounds)
-    )
+    cache = _programs(round_fn)
+    key = ("scan", num_rounds)
+    if key not in cache:
+        cache[key] = jax.jit(
+            lambda state: lax.scan(round_fn, state, None, length=num_rounds)
+        )
+    return cache[key]
 
 
 def run_scanned(
@@ -274,16 +313,20 @@ def run_scanned(
 
     Returns the final state and the per-round metrics stacked on a leading
     ``(num_rounds,)`` axis.  Re-invocations with the same ``round_fn`` object
-    and round count reuse the compiled executable.
+    and round count reuse the compiled executable (see the program-cache
+    contract above).
     """
     return _scanned(round_fn, num_rounds)(state)
 
 
-@functools.lru_cache(maxsize=64)
 def _vmapped(round_fn, num_rounds: int):
-    return jax.jit(
-        jax.vmap(lambda state: lax.scan(round_fn, state, None, length=num_rounds))
-    )
+    cache = _programs(round_fn)
+    key = ("vmap", num_rounds)
+    if key not in cache:
+        cache[key] = jax.jit(
+            jax.vmap(lambda state: lax.scan(round_fn, state, None, length=num_rounds))
+        )
+    return cache[key]
 
 
 def run_many(
@@ -294,7 +337,10 @@ def run_many(
     ``stacked_state`` is a :class:`ServerState` whose every leaf carries a
     leading batch axis (see :func:`stack_states`) — e.g. S seeds × K
     strategies flattened to one axis.  One XLA program executes the whole
-    grid; outputs keep the ``(batch, num_rounds, ...)`` layout.
+    grid; outputs keep the ``(batch, num_rounds, ...)`` layout.  The k-DPP
+    spectral caches ride in the stacked state (hoisted out of the vmapped
+    round at :func:`init_server_state` time), so no branch of the grid pays
+    an in-round ``eigh``.
     """
     return _vmapped(round_fn, num_rounds)(stacked_state)
 
@@ -328,14 +374,16 @@ def init_server_state(
     kernel: Optional[jax.Array] = None,
     losses: Optional[jax.Array] = None,
     cluster_labels: Optional[jax.Array] = None,
+    eig_state: Optional[dpp_lib.KDPPSamplerState] = None,
 ) -> ServerState:
     """Algorithm-1 initialisation as a :class:`ServerState`.
 
     Profiles every client once with the fresh global model (Alg. 1 lines
-    2-5), builds the eq.-(14) kernel, takes one loss pass for the initial
-    last-known losses, and — when ``strategy`` is a
-    :class:`~repro.core.selection.ClusterSelection` — runs the one-shot host
-    ``fit`` so the per-round draw is pure.  Any precomputed piece can be
+    2-5), builds the eq.-(14) kernel **and its k-DPP spectral cache** (the
+    one O(C³) ``eigh`` — every scanned round then draws in O(k²·C)), takes
+    one loss pass for the initial last-known losses, and — when ``strategy``
+    is a :class:`~repro.core.selection.ClusterSelection` — runs the one-shot
+    host ``fit`` so the per-round draw is pure.  Any precomputed piece can be
     passed in to skip recomputation.
     """
     client_xs = jnp.asarray(client_xs)
@@ -350,6 +398,16 @@ def init_server_state(
         kernel = similarity_lib.kernel_from_profiles(
             profiles, use_kernel=cfg.use_pallas_kernel
         )
+    if eig_state is None:
+        # Pay the O(C³) decomposition only when the strategy's select_fn
+        # actually draws from the cache; strategy=None (unknown — e.g. a
+        # caller assembling a multi-strategy run_many grid) keeps the real
+        # spectrum as the safe default.  The identity placeholder shares the
+        # pytree layout, so lax.switch grids stay shape-stable either way.
+        if strategy is None or getattr(strategy, "uses_spectral_cache", False):
+            eig_state = dpp_lib.kdpp_sampler_state(kernel, cfg.clients_per_round)
+        else:
+            eig_state = dpp_lib.identity_sampler_state(c, cfg.clients_per_round)
     if losses is None:
         losses = jax.jit(jax.vmap(loss_fn, in_axes=(None, 0, 0)))(
             params, client_xs, client_ys
@@ -379,6 +437,7 @@ def init_server_state(
         losses=losses,
         kernel=kernel,
         profiles=profiles,
+        eig_state=eig_state,
         cluster_labels=cluster_labels,
         client_xs=client_xs,
         client_ys=client_ys,

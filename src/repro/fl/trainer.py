@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dpp as dpp_lib
 from repro.core import metrics as metrics_lib
 from repro.core import profiles as profiles_lib
 from repro.core import selection as selection_lib
@@ -67,6 +68,7 @@ def _strategy_sig(s: selection_lib.SelectionStrategy):
         type(s).__qualname__,
         getattr(s, "mode", None),
         getattr(s, "d", None),
+        getattr(s, "use_cache", None),
     )
 
 
@@ -117,7 +119,14 @@ class FLTrainer:
         self.eval_ys = jnp.asarray(eval_ys) if eval_ys is not None else None
         self.accuracy_fn = accuracy_fn
         self.key = jax.random.key(cfg.seed)
-        self._eval_round_fn = None
+        # round_fn memo (engine program-cache contract: executables are keyed
+        # on round_fn identity, so the trainer must hand back the same object
+        # across run() calls)
+        self._round_fn_memo = None
+        # k-DPP spectral cache, keyed on the kernel array it was built from;
+        # _init_profiles (reprofile boundaries) invalidates it with the kernel
+        self._eig_state = None
+        self._eig_kernel = None
 
         n_c = client_xs.shape[1]
         self.client_sizes = jnp.full((cfg.num_clients,), float(n_c))
@@ -161,6 +170,9 @@ class FLTrainer:
         self.round_state.kernel = similarity_lib.kernel_from_profiles(
             feats, use_kernel=self.cfg.use_pallas_kernel
         )
+        # the spectral cache decomposes exactly this kernel — invalidate
+        self._eig_state = None
+        self._eig_kernel = None
         # representative-gradient fingerprints for the Cluster baseline
         if isinstance(self.strategy, selection_lib.ClusterSelection):
             gp = [
@@ -196,6 +208,27 @@ class FLTrainer:
             return self.strategy.fit(feats, cfg.clients_per_round)
         return jnp.zeros((cfg.num_clients,), jnp.int32)
 
+    def eig_state(self) -> dpp_lib.KDPPSamplerState:
+        """Spectral cache of the current kernel (one eigh per kernel refresh).
+
+        Memoised on the kernel array identity; ``_init_profiles`` (i.e. every
+        ``reprofile_every`` boundary) drops the memo together with the kernel
+        it decomposed, so a stale spectrum can never outlive its kernel.
+        Strategies that never draw from the cache get the cheap
+        identity-layout placeholder instead of an O(C³) eigh.
+        """
+        kern = self.round_state.kernel
+        if self._eig_state is None or self._eig_kernel is not kern:
+            k = self.cfg.clients_per_round
+            if getattr(self.strategy, "uses_spectral_cache", False):
+                self._eig_state = dpp_lib.kdpp_sampler_state(kern, k)
+            else:
+                self._eig_state = dpp_lib.identity_sampler_state(
+                    self.cfg.num_clients, k
+                )
+            self._eig_kernel = kern
+        return self._eig_state
+
     def server_state(self) -> engine_lib.ServerState:
         """Pack the trainer's current server knowledge into a ServerState."""
         cfg = self.cfg
@@ -207,6 +240,7 @@ class FLTrainer:
             losses=self.losses,
             kernel=self.round_state.kernel,
             profiles=self.round_state.profiles,
+            eig_state=self.eig_state(),
             cluster_labels=cluster_labels,
             client_xs=self.client_xs,
             client_ys=self.client_ys,
@@ -217,19 +251,28 @@ class FLTrainer:
         )
 
     def round_fn(self):
-        """The engine's pure per-round transition for this trainer."""
-        if self.eval_xs is not None:
-            # held-out eval data lives in the closure -> memoise per trainer
-            # (a fresh closure per call would defeat the engine's compiled-
-            # scan cache and recompile the whole program every run())
-            if self._eval_round_fn is None:
-                self._eval_round_fn = engine_lib.make_round_fn(
+        """The engine's pure per-round transition for this trainer.
+
+        Memoised on the instance: the engine caches compiled scan programs ON
+        the round_fn object (identity keying — see ``engine._programs``), so
+        handing back a fresh closure per call would recompile the whole
+        program every ``run()``.  The no-eval-data path additionally shares
+        one round_fn across trainers with identical round semantics
+        (``_cached_round_fn``), letting benchmark sweeps reuse the executable.
+        """
+        if self._round_fn_memo is None:
+            if self.eval_xs is not None:
+                # held-out eval data lives in the closure -> per-trainer memo
+                self._round_fn_memo = engine_lib.make_round_fn(
                     self.cfg, self.loss_fn, (self.strategy,),
                     accuracy_fn=self.accuracy_fn,
                     eval_data=(self.eval_xs, self.eval_ys),
                 )
-            return self._eval_round_fn
-        return _cached_round_fn(self.cfg, self.loss_fn, self.accuracy_fn, self.strategy)
+            else:
+                self._round_fn_memo = _cached_round_fn(
+                    self.cfg, self.loss_fn, self.accuracy_fn, self.strategy
+                )
+        return self._round_fn_memo
 
     def _absorb(self, state: engine_lib.ServerState):
         """Pull the scanned segment's final state back into trainer fields."""
@@ -271,6 +314,7 @@ class FLTrainer:
                     state,
                     kernel=self.round_state.kernel,
                     profiles=self.round_state.profiles,
+                    eig_state=self.eig_state(),  # re-decompose refreshed kernel
                     cluster_labels=self._cluster_labels(),
                 )
         self._absorb(state)

@@ -1,0 +1,1 @@
+"""Tiled Gram (L = XᵀX) Pallas kernel + the fused profiles→DPP-kernel path."""

@@ -1,0 +1,64 @@
+"""Jit'd public wrappers for the Gram kernel and the fused eq.-(14) pipeline.
+
+On CPU (this container) the kernel bodies execute under ``interpret=True``;
+on TPU they compile to Mosaic.  ``repro.core.similarity`` routes through
+:func:`kernel_from_profiles` when ``use_kernel=True``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram.gram import gram_kernel, normalized_gram_kernel
+from repro.kernels.pairwise_l2.pairwise_l2 import pairwise_dists_stats_kernel
+
+__all__ = ["gram", "kernel_from_profiles"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gram(x: jax.Array, block_m: int = 128, block_n: int = 128,
+         block_k: int = 128) -> jax.Array:
+    """X (M, N) -> XᵀX (N, N), fp32 accumulation (bf16 inputs welcome)."""
+    if x.ndim != 2:
+        raise ValueError(f"gram expects a 2-D matrix, got {x.shape}")
+    return gram_kernel(
+        x, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=_interpret(),
+    )
+
+
+def kernel_from_profiles(
+    f: jax.Array,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    block_gram: int = 128,
+) -> jax.Array:
+    """Profiles (C, Q) -> PSD DPP kernel (C, C) in **two kernel launches**.
+
+    Launch 1 (``pairwise_dists_stats_kernel``): tiled ‖·‖² expansion with the
+    sqrt/diag-pin epilogue and per-tile min/max stats.  Launch 2
+    (``normalized_gram_kernel``): the min-max normalise epilogue fused into
+    the Gram contraction prologue — ``S`` never hits HBM.  Between them only
+    a (grid_m × grid_n) scalar reduction runs as plain XLA.  bf16 profiles
+    keep the MXU inputs bf16 with fp32 accumulation; the fp32 path matches
+    the jnp oracle to ~1e-5.
+    """
+    if f.ndim != 2:
+        raise ValueError(f"profiles must be (C, Q), got {f.shape}")
+    interpret = _interpret()
+    s0, lo, hi = pairwise_dists_stats_kernel(
+        f, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )
+    rng = jnp.maximum(hi - lo, 1e-30)
+    compute_dtype = jnp.bfloat16 if f.dtype == jnp.bfloat16 else jnp.float32
+    return normalized_gram_kernel(
+        s0, lo, rng, f.shape[0],
+        block_m=block_gram, block_n=block_gram, block_k=block_gram,
+        compute_dtype=compute_dtype, interpret=interpret,
+    )

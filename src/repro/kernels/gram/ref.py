@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Gram / fused profile→kernel Pallas kernels."""
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gram_ref", "kernel_from_profiles_ref"]
+
+
+def gram_ref(x: jax.Array) -> jax.Array:
+    """Naive ``XᵀX`` in fp32 — the exact reference."""
+    x = x.astype(jnp.float32)
+    return x.T @ x
+
+
+def kernel_from_profiles_ref(f: jax.Array) -> jax.Array:
+    """The eq.-(14) chain as plain XLA ops (mirrors ``repro.core.similarity``
+    with ``use_kernel=False``): expansion distances → clamp → zero diagonal →
+    sqrt → min-max normalise → ``L = SᵀS``."""
+    f = f.astype(jnp.float32)
+    sq = jnp.sum(f * f, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (f @ f.T)
+    d2 = jnp.maximum(d2, 0.0) * (1.0 - jnp.eye(f.shape[0], dtype=jnp.float32))
+    s0 = jnp.sqrt(d2)
+    lo = jnp.min(s0)
+    rng = jnp.maximum(jnp.max(s0) - lo, 1e-30)
+    s = 1.0 - (s0 - lo) / rng
+    return s.T @ s

@@ -51,6 +51,9 @@ def test_pairwise_l2_block_shape_property(c, q, bm, bk):
     np.testing.assert_allclose(got, want, atol=1e-3 * max(1.0, want.max()))
 
 
+# (gram / fused profiles→kernel coverage lives in tests/test_gram_kernels.py,
+# which is deliberately hypothesis-free so it runs in minimal containers)
+
 # ------------------------------------------------------------ flash attention
 
 

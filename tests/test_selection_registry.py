@@ -13,7 +13,7 @@ import pytest
 from repro.core import selection, similarity
 
 
-def _sstate(c=20, q=6, seed=0, k_clusters=None):
+def _sstate(c=20, q=6, seed=0, k_clusters=None, k=5):
     rng = np.random.default_rng(seed)
     f = jnp.asarray(rng.normal(size=(c, q)).astype(np.float32))
     labels = None
@@ -21,10 +21,12 @@ def _sstate(c=20, q=6, seed=0, k_clusters=None):
         labels = jnp.asarray(np.arange(c) % k_clusters, jnp.int32)
     return selection.selection_state(
         c,
+        k,
         kernel=similarity.kernel_from_profiles(f),
         losses=jnp.asarray(rng.uniform(0.1, 3.0, size=(c,)).astype(np.float32)),
         client_sizes=jnp.full((c,), 50.0),
         cluster_labels=labels,
+        decompose_kernel=True,  # real spectral cache (the DPP draw reads it)
     )
 
 
@@ -100,6 +102,7 @@ def test_cluster_select_fn_one_pick_per_cluster():
     c, k = 12, 3
     st = selection.selection_state(
         c,
+        k,
         client_sizes=jnp.ones((c,)),
         cluster_labels=jnp.asarray(np.arange(c) % k, jnp.int32),
     )

@@ -1,0 +1,177 @@
+"""Spectral-cache tests: cached k-DPP draws vs the one-shot sampler, the
+engine's eig-cache lifecycle across reprofile boundaries, and the vectorised
+cluster draw.  (Deliberately hypothesis-free so the suite runs in minimal
+containers.)"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dpp, selection, similarity
+from repro.data import make_image_dataset, skewness_partition
+from repro.fl import FLConfig, FLTrainer
+from repro.models import cnn
+
+
+def _kernel(c=12, q=6, seed=0):
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray(rng.normal(size=(c, q)).astype(np.float32))
+    return similarity.kernel_from_profiles(f)
+
+
+# ------------------------------------------------------------------ sampler
+
+
+def test_sample_from_eigh_bitwise_matches_one_shot():
+    """sample_kdpp_from_eigh(key, kdpp_sampler_state(L, k), k) must equal
+    sample_kdpp(key, L, k) bit-for-bit: the engine draws from the cache, the
+    legacy path decomposes per call, and the two must stay interchangeable."""
+    kern = _kernel(c=16)
+    for k in (1, 3, 5):
+        state = dpp.kdpp_sampler_state(kern, k)
+        for i in range(25):
+            key = jax.random.key(i * 7 + k)
+            a = np.asarray(dpp.sample_kdpp(key, kern, k))
+            b = np.asarray(dpp.sample_kdpp_from_eigh(key, state, k))
+            np.testing.assert_array_equal(a, b)
+
+
+def test_sampler_state_shapes_and_k_mismatch():
+    kern = _kernel(c=9)
+    state = dpp.kdpp_sampler_state(kern, 3)
+    assert state.num_items == 9 and state.k == 3
+    assert state.esp.shape == (4, 10)
+    with pytest.raises(ValueError):
+        dpp.sample_kdpp_from_eigh(jax.random.key(0), state, 4)
+
+
+def test_cached_draw_is_scan_compatible():
+    """The cached draw must close into lax.scan without re-tracing eigh."""
+    kern = _kernel(c=10)
+    k = 3
+    state = dpp.kdpp_sampler_state(kern, k)
+
+    def body(key, _):
+        key, sub = jax.random.split(key)
+        return key, dpp.sample_kdpp_from_eigh(sub, state, k)
+
+    _, sels = jax.lax.scan(body, jax.random.key(0), None, length=8)
+    sels = np.asarray(sels)
+    assert sels.shape == (8, k)
+    for row in sels:
+        assert len(set(row.tolist())) == k
+
+
+def test_identity_sampler_state_layout_matches_real():
+    real = dpp.kdpp_sampler_state(_kernel(c=7), 2)
+    ident = dpp.identity_sampler_state(7, 2)
+    assert jax.tree_util.tree_structure(real) == jax.tree_util.tree_structure(ident)
+    for a, b in zip(jax.tree_util.tree_leaves(real), jax.tree_util.tree_leaves(ident)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+def test_dpp_selection_cached_vs_uncached_bitwise():
+    """DPPSelection(use_cache=True) and the eigh-per-draw baseline must pick
+    identical cohorts for the same key (the BENCH_dpp acceptance contract)."""
+    c, k = 14, 4
+    kern = _kernel(c=c)
+    st = selection.RoundState(num_clients=c, kernel=kern)
+    cached = selection.DPPSelection()
+    baseline = selection.DPPSelection(use_cache=False)
+    for i in range(20):
+        key = jax.random.key(i)
+        np.testing.assert_array_equal(
+            np.asarray(cached.select(key, st, k)),
+            np.asarray(baseline.select(key, st, k)),
+        )
+
+
+def test_cluster_select_fn_vectorised_one_per_cluster():
+    """The vmapped masked-categorical draw keeps the one-pick-per-cluster
+    semantics (including the empty-cluster fallback)."""
+    labels = jnp.asarray([0, 0, 1, 1, 2, 2], jnp.int32)
+    st = selection.selection_state(
+        6, 3, cluster_labels=labels, client_sizes=jnp.ones((6,))
+    )
+    strat = selection.ClusterSelection()
+    for i in range(10):
+        picks = np.asarray(strat.select_fn(jax.random.key(i), st, 3))
+        assert sorted(np.asarray(labels)[picks].tolist()) == [0, 1, 2]
+    # empty cluster 3 -> falls back to a size-weighted draw over everyone
+    st4 = selection.selection_state(
+        6, 4, cluster_labels=labels, client_sizes=jnp.ones((6,))
+    )
+    picks = np.asarray(strat.select_fn(jax.random.key(0), st4, 4))
+    assert picks.shape == (4,) and (picks >= 0).all() and (picks < 6).all()
+
+
+# ------------------------------------------------------------------ engine
+
+
+C, N, HW = 10, 24, 12
+
+
+@pytest.fixture(scope="module")
+def federation():
+    ds = make_image_dataset(n=C * N, seed=7, h=HW, w=HW)
+    shards = skewness_partition(ds.ys, C, 1.0, 10, samples_per_client=N, seed=0)
+    return (
+        np.stack([ds.xs[s] for s in shards]),
+        np.stack([ds.ys[s] for s in shards]),
+    )
+
+
+def _trainer(federation, rounds=4, **cfg_kw):
+    cxs, cys = federation
+    params = cnn.init_cnn(
+        jax.random.key(0), in_hw=(HW, HW), channels=(4, 8), fc1_dim=32
+    )
+    cfg = FLConfig(
+        num_clients=C, clients_per_round=3, rounds=rounds, local_epochs=1,
+        lr=0.05, eval_every=2, seed=0, **cfg_kw,
+    )
+    return FLTrainer(
+        cfg, params, cnn.cnn_loss, cnn.apply_with_features, cxs, cys,
+        selection.DPPSelection(), accuracy_fn=cnn.accuracy,
+    )
+
+
+def test_eig_cache_invalidated_across_reprofile_boundary(federation):
+    """reprofile_every refreshes the kernel between scan segments — the
+    spectral cache must be rebuilt from the refreshed kernel, not reused."""
+    tr = _trainer(federation, rounds=4, reprofile_every=2)
+    eig0 = tr.eig_state()
+    lam0 = np.asarray(eig0.lam).copy()
+    tr.run()
+    eig1 = tr.eig_state()
+    assert eig1 is not eig0  # memo dropped at the segment boundary
+    assert not np.allclose(lam0, np.asarray(eig1.lam))
+    # the refreshed cache decomposes exactly the refreshed kernel
+    kern = np.asarray(tr.round_state.kernel, np.float64)
+    lam, vecs = np.asarray(eig1.lam), np.asarray(eig1.vecs)
+    scale = np.maximum(np.mean(np.abs(np.linalg.eigvalsh(kern))), 1e-30)
+    recon = (vecs * (lam * scale)) @ vecs.T
+    np.testing.assert_allclose(recon, kern, atol=1e-3)
+
+
+def test_eig_cache_memoised_between_calls(federation):
+    tr = _trainer(federation)
+    assert tr.eig_state() is tr.eig_state()  # no re-decomposition
+    tr._init_profiles()
+    assert tr._eig_state is None  # kernel refresh drops the memo
+
+
+def test_server_state_carries_spectral_cache(federation):
+    tr = _trainer(federation)
+    st = tr.server_state()
+    sel_state = st.selection_state()
+    assert sel_state.eig_state.esp.shape == (4, C + 1)
+    # a draw from the carried cache equals the one-shot sampler on the kernel
+    key = jax.random.key(3)
+    np.testing.assert_array_equal(
+        np.asarray(dpp.sample_kdpp_from_eigh(key, sel_state.eig_state, 3)),
+        np.asarray(dpp.sample_kdpp(key, st.kernel, 3)),
+    )
