@@ -1,0 +1,149 @@
+"""Bench-throughput regression gate for CI.
+
+Compares the ``*_smoke`` bench JSONs produced by the current checkout against
+the baselines committed under ``benchmarks/baselines/`` and fails (exit 1)
+when any throughput metric regresses by more than ``--tolerance`` (default
+25%).  Metrics are one-sided: being faster than baseline never fails.
+Comparisons only arm when the baseline was recorded on a host with the same
+core count (see the MANIFEST note) — refresh baselines from the CI run's own
+``BENCH_*.json`` artifacts to gate a runner class.
+
+    PYTHONPATH=src python -m benchmarks.dpp_bench --smoke
+    PYTHONPATH=src python -m benchmarks.shard_bench --smoke
+    PYTHONPATH=src python -m benchmarks.check_regression
+
+``--scale F`` multiplies every *current* metric by F before comparing — an
+injected-slowdown hook: ``--scale 0.5`` must make the gate fail on a healthy
+checkout, proving the gate actually bites (exercised by
+``tests/test_bench_regression.py``).
+
+Baselines are refreshed by re-running the smoke benches and copying the JSONs
+into ``benchmarks/baselines/`` in the same PR that changes the performance.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, Dict, List
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+DEFAULT_TOLERANCE = 0.25
+
+
+# Extractors return (metrics, host_cores).  EVERY throughput metric —
+# absolute rounds/sec and within-run speedup ratios alike — is compared only
+# when the baseline and the current run report the SAME host core count:
+# absolute throughput obviously doesn't transfer across boxes, and neither
+# do the ratios (the dev-N scaling ratio is ceilinged by core count, and the
+# tiny-shape cached/baseline ratio is ~1.0 ± scheduler noise).  On mismatch
+# the gate prints a loud note and passes — arm it by refreshing
+# benchmarks/baselines/ from the CI workflow's own BENCH_*.json artifacts so
+# the recorded hardware matches the runner class that gates.
+
+
+def _dpp_metrics(payload: Dict):
+    out = {}
+    for c, row in payload.get("scanned_rounds_per_sec", {}).items():
+        for variant in ("baseline", "cached"):
+            if variant in row:
+                out[f"scanned_rounds_per_sec.C{c}.{variant}"] = float(row[variant])
+    return out, payload.get("host_cores")
+
+
+def _shard_metrics(payload: Dict):
+    out = {}
+    for n, row in payload.get("by_devices", {}).items():
+        out[f"rounds_per_sec.dev{n}"] = float(row["rounds_per_sec"])
+    return out, payload.get("host_cores")
+
+
+# every smoke bench JSON the gate knows how to read; a file listed here that
+# exists in baselines/ but was not produced by the current run is itself a
+# failure (the harness rotted)
+MANIFEST: Dict[str, Callable] = {
+    "BENCH_dpp_smoke.json": _dpp_metrics,
+    "BENCH_shard_smoke.json": _shard_metrics,
+}
+
+
+def check(
+    current_dir: str = REPO_ROOT,
+    baseline_dir: str = BASELINE_DIR,
+    tolerance: float = DEFAULT_TOLERANCE,
+    scale: float = 1.0,
+) -> List[str]:
+    """Return a list of failure strings (empty == gate passes)."""
+    failures: List[str] = []
+    compared = 0
+    for name, extract in MANIFEST.items():
+        base_path = os.path.join(baseline_dir, name)
+        cur_path = os.path.join(current_dir, name)
+        if not os.path.exists(base_path):
+            print(f"[check_regression] no baseline for {name}; skipping")
+            continue
+        if not os.path.exists(cur_path):
+            failures.append(f"{name}: baseline exists but current run "
+                            "produced no JSON (bench harness broken?)")
+            continue
+        with open(base_path) as f:
+            base, base_cores = extract(json.load(f))
+        with open(cur_path) as f:
+            cur, cur_cores = extract(json.load(f))
+        same_hw = base_cores is not None and base_cores == cur_cores
+        if not same_hw:
+            print(f"[check_regression] {name}: host cores differ "
+                  f"(baseline={base_cores}, current={cur_cores}) — "
+                  "skipping (refresh baselines from this runner's artifacts "
+                  "to arm the gate)")
+            continue
+        for metric, ref in sorted(base.items()):
+            if metric not in cur:
+                failures.append(f"{name}:{metric}: missing from current run")
+                continue
+            compared += 1
+            now = cur[metric] * scale
+            floor = ref * (1.0 - tolerance)
+            verdict = "ok" if now >= floor else "REGRESSED"
+            print(f"[check_regression] {name}:{metric}: "
+                  f"baseline={ref:.2f} current={now:.2f} "
+                  f"floor={floor:.2f} {verdict}")
+            if now < floor:
+                failures.append(
+                    f"{name}:{metric}: {now:.2f} < {floor:.2f} "
+                    f"(baseline {ref:.2f}, tolerance {tolerance:.0%})"
+                )
+    print(f"[check_regression] {compared} metrics compared, "
+          f"{len(failures)} failures")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current-dir", default=REPO_ROOT,
+                    help="directory holding the current BENCH_*_smoke.json")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument(
+        "--tolerance", type=float,
+        default=float(os.environ.get("REGRESSION_TOLERANCE",
+                                     DEFAULT_TOLERANCE)),
+        help="max allowed fractional throughput drop (default 0.25; "
+             "REGRESSION_TOLERANCE env overrides)",
+    )
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="multiply current metrics by F (slowdown-injection "
+                         "test hook; --scale 0.5 must fail)")
+    args = ap.parse_args(argv)
+    failures = check(args.current_dir, args.baseline_dir,
+                     args.tolerance, args.scale)
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        raise SystemExit(1)
+    print("bench regression gate: PASS")
+
+
+if __name__ == "__main__":
+    main()

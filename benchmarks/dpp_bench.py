@@ -138,13 +138,13 @@ def bench_kernel_build(c: int, q: int) -> dict:
     return out
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--smoke", action="store_true",
         help="tiny shapes, no perf assertions (CI harness check)",
     )
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     k = 8
     if args.smoke:
@@ -157,6 +157,7 @@ def main():
     report = {
         "smoke": args.smoke,
         "backend": jax.default_backend(),
+        "host_cores": os.cpu_count(),
         "k": k,
         "scanned_rounds_per_sec": {},
         "kernel_build_ms": kb,

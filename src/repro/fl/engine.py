@@ -44,6 +44,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+try:  # newer jax graduates shard_map out of experimental
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _checked_shard_map(f, mesh, in_specs, out_specs):
+    """shard_map with replication checking off, across jax versions (the
+    ``check_rep`` kwarg is renamed/retired after 0.4.x)."""
+    try:
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+        )
+    except TypeError:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 from repro.core import dpp as dpp_lib
 from repro.core import metrics as metrics_lib
@@ -51,16 +69,19 @@ from repro.core import profiles as profiles_lib
 from repro.core import selection as selection_lib
 from repro.core import similarity as similarity_lib
 from repro.fl import rounds as rounds_lib
+from repro.launch.sharding import CLIENT_AXIS, client_axis_spec
 
 __all__ = [
     "FLConfig",
     "ServerState",
+    "CLIENT_AXIS",
     "make_round_fn",
     "run_scanned",
     "run_many",
     "stack_states",
     "unstack_outputs",
     "init_server_state",
+    "shard_server_state",
     "history_from_outputs",
 ]
 
@@ -137,14 +158,28 @@ def _steps_per_round(cfg: FLConfig, n_c: int) -> int:
     return cfg.local_epochs * max(1, n_c // cfg.local_batch_size)
 
 
-def make_client_batches(cfg: FLConfig, key, client_xs, client_ys, sel):
-    """Slice the selected clients' data into (C_p, steps, B, ...) batches.
+def batch_indices_from_keys(cfg: FLConfig, keys, n_c: int):
+    """Per-client random *index plans*: ``keys[i]`` drives client i's draws.
 
-    Pure/jittable; shared by the scanned engine and the legacy trainer loop
-    so both execute bit-identical batch construction.
+    Returns ``None`` for full-batch mode (no randomness), the (M, steps, B)
+    replacement draws, or the (M, n_c) epoch permutation.  Split from
+    :func:`batches_from_indices` so the mesh-sharded round can generate every
+    plan at the jit level (replicated, tiny int arrays) and keep only the
+    data slicing inside its ``shard_map`` — random-bit generation fused into
+    the shard body miscompiles on jax 0.4.37 (wrong clients' draws).
     """
-    xs = jnp.take(client_xs, sel, axis=0)
-    ys = jnp.take(client_ys, sel, axis=0)
+    if cfg.local_batch_size is None:
+        return None
+    steps = _steps_per_round(cfg, n_c)
+    b = cfg.local_batch_size
+    if cfg.sample_with_replacement:
+        # token-style workloads: iid uniform draws per step (replacement)
+        return jax.vmap(lambda k: jax.random.randint(k, (steps, b), 0, n_c))(keys)
+    return jax.vmap(lambda k: jax.random.permutation(k, n_c))(keys)
+
+
+def batches_from_indices(cfg: FLConfig, ids, xs, ys):
+    """Apply :func:`batch_indices_from_keys` plans to M clients' data."""
     n_c = xs.shape[1]
     steps = _steps_per_round(cfg, n_c)
     if cfg.local_batch_size is None:
@@ -154,17 +189,11 @@ def make_client_batches(cfg: FLConfig, key, client_xs, client_ys, sel):
         return (xb, yb)
     b = cfg.local_batch_size
     if cfg.sample_with_replacement:
-        # token-style workloads: iid uniform draws per step (replacement)
-        ids = jax.vmap(
-            lambda k: jax.random.randint(k, (steps, b), 0, n_c)
-        )(jax.random.split(key, xs.shape[0]))
         xb = jax.vmap(jnp.take, in_axes=(0, 0, None))(xs, ids, 0)
         yb = jax.vmap(jnp.take, in_axes=(0, 0, None))(ys, ids, 0)
         return (xb, yb)
     nb = max(1, n_c // b)
-    perm = jax.vmap(
-        lambda k: jax.random.permutation(k, n_c)
-    )(jax.random.split(key, xs.shape[0]))
+    perm = ids
     xs = jnp.take_along_axis(
         xs, perm.reshape(perm.shape + (1,) * (xs.ndim - 2)), axis=1
     )
@@ -177,6 +206,25 @@ def make_client_batches(cfg: FLConfig, key, client_xs, client_ys, sel):
     return (xb, yb)
 
 
+def client_batches_from_keys(cfg: FLConfig, keys, xs, ys):
+    """Per-client batch slicing for an explicit (M,) key-per-client vector."""
+    return batches_from_indices(
+        cfg, batch_indices_from_keys(cfg, keys, xs.shape[1]), xs, ys
+    )
+
+
+def make_client_batches(cfg: FLConfig, key, client_xs, client_ys, sel):
+    """Slice the selected clients' data into (C_p, steps, B, ...) batches.
+
+    Pure/jittable; shared by the scanned engine and the legacy trainer loop
+    so both execute bit-identical batch construction.
+    """
+    xs = jnp.take(client_xs, sel, axis=0)
+    ys = jnp.take(client_ys, sel, axis=0)
+    keys = jax.random.split(key, xs.shape[0])
+    return client_batches_from_keys(cfg, keys, xs, ys)
+
+
 # ---------------------------------------------------------------- round_fn
 
 
@@ -187,6 +235,8 @@ def make_round_fn(
     accuracy_fn: Optional[Callable] = None,
     eval_data: Optional[Tuple[jax.Array, jax.Array]] = None,
     sequential_clients: bool = True,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    client_axis: str = CLIENT_AXIS,
 ) -> Callable[[ServerState, Any], Tuple[ServerState, Dict[str, jax.Array]]]:
     """Build the pure per-round transition ``round_fn(state, _)``.
 
@@ -196,6 +246,17 @@ def make_round_fn(
     is evaluated every ``cfg.eval_every`` rounds under ``lax.cond`` (NaN on
     the other rounds); with ``eval_data=None`` it scores the union training
     set (the paper's Fig.-1 protocol).
+
+    With ``mesh`` set (DESIGN.md §8) the local-update core runs as a
+    ``shard_map`` over the mesh's ``client_axis``: every device executes
+    local updates for the clients *resident* in its shard (cohort membership
+    becomes a weight mask, so there is no cross-device gather of client
+    data), and eq.-(6) aggregation happens as per-shard partial weighted
+    sums combined with ``psum`` — the parameter tree is never all-gathered.
+    Selection stays replicated (same kernel + key on every device ⇒
+    bit-identical cohorts vs. the single-device path); per-client losses are
+    refreshed in place on their home shard.  The state must be laid out with
+    :func:`shard_server_state` over the same mesh/axis.
     """
     strategies = tuple(strategies)
     k = cfg.clients_per_round
@@ -207,6 +268,84 @@ def make_round_fn(
         )
         for strat in strategies
     )
+    steps_of = lambda state: _steps_per_round(cfg, state.client_xs.shape[1])
+
+    def _single_device_body(state, k_batch, sel):
+        """Cohort gather + vmapped/mapped local updates on one device."""
+        batches = make_client_batches(cfg, k_batch, state.client_xs, state.client_ys, sel)
+        weights = jnp.take(state.client_sizes, sel)
+        round_step = rounds_lib.build_client_parallel_round(
+            batched_loss, cfg.lr, steps_of(state), grad_clip=cfg.grad_clip,
+            sequential_clients=sequential_clients,
+        )
+        params, mean_loss = round_step(state.params, batches, weights)
+        # refresh last-known losses for the selected clients
+        sel_losses = loss_of(
+            params, jnp.take(state.client_xs, sel, 0), jnp.take(state.client_ys, sel, 0)
+        )
+        losses = state.losses.at[sel].set(sel_losses)
+        g = metrics_lib.gemd(
+            state.client_label_dists, state.client_sizes, sel, state.global_label_dist
+        )
+        return params, mean_loss, losses, g
+
+    def _sharded_body(state, k_batch, sel):
+        """shard_map core: in-place masked local updates + psum'd FedAvg.
+
+        Random *index plans* (permutations / replacement draws) are computed
+        at the jit level: residents adopt the batch key of their cohort slot,
+        so every selected client sees bit-identical batches to the gathered
+        path.  Only data slicing, the local SGD scans, and the psum'd
+        aggregation live inside the shard_map — fusing the random-bit
+        generation into the shard body miscompiles on jax 0.4.37 (clients
+        read other slots' draws).
+        """
+        shard_round = rounds_lib.build_shard_cohort_round(
+            batched_loss, cfg.lr, client_axis, grad_clip=cfg.grad_clip,
+            sequential_clients=sequential_clients,
+        )
+        c = state.losses.shape[0]
+        n_c = state.client_xs.shape[1]
+        slot_full = jnp.argmax(sel[None, :] == jnp.arange(c)[:, None], axis=1)
+        key_data = jax.random.key_data(jax.random.split(k_batch, k))
+        client_keys = jax.random.wrap_key_data(key_data[slot_full])
+        ids = batch_indices_from_keys(cfg, client_keys, n_c)  # (C, ...) | None
+
+        def local_body(sel, params, local_xs, local_ys, local_sizes,
+                       local_losses, local_dists, global_dist, *local_ids):
+            c_loc = local_xs.shape[0]
+            gids = lax.axis_index(client_axis) * c_loc + jnp.arange(c_loc)
+            mask = jnp.any(sel[None, :] == gids[:, None], axis=1)
+            batches = batches_from_indices(
+                cfg, local_ids[0] if local_ids else None, local_xs, local_ys
+            )
+            weights = local_sizes * mask
+            # GEMD (eq. 15) partials ride the round's single psum: the cohort
+            # label-mix numerator/denominator over this shard's residents
+            w = weights.astype(jnp.float32)
+            gemd_parts = ((w[:, None] * local_dists).sum(0), jnp.sum(w))
+            params, _, mean_loss, (num, den) = shard_round(
+                params, batches, weights, extras=gemd_parts
+            )
+            g = jnp.sum(jnp.abs(num / jnp.maximum(den, 1e-30) - global_dist))
+            # loss refresh stays on the client's home shard (no scatter)
+            fresh = loss_of(params, local_xs, local_ys)
+            losses = jnp.where(mask, fresh, local_losses)
+            return params, mean_loss, losses, g
+
+        lead = P(client_axis)
+        id_args = () if ids is None else (ids,)
+        body = _checked_shard_map(
+            local_body, mesh=mesh,
+            in_specs=(P(), P(), lead, lead, lead, lead, lead, P())
+            + (lead,) * len(id_args),
+            out_specs=(P(), P(), lead, P()),
+        )
+        return body(
+            sel, state.params, state.client_xs, state.client_ys,
+            state.client_sizes, state.losses, state.client_label_dists,
+            state.global_label_dist, *id_args,
+        )
 
     def round_fn(state: ServerState, _=None):
         t = state.round + 1
@@ -215,24 +354,10 @@ def make_round_fn(
             sel = branches[0](k_sel, state.selection_state())
         else:
             sel = lax.switch(state.strategy_index, branches, k_sel, state.selection_state())
-        batches = make_client_batches(cfg, k_batch, state.client_xs, state.client_ys, sel)
-        weights = jnp.take(state.client_sizes, sel)
-        steps = _steps_per_round(cfg, state.client_xs.shape[1])
-        round_step = rounds_lib.build_client_parallel_round(
-            batched_loss, cfg.lr, steps, grad_clip=cfg.grad_clip,
-            sequential_clients=sequential_clients,
-        )
-        params, mean_loss = round_step(state.params, batches, weights)
-
-        # refresh last-known losses for the selected clients
-        sel_losses = loss_of(
-            params, jnp.take(state.client_xs, sel, 0), jnp.take(state.client_ys, sel, 0)
-        )
-        losses = state.losses.at[sel].set(sel_losses)
-
-        g = metrics_lib.gemd(
-            state.client_label_dists, state.client_sizes, sel, state.global_label_dist
-        )
+        if mesh is None:
+            params, mean_loss, losses, g = _single_device_body(state, k_batch, sel)
+        else:
+            params, mean_loss, losses, g = _sharded_body(state, k_batch, sel)
 
         if accuracy_fn is None:
             acc = jnp.float32(jnp.nan)
@@ -307,7 +432,9 @@ def _scanned(round_fn, num_rounds: int):
 
 
 def run_scanned(
-    round_fn, state: ServerState, num_rounds: int
+    round_fn, state: ServerState, num_rounds: int,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    client_axis: str = CLIENT_AXIS,
 ) -> Tuple[ServerState, Dict[str, jax.Array]]:
     """Run ``num_rounds`` rounds as ONE compiled ``lax.scan`` program.
 
@@ -315,7 +442,13 @@ def run_scanned(
     ``(num_rounds,)`` axis.  Re-invocations with the same ``round_fn`` object
     and round count reuse the compiled executable (see the program-cache
     contract above).
+
+    ``mesh`` lays the state out with :func:`shard_server_state` before the
+    scan (idempotent if already sharded); pass the mesh the ``round_fn`` was
+    built with — single-device round_fns must be run without one.
     """
+    if mesh is not None:
+        state = shard_server_state(state, mesh, client_axis)
     return _scanned(round_fn, num_rounds)(state)
 
 
@@ -330,7 +463,9 @@ def _vmapped(round_fn, num_rounds: int):
 
 
 def run_many(
-    round_fn, stacked_state: ServerState, num_rounds: int
+    round_fn, stacked_state: ServerState, num_rounds: int,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    client_axis: str = CLIENT_AXIS,
 ) -> Tuple[ServerState, Dict[str, jax.Array]]:
     """Batched simulation: vmap the scanned run over stacked states.
 
@@ -341,7 +476,15 @@ def run_many(
     spectral caches ride in the stacked state (hoisted out of the vmapped
     round at :func:`init_server_state` time), so no branch of the grid pays
     an in-round ``eigh``.
+
+    With ``mesh``, every grid point's client axis (axis 1 of the stacked
+    client fields) lays out over the mesh — the batch axis stays replicated,
+    so the D-way cohort parallelism multiplies the grid parallelism.
     """
+    if mesh is not None:
+        stacked_state = shard_server_state(
+            stacked_state, mesh, client_axis, batch_dims=1
+        )
     return _vmapped(round_fn, num_rounds)(stacked_state)
 
 
@@ -359,6 +502,56 @@ def unstack_outputs(outputs: Dict[str, jax.Array]) -> List[Dict[str, np.ndarray]
 
 # -------------------------------------------------------------- state build
 
+# ServerState fields carrying one row per client: these shard over the mesh
+# client axis; everything else (params, kernel, spectral cache, PRNG key,
+# counters) replicates.  The kernel stays replicated on purpose — selection
+# needs the full Gram matrix and stays bit-identical across devices.
+CLIENT_SHARDED_FIELDS = (
+    "losses",
+    "profiles",
+    "client_xs",
+    "client_ys",
+    "client_sizes",
+    "client_label_dists",
+)
+
+
+def shard_server_state(
+    state: ServerState,
+    mesh: jax.sharding.Mesh,
+    client_axis: str = CLIENT_AXIS,
+    batch_dims: int = 0,
+) -> ServerState:
+    """Lay a :class:`ServerState` out over ``mesh``'s client axis.
+
+    Per-client fields (:data:`CLIENT_SHARDED_FIELDS`) get
+    ``NamedSharding(mesh, P(clients, ...))`` on their client dimension
+    (dimension ``batch_dims`` — pass ``batch_dims=1`` for :func:`stack_states`
+    batches); every other field is replicated.  Idempotent: re-sharding an
+    already-sharded state is a no-op device_put.
+    """
+    n_shards = mesh.shape[client_axis]
+    c = state.losses.shape[batch_dims]
+    if c % n_shards:
+        raise ValueError(
+            f"num_clients={c} not divisible by mesh axis "
+            f"{client_axis!r}={n_shards}"
+        )
+    replicated = NamedSharding(mesh, P())
+
+    def rep(tree):
+        return jax.tree_util.tree_map(lambda x: jax.device_put(x, replicated), tree)
+
+    def lead(x):
+        spec = client_axis_spec(x.ndim, client_axis, batch_dims=batch_dims)
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    updates = {f: lead(getattr(state, f)) for f in CLIENT_SHARDED_FIELDS}
+    for f in dataclasses.fields(state):
+        if f.name not in updates:
+            updates[f.name] = rep(getattr(state, f.name))
+    return ServerState(**updates)
+
 
 def init_server_state(
     cfg: FLConfig,
@@ -375,6 +568,8 @@ def init_server_state(
     losses: Optional[jax.Array] = None,
     cluster_labels: Optional[jax.Array] = None,
     eig_state: Optional[dpp_lib.KDPPSamplerState] = None,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    client_axis: str = CLIENT_AXIS,
 ) -> ServerState:
     """Algorithm-1 initialisation as a :class:`ServerState`.
 
@@ -384,7 +579,8 @@ def init_server_state(
     one loss pass for the initial last-known losses, and — when ``strategy``
     is a :class:`~repro.core.selection.ClusterSelection` — runs the one-shot
     host ``fit`` so the per-round draw is pure.  Any precomputed piece can be
-    passed in to skip recomputation.
+    passed in to skip recomputation.  ``mesh`` lays the result out with
+    :func:`shard_server_state` for the sharded execution path.
     """
     client_xs = jnp.asarray(client_xs)
     client_ys = jnp.asarray(client_ys)
@@ -430,7 +626,7 @@ def init_server_state(
     global_dist = metrics_lib.label_distribution(
         client_ys.reshape(-1), cfg.num_classes
     )
-    return ServerState(
+    state = ServerState(
         params=params,
         key=key if key is not None else jax.random.key(cfg.seed),
         round=jnp.asarray(0, jnp.int32),
@@ -446,6 +642,9 @@ def init_server_state(
         global_label_dist=global_dist,
         strategy_index=jnp.asarray(strategy_index, jnp.int32),
     )
+    if mesh is not None:
+        state = shard_server_state(state, mesh, client_axis)
+    return state
 
 
 # ------------------------------------------------------------------ history

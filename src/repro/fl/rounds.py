@@ -28,7 +28,9 @@ from repro import optim as optim_lib
 
 __all__ = [
     "weighted_average",
+    "build_local_update",
     "build_client_parallel_round",
+    "build_shard_cohort_round",
     "build_fedsgd_step",
     "build_server_opt_round",
 ]
@@ -50,26 +52,20 @@ def weighted_average(trees: PyTree, weights: jax.Array) -> PyTree:
     return jax.tree_util.tree_map(avg, trees)
 
 
-def build_client_parallel_round(
+def build_local_update(
     loss_fn: LossFn,
     lr: float,
-    local_steps: int,
     grad_clip: Optional[float] = None,
-    client_constraint: Optional[Callable[[PyTree], PyTree]] = None,
     unroll=1,
-    sequential_clients: bool = False,
     micro_batches: int = 1,
-) -> Callable[[PyTree, PyTree, jax.Array], Tuple[PyTree, jax.Array]]:
-    """Mode A round step.
+) -> Callable[[PyTree, PyTree], Tuple[PyTree, jax.Array]]:
+    """One client's E local SGD passes (eq. 3-5) as a pure function.
 
-    ``round_step(global_params, client_batches, client_weights)`` where every
-    leaf of ``client_batches`` has leading shape ``(C_p, local_steps, ...)``
-    and ``client_weights`` is ``(C_p,)`` (= n_c).  Returns the aggregated
-    global params (eq. 6) and the mean local loss.
-
-    ``client_constraint`` (used by the distributed launchers) applies a
-    sharding constraint to the per-client broadcast params so the leading
-    client axis lays out over the mesh ``data`` axis.
+    ``local_update(params, steps_batch) -> (params, losses)`` where every leaf
+    of ``steps_batch`` has leading shape ``(local_steps, ...)``.  Shared by
+    the vmapped/mapped single-device round (:func:`build_client_parallel_round`)
+    and the mesh-sharded round (:func:`build_shard_cohort_round`) so both
+    execute bit-identical per-client math.
     """
 
     def _full_grad(p, batch):
@@ -103,6 +99,34 @@ def build_client_parallel_round(
 
         return lax.scan(one_step, params, steps_batch, unroll=unroll)
 
+    return local_update
+
+
+def build_client_parallel_round(
+    loss_fn: LossFn,
+    lr: float,
+    local_steps: int,
+    grad_clip: Optional[float] = None,
+    client_constraint: Optional[Callable[[PyTree], PyTree]] = None,
+    unroll=1,
+    sequential_clients: bool = False,
+    micro_batches: int = 1,
+) -> Callable[[PyTree, PyTree, jax.Array], Tuple[PyTree, jax.Array]]:
+    """Mode A round step.
+
+    ``round_step(global_params, client_batches, client_weights)`` where every
+    leaf of ``client_batches`` has leading shape ``(C_p, local_steps, ...)``
+    and ``client_weights`` is ``(C_p,)`` (= n_c).  Returns the aggregated
+    global params (eq. 6) and the mean local loss.
+
+    ``client_constraint`` (used by the distributed launchers) applies a
+    sharding constraint to the per-client broadcast params so the leading
+    client axis lays out over the mesh ``data`` axis.
+    """
+    local_update = build_local_update(
+        loss_fn, lr, grad_clip=grad_clip, unroll=unroll, micro_batches=micro_batches
+    )
+
     def round_step(global_params, client_batches, client_weights):
         n_clients = client_weights.shape[0]
         per_client = jax.tree_util.tree_map(
@@ -121,6 +145,82 @@ def build_client_parallel_round(
             new_params, losses = jax.vmap(local_update)(per_client, client_batches)
         agg = weighted_average(new_params, client_weights)
         return agg, jnp.mean(losses)
+
+    return round_step
+
+
+def build_shard_cohort_round(
+    loss_fn: LossFn,
+    lr: float,
+    axis: str,
+    grad_clip: Optional[float] = None,
+    unroll=1,
+    sequential_clients: bool = True,
+    micro_batches: int = 1,
+) -> Callable[[PyTree, PyTree, jax.Array], Tuple[PyTree, jax.Array]]:
+    """Mesh-sharded Mode-A round step for ONE client shard.
+
+    Must be called *inside* a ``shard_map`` body whose mesh carries ``axis``:
+    each device runs local updates only for the clients resident in its shard
+    (unselected clients carry weight 0), then the eq.-(6) aggregation happens
+    as per-shard partial weighted sums combined with ``lax.psum`` — the
+    parameter tree is never all-gathered, each device contributes exactly its
+    Σ_local w_c·w_c term.
+
+    ``round_step(global_params, local_batches, local_weights, extras=None)``
+    where every leaf of ``local_batches`` has leading shape ``(C_loc,
+    local_steps, ...)`` and ``local_weights`` is ``(C_loc,)`` with ``0``
+    marking clients outside the round's cohort.  Returns the aggregated
+    global params (replicated), the per-shard client losses ``(C_loc,)``
+    (mean over local steps; computed for every resident client), the cohort
+    mean local loss (replicated), and ``extras`` summed over the axis —
+    callers fold their own per-shard partials (e.g. GEMD numerators) into
+    the round's single psum rendezvous instead of paying a second one.
+    """
+    local_update = build_local_update(
+        loss_fn, lr, grad_clip=grad_clip, unroll=unroll, micro_batches=micro_batches
+    )
+
+    def round_step(global_params, local_batches, local_weights, extras=None):
+        c_loc = local_weights.shape[0]
+        per_client = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (c_loc,) + x.shape), global_params
+        )
+        if sequential_clients:
+            new_params, losses = jax.lax.map(
+                lambda args: local_update(*args), (per_client, local_batches)
+            )
+        else:
+            new_params, losses = jax.vmap(local_update)(per_client, local_batches)
+
+        # eq. (6) as partial weighted sums: Σ_c w_c·θ_c / Σ_c w_c.  ALL the
+        # round's partial reductions ride ONE psum call so the per-round
+        # cross-device rendezvous count stays constant in tree size.
+        w = local_weights.astype(jnp.float32)
+        mask = (w > 0).astype(jnp.float32)
+        client_losses = jnp.mean(losses, axis=tuple(range(1, losses.ndim)))
+
+        def part_leaf(x):
+            wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+            return jnp.sum(wb * x.astype(jnp.float32), axis=0)
+
+        partials = jax.tree_util.tree_map(part_leaf, new_params)
+        partials, wsum, tot, cnt, extras = lax.psum(
+            (
+                partials,
+                jnp.sum(w),
+                jnp.sum(mask * client_losses),
+                jnp.sum(mask),
+                extras,
+            ),
+            axis,
+        )
+        inv = 1.0 / jnp.maximum(wsum, 1e-30)
+        agg = jax.tree_util.tree_map(
+            lambda part, x: (part * inv).astype(x.dtype), partials, new_params
+        )
+        mean_loss = tot / jnp.maximum(cnt, 1.0)
+        return agg, client_losses, mean_loss, extras
 
     return round_step
 

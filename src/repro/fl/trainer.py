@@ -72,7 +72,7 @@ def _strategy_sig(s: selection_lib.SelectionStrategy):
     )
 
 
-def _cached_round_fn(cfg: FLConfig, loss_fn, accuracy_fn, strategy):
+def _cached_round_fn(cfg: FLConfig, loss_fn, accuracy_fn, strategy, mesh, client_axis):
     key = (
         loss_fn,
         accuracy_fn,
@@ -85,10 +85,13 @@ def _cached_round_fn(cfg: FLConfig, loss_fn, accuracy_fn, strategy):
         cfg.eval_every,
         cfg.local_steps,
         cfg.sample_with_replacement,
+        mesh,
+        client_axis,
     )
     if key not in _ROUND_FN_CACHE:
         _ROUND_FN_CACHE[key] = engine_lib.make_round_fn(
-            cfg, loss_fn, (strategy,), accuracy_fn=accuracy_fn
+            cfg, loss_fn, (strategy,), accuracy_fn=accuracy_fn,
+            mesh=mesh, client_axis=client_axis,
         )
     return _ROUND_FN_CACHE[key]
 
@@ -106,6 +109,8 @@ class FLTrainer:
         eval_xs: Optional[np.ndarray] = None,
         eval_ys: Optional[np.ndarray] = None,
         accuracy_fn: Optional[Callable] = None,
+        mesh: Optional[jax.sharding.Mesh] = None,
+        client_axis: str = engine_lib.CLIENT_AXIS,
     ):
         assert client_xs.shape[0] == cfg.num_clients
         self.cfg = cfg
@@ -113,6 +118,11 @@ class FLTrainer:
         self.feature_fn = feature_fn
         self.strategy = strategy
         self.params = params
+        # mesh-sharded cohort execution (DESIGN.md §8): the engine path lays
+        # ServerState out over the mesh's client axis and runs local updates
+        # as a shard_map; run_legacy always stays single-device.
+        self.mesh = mesh
+        self.client_axis = client_axis
         self.client_xs = jnp.asarray(client_xs)
         self.client_ys = jnp.asarray(client_ys)
         self.eval_xs = jnp.asarray(eval_xs) if eval_xs is not None else None
@@ -230,10 +240,11 @@ class FLTrainer:
         return self._eig_state
 
     def server_state(self) -> engine_lib.ServerState:
-        """Pack the trainer's current server knowledge into a ServerState."""
+        """Pack the trainer's current server knowledge into a ServerState
+        (laid out over ``self.mesh``'s client axis when a mesh is set)."""
         cfg = self.cfg
         cluster_labels = self._cluster_labels()
-        return engine_lib.ServerState(
+        state = engine_lib.ServerState(
             params=self.params,
             key=self.key,
             round=jnp.asarray(self.round_state.round, jnp.int32),
@@ -249,6 +260,11 @@ class FLTrainer:
             global_label_dist=self.global_label_dist,
             strategy_index=jnp.asarray(0, jnp.int32),
         )
+        if self.mesh is not None:
+            state = engine_lib.shard_server_state(
+                state, self.mesh, self.client_axis
+            )
+        return state
 
     def round_fn(self):
         """The engine's pure per-round transition for this trainer.
@@ -267,10 +283,12 @@ class FLTrainer:
                     self.cfg, self.loss_fn, (self.strategy,),
                     accuracy_fn=self.accuracy_fn,
                     eval_data=(self.eval_xs, self.eval_ys),
+                    mesh=self.mesh, client_axis=self.client_axis,
                 )
             else:
                 self._round_fn_memo = _cached_round_fn(
-                    self.cfg, self.loss_fn, self.accuracy_fn, self.strategy
+                    self.cfg, self.loss_fn, self.accuracy_fn, self.strategy,
+                    self.mesh, self.client_axis,
                 )
         return self._round_fn_memo
 
@@ -317,6 +335,12 @@ class FLTrainer:
                     eig_state=self.eig_state(),  # re-decompose refreshed kernel
                     cluster_labels=self._cluster_labels(),
                 )
+                if self.mesh is not None:
+                    # restore the mesh layout on the refreshed host arrays so
+                    # every segment reuses one compiled scan program
+                    state = engine_lib.shard_server_state(
+                        state, self.mesh, self.client_axis
+                    )
         self._absorb(state)
         merged = {
             k: np.concatenate([o[k] for o in outs], axis=0) for k in outs[0]

@@ -11,9 +11,14 @@ carries the data-parallel/client dimension across pods (DCN-ish boundary).
 
 from __future__ import annotations
 
-import jax
+from typing import Optional
 
-__all__ = ["make_production_mesh", "HW"]
+import jax
+import numpy as np
+
+from repro.launch.sharding import CLIENT_AXIS
+
+__all__ = ["make_production_mesh", "make_client_mesh", "HW"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,6 +28,26 @@ def make_production_mesh(*, multi_pod: bool = False):
     if axis_type is not None:
         return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
     return jax.make_mesh(shape, axes)
+
+
+def make_client_mesh(
+    num_devices: Optional[int] = None, axis: str = CLIENT_AXIS
+) -> jax.sharding.Mesh:
+    """1-D mesh carrying the federation's client axis (DESIGN.md §8).
+
+    Uses the first ``num_devices`` visible devices (all of them by default) —
+    on CPU hosts scale the axis with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    devices = jax.devices()
+    if num_devices is not None:
+        if num_devices > len(devices):
+            raise ValueError(
+                f"requested {num_devices} devices, only {len(devices)} visible "
+                "(set --xla_force_host_platform_device_count on CPU)"
+            )
+        devices = devices[:num_devices]
+    return jax.sharding.Mesh(np.asarray(devices), (axis,))
 
 
 class HW:

@@ -33,7 +33,22 @@ __all__ = [
     "cache_logical_specs",
     "specs_from_logical",
     "optimizer_state_specs",
+    "CLIENT_AXIS",
+    "client_axis_spec",
 ]
+
+# Mesh axis name carrying the federation's client dimension (DESIGN.md §8).
+# The FL engine shards ServerState's per-client fields over it and runs the
+# local-update core as a shard_map; launchers build the mesh with
+# ``repro.launch.mesh.make_client_mesh``.
+CLIENT_AXIS = "clients"
+
+
+def client_axis_spec(ndim: int, axis: str = CLIENT_AXIS, batch_dims: int = 0):
+    """PartitionSpec sharding dimension ``batch_dims`` of a rank-``ndim``
+    per-client array over the client mesh axis (leading batch dims, e.g. a
+    ``stack_states`` grid axis, stay replicated)."""
+    return P(*([None] * batch_dims), axis, *([None] * (ndim - batch_dims - 1)))
 
 
 class Ax(tuple):

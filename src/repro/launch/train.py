@@ -26,6 +26,7 @@ from repro.core import make_strategy
 from repro.data import make_token_dataset
 from repro.fl import engine as engine_lib
 from repro.fl import rounds as rounds_lib
+from repro.launch.mesh import make_client_mesh
 from repro.models import transformer as T
 
 
@@ -52,7 +53,22 @@ def run_fl(args):
     Algorithm-1 init (profiles → eq.-14 kernel) runs once on host; then all
     ``--rounds`` rounds — selection, per-client local steps, aggregation,
     loss refresh, topic-GEMD — execute as ONE compiled ``lax.scan``.
+
+    ``--shard-clients N`` lays the federation out over an N-device client
+    mesh (DESIGN.md §8): same engine, same scan, with the local-update core
+    shard_mapped so each device trains its resident clients and the FedAvg
+    reduction runs as psum'd partial sums.  On CPU hosts combine with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
     """
+    mesh = None
+    shard_clients = getattr(args, "shard_clients", 0)
+    if shard_clients:
+        if args.clients % shard_clients:
+            raise SystemExit(
+                f"--clients={args.clients} must be divisible by "
+                f"--shard-clients={shard_clients}"
+            )
+        mesh = make_client_mesh(shard_clients)
     spec = get_arch(args.arch)
     cfg = spec.model.reduced(param_dtype="float32", dtype="float32", remat=False)
     params = T.init_params(jax.random.key(args.seed), cfg)
@@ -89,9 +105,10 @@ def run_fl(args):
     state = engine_lib.init_server_state(
         flcfg, params, loss_fn, None, clients, topics,
         strategy=strategy, profiles=profiles, losses=jnp.ones((c,)),
+        mesh=mesh,
     )
-    round_fn = engine_lib.make_round_fn(flcfg, loss_fn, (strategy,))
-    state, outs = engine_lib.run_scanned(round_fn, state, args.rounds)
+    round_fn = engine_lib.make_round_fn(flcfg, loss_fn, (strategy,), mesh=mesh)
+    state, outs = engine_lib.run_scanned(round_fn, state, args.rounds, mesh=mesh)
     sels = np.asarray(outs["selected"])
     losses = np.asarray(outs["loss"])
     gemds = np.asarray(outs["gemd"])
@@ -147,6 +164,9 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--shard-clients", type=int, default=0,
+                    help="shard the client axis over an N-device mesh "
+                         "(FL mode; DESIGN.md §8)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     (run_fl if args.mode == "fl" else run_pretrain)(args)

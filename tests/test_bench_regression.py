@@ -1,0 +1,100 @@
+"""The CI bench-regression gate: passes at parity, bites on slowdowns."""
+
+import json
+import os
+
+import pytest
+
+from benchmarks import check_regression as cr
+
+DPP = {
+    "host_cores": 8,
+    "scanned_rounds_per_sec": {
+        "16": {"baseline": 100.0, "cached": 400.0, "speedup": 4.0}
+    },
+}
+SHARD = {
+    "host_cores": 8,
+    "by_devices": {"1": {"rounds_per_sec": 50.0},
+                   "8": {"rounds_per_sec": 120.0}},
+}
+
+
+def _write(path, payload):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f)
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    base = tmp_path / "baselines"
+    cur = tmp_path / "current"
+    for d in (base, cur):
+        _write(str(d / "BENCH_dpp_smoke.json"), DPP)
+        _write(str(d / "BENCH_shard_smoke.json"), SHARD)
+    return str(cur), str(base)
+
+
+def test_identical_metrics_pass(dirs):
+    cur, base = dirs
+    assert cr.check(cur, base, tolerance=0.25) == []
+
+
+def test_small_regression_within_tolerance_passes(dirs):
+    cur, base = dirs
+    assert cr.check(cur, base, tolerance=0.25, scale=0.80) == []
+
+
+def test_injected_slowdown_fails(dirs):
+    cur, base = dirs
+    failures = cr.check(cur, base, tolerance=0.25, scale=0.5)
+    assert len(failures) == 4  # every throughput metric regressed
+    assert all("<" in f for f in failures)
+
+
+def test_speedup_never_fails(dirs):
+    cur, base = dirs
+    assert cr.check(cur, base, tolerance=0.25, scale=3.0) == []
+
+
+def test_cross_hardware_skips_comparison(dirs, tmp_path):
+    """Baselines from a different box never fail the gate: throughput does
+    not transfer across core counts (ratios included — devN/dev1 scaling is
+    ceilinged by cores, tiny-shape ratios are noise)."""
+    cur = tmp_path / "cur2"
+    slow = json.loads(json.dumps(DPP))
+    slow["host_cores"] = 2
+    slow["scanned_rounds_per_sec"]["16"]["baseline"] = 10.0
+    slow["scanned_rounds_per_sec"]["16"]["cached"] = 10.0
+    _write(str(cur / "BENCH_dpp_smoke.json"), slow)
+    _write(str(cur / "BENCH_shard_smoke.json"), dict(SHARD, host_cores=2))
+    _, base = dirs
+    assert cr.check(str(cur), base, tolerance=0.25) == []
+
+
+def test_missing_current_json_fails(dirs):
+    cur, base = dirs
+    os.remove(os.path.join(cur, "BENCH_shard_smoke.json"))
+    failures = cr.check(cur, base, tolerance=0.25)
+    assert any("produced no JSON" in f for f in failures)
+
+
+def test_missing_baseline_skips(dirs, tmp_path):
+    cur, _ = dirs
+    empty = tmp_path / "empty_baselines"
+    empty.mkdir()
+    assert cr.check(cur, str(empty), tolerance=0.25) == []
+
+
+def test_main_exit_codes(dirs):
+    cur, base = dirs
+    cr.main(["--current-dir", cur, "--baseline-dir", base])  # passes
+    with pytest.raises(SystemExit):
+        cr.main(["--current-dir", cur, "--baseline-dir", base, "--scale", "0.5"])
+
+
+def test_repo_baselines_are_committed():
+    """The real baselines the CI gate reads must exist in-repo."""
+    for name in cr.MANIFEST:
+        assert os.path.exists(os.path.join(cr.BASELINE_DIR, name)), name

@@ -1,0 +1,260 @@
+"""Mesh-sharded engine parity (DESIGN.md §8).
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+``multidevice`` job) — with a single visible device the mesh tests skip.
+
+The contract under test: for any mesh size, the sharded execution path picks
+**bit-identical cohorts** (selection stays replicated: same kernel, same
+spectral cache, same key chain) and matches the single-device scan's params /
+losses / metrics to fp32 tolerance (eq.-(6) is re-associated into per-shard
+partial sums + psum).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import selection as selection_lib
+from repro.core import similarity as similarity_lib
+from repro.fl import engine
+from repro.fl.trainer import FLTrainer
+from repro.launch.mesh import make_client_mesh
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+FEAT, N_C, NCLS = 8, 6, 4
+
+
+def linear_loss(params, x, y):
+    logp = jax.nn.log_softmax(x @ params["w"] + params["b"])
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+
+def linear_accuracy(params, x, y):
+    return jnp.mean(jnp.argmax(x @ params["w"] + params["b"], -1) == y)
+
+
+def linear_features(params, x):
+    h = x @ params["w"] + params["b"]
+    return h, h
+
+
+def _federation(c, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(c, N_C, FEAT)).astype(np.float32))
+    ys = jnp.asarray(rng.integers(0, NCLS, size=(c, N_C)), jnp.int32)
+    params = {
+        "w": jnp.asarray(0.01 * rng.normal(size=(FEAT, NCLS)).astype(np.float32)),
+        "b": jnp.zeros((NCLS,), jnp.float32),
+    }
+    return xs, ys, params
+
+
+def _mesh():
+    n = jax.device_count()
+    return make_client_mesh(n), n
+
+
+def _state_and_cfg(c, k, strategy, **cfg_kw):
+    xs, ys, params = _federation(c)
+    cfg = engine.FLConfig(
+        num_clients=c, clients_per_round=k, local_epochs=2, lr=0.1,
+        rounds=8, eval_every=2, num_classes=NCLS, seed=0, **cfg_kw,
+    )
+    state = engine.init_server_state(
+        cfg, params, linear_loss, None, xs, ys,
+        strategy=strategy, profiles=xs.mean(axis=1),
+    )
+    return cfg, state
+
+
+def _max_param_diff(a, b):
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+@multidevice
+@pytest.mark.parametrize("strat_name", ["fl-dp3s", "fedavg"])
+def test_scanned_parity_vs_single_device(strat_name):
+    """Cohorts bit-identical, params/metrics within fp32 tolerance."""
+    from repro.core import make_strategy
+
+    strategy = make_strategy(strat_name)
+    mesh, n = _mesh()
+    c = 2 * n  # two resident clients per shard
+    cfg, state = _state_and_cfg(c, 4, strategy)
+    rounds = cfg.rounds
+
+    ref_fn = engine.make_round_fn(cfg, linear_loss, (strategy,),
+                                  accuracy_fn=linear_accuracy)
+    st_ref, out_ref = engine.run_scanned(ref_fn, state, rounds)
+
+    sh_fn = engine.make_round_fn(cfg, linear_loss, (strategy,),
+                                 accuracy_fn=linear_accuracy, mesh=mesh)
+    st_sh, out_sh = engine.run_scanned(sh_fn, state, rounds, mesh=mesh)
+
+    np.testing.assert_array_equal(
+        np.asarray(out_ref["selected"]), np.asarray(out_sh["selected"]),
+        err_msg="sharded cohorts diverged from the single-device scan",
+    )
+    assert _max_param_diff(st_ref.params, st_sh.params) < 1e-5
+    np.testing.assert_allclose(
+        np.asarray(st_ref.losses), np.asarray(st_sh.losses), atol=1e-5
+    )
+    for key in ("loss", "gemd"):
+        np.testing.assert_allclose(
+            np.asarray(out_ref[key]), np.asarray(out_sh[key]), atol=1e-5
+        )
+    # same eval grid: NaN off-rounds, matching accuracy on eval rounds
+    a_ref, a_sh = np.asarray(out_ref["acc"]), np.asarray(out_sh["acc"])
+    np.testing.assert_array_equal(np.isnan(a_ref), np.isnan(a_sh))
+    np.testing.assert_allclose(
+        a_ref[~np.isnan(a_ref)], a_sh[~np.isnan(a_sh)], atol=1e-5
+    )
+
+
+@multidevice
+def test_scanned_parity_minibatch_permutations():
+    """Per-client permutation batches follow the cohort-slot keys exactly."""
+    strategy = selection_lib.DPPSelection()
+    mesh, n = _mesh()
+    cfg, state = _state_and_cfg(2 * n, 4, strategy, local_batch_size=3)
+
+    ref_fn = engine.make_round_fn(cfg, linear_loss, (strategy,))
+    st_ref, out_ref = engine.run_scanned(ref_fn, state, cfg.rounds)
+    sh_fn = engine.make_round_fn(cfg, linear_loss, (strategy,), mesh=mesh)
+    st_sh, out_sh = engine.run_scanned(sh_fn, state, cfg.rounds, mesh=mesh)
+
+    np.testing.assert_array_equal(
+        np.asarray(out_ref["selected"]), np.asarray(out_sh["selected"])
+    )
+    assert _max_param_diff(st_ref.params, st_sh.params) < 1e-5
+
+
+@multidevice
+def test_full_participation_cohort():
+    """k = C (the selection-light scaling regime): every shard trains all
+    residents; aggregate must match the gathered path."""
+    strategy = selection_lib.UniformSelection()
+    mesh, n = _mesh()
+    c = n
+    cfg, state = _state_and_cfg(c, c, strategy)
+
+    ref_fn = engine.make_round_fn(cfg, linear_loss, (strategy,))
+    st_ref, out_ref = engine.run_scanned(ref_fn, state, 4)
+    sh_fn = engine.make_round_fn(cfg, linear_loss, (strategy,), mesh=mesh)
+    st_sh, out_sh = engine.run_scanned(sh_fn, state, 4, mesh=mesh)
+
+    np.testing.assert_array_equal(
+        np.asarray(out_ref["selected"]), np.asarray(out_sh["selected"])
+    )
+    assert _max_param_diff(st_ref.params, st_sh.params) < 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out_ref["loss"]), np.asarray(out_sh["loss"]), atol=1e-5
+    )
+
+
+@multidevice
+def test_trainer_parity_across_reprofile_boundary():
+    """FLTrainer(mesh=...) crosses a reprofile_every segment boundary with the
+    same cohorts and fp32-close history as the single-device trainer."""
+    mesh, n = _mesh()
+    c = 2 * n
+    xs, ys, params = _federation(c)
+    cfg = engine.FLConfig(
+        num_clients=c, clients_per_round=4, local_epochs=1, lr=0.1,
+        rounds=6, eval_every=3, num_classes=NCLS, seed=0,
+        reprofile_every=4,  # boundary inside the 6-round run
+    )
+
+    def trainer(mesh_arg):
+        return FLTrainer(
+            cfg, params, linear_loss, linear_features, np.asarray(xs),
+            np.asarray(ys), selection_lib.DPPSelection(),
+            accuracy_fn=linear_accuracy, mesh=mesh_arg,
+        )
+
+    h_ref = trainer(None).run()
+    h_sh = trainer(mesh).run()
+    assert h_ref["round"] == h_sh["round"]
+    np.testing.assert_allclose(h_ref["acc"], h_sh["acc"], atol=1e-5)
+    np.testing.assert_allclose(h_ref["gemd"], h_sh["gemd"], atol=1e-5)
+    np.testing.assert_allclose(h_ref["loss"], h_sh["loss"], atol=1e-5)
+
+
+@multidevice
+def test_run_many_sharded_matches_unsharded():
+    """The vmapped grid composes with the client mesh (batch axis replicated,
+    client axis sharded)."""
+    strategy = selection_lib.DPPSelection()
+    mesh, n = _mesh()
+    cfg, s0 = _state_and_cfg(2 * n, 4, strategy)
+    s1 = dataclasses.replace(s0, key=jax.random.key(123))
+    stacked = engine.stack_states([s0, s1])
+
+    ref_fn = engine.make_round_fn(cfg, linear_loss, (strategy,))
+    _, out_ref = engine.run_many(ref_fn, stacked, 4)
+    sh_fn = engine.make_round_fn(cfg, linear_loss, (strategy,), mesh=mesh)
+    _, out_sh = engine.run_many(sh_fn, stacked, 4, mesh=mesh)
+
+    np.testing.assert_array_equal(
+        np.asarray(out_ref["selected"]), np.asarray(out_sh["selected"])
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_ref["loss"]), np.asarray(out_sh["loss"]), atol=1e-5
+    )
+
+
+@multidevice
+def test_shard_server_state_layout():
+    """Client fields land sharded over the mesh axis, the rest replicated."""
+    mesh, n = _mesh()
+    cfg, state = _state_and_cfg(2 * n, 4, selection_lib.UniformSelection())
+    sharded = engine.shard_server_state(state, mesh)
+
+    for f in engine.CLIENT_SHARDED_FIELDS:
+        arr = getattr(sharded, f)
+        shard_shapes = {s.data.shape for s in arr.addressable_shards}
+        assert len(shard_shapes) == 1
+        assert next(iter(shard_shapes))[0] == arr.shape[0] // n, f
+    # kernel replicated: every device holds the full (C, C) Gram matrix
+    kern_shards = {s.data.shape for s in sharded.kernel.addressable_shards}
+    assert kern_shards == {sharded.kernel.shape}
+
+
+def test_shard_server_state_divisibility_error():
+    mesh = make_client_mesh(jax.device_count())
+    if mesh.shape[engine.CLIENT_AXIS] == 1:
+        pytest.skip("needs >1 device for a real divisibility constraint")
+    cfg, state = _state_and_cfg(
+        mesh.shape[engine.CLIENT_AXIS] + 1, 2, selection_lib.UniformSelection()
+    )
+    with pytest.raises(ValueError, match="not divisible"):
+        engine.shard_server_state(state, mesh)
+
+
+def test_client_batches_from_keys_matches_gathered():
+    """Single-device identity: make_client_batches == take + from_keys."""
+    c, k = 6, 3
+    xs, ys, _ = _federation(c)
+    cfg = engine.FLConfig(
+        num_clients=c, clients_per_round=k, local_epochs=2,
+        local_batch_size=2, num_classes=NCLS,
+    )
+    key = jax.random.key(7)
+    sel = jnp.asarray([4, 0, 2], jnp.int32)
+    ref = engine.make_client_batches(cfg, key, xs, ys, sel)
+    keys = jax.random.split(key, k)
+    alt = engine.client_batches_from_keys(
+        cfg, keys, jnp.take(xs, sel, 0), jnp.take(ys, sel, 0)
+    )
+    for a, b in zip(ref, alt):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
