@@ -57,6 +57,11 @@ def _shard_metrics(payload: Dict):
     out = {}
     for n, row in payload.get("by_devices", {}).items():
         out[f"rounds_per_sec.dev{n}"] = float(row["rounds_per_sec"])
+    # capacity-slot sweep (DESIGN.md §8): both arms per cohort size, so the
+    # slotted path's win can't silently regress back to resident-mode cost
+    for kk, row in payload.get("k_sweep", {}).get("by_k", {}).items():
+        for variant, rps in row.get("rounds_per_sec", {}).items():
+            out[f"slot_rounds_per_sec.k{kk}.{variant}"] = float(rps)
     return out, payload.get("host_cores")
 
 

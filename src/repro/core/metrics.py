@@ -10,7 +10,18 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gemd", "label_distribution", "cohort_label_distribution"]
+__all__ = ["safe_div", "gemd", "label_distribution", "cohort_label_distribution"]
+
+
+def safe_div(num: jax.Array, den: jax.Array, eps: float = 1e-30) -> jax.Array:
+    """``num / max(den, eps)`` — the weighted-sum denominator guard.
+
+    One shared definition for every Σwᵢ·xᵢ / Σwᵢ normalisation (eq. 6 FedAvg,
+    eq. 15 cohort label mix): an all-zero weight vector yields 0, never
+    inf/NaN.  ``eps`` floors only the denominator, so any real weight sum
+    (≥ 1 sample) is untouched.
+    """
+    return num / jnp.maximum(den, eps)
 
 
 def label_distribution(ys: jax.Array, num_classes: int) -> jax.Array:
@@ -29,7 +40,7 @@ def cohort_label_distribution(
     """
     n = client_sizes[selected].astype(jnp.float32)
     d = client_dists[selected]
-    return (n[:, None] * d).sum(0) / jnp.maximum(n.sum(), 1e-30)
+    return safe_div((n[:, None] * d).sum(0), n.sum())
 
 
 def gemd(

@@ -106,6 +106,13 @@ class FLConfig:
     grad_clip: Optional[float] = None  # stabilises late-round full-batch SGD
     local_steps: Optional[int] = None  # explicit steps/round (token workloads)
     sample_with_replacement: bool = False  # iid batch draws instead of perms
+    # Capacity-slot scheduling (DESIGN.md §8, sharded path only): max cohort
+    # clients trained per shard.  None = legacy resident execution (every
+    # resident computes a possibly-zero-weighted update); an int packs each
+    # shard's selected residents into cap = min(C_loc, cohort_cap) slots so
+    # k ≪ C cohorts stop paying D·(C/D) redundant local updates.  Must be
+    # >= min(clients_per_round, C_loc) so no shard can overflow its slots.
+    cohort_cap: Optional[int] = None
 
 
 @jax.tree_util.register_dataclass
@@ -150,12 +157,20 @@ class ServerState:
 # ----------------------------------------------------------------- batches
 
 
+def _num_batches(n_c: int, batch_size: int) -> int:
+    """Minibatches per local epoch: ``max(1, n_c // b)`` (drop-remainder, at
+    least one batch).  The ONE definition shared by :func:`_steps_per_round`
+    and :func:`batches_from_indices` — sizing the jitted scan and slicing the
+    data must agree or per-step batches silently drift."""
+    return max(1, n_c // batch_size)
+
+
 def _steps_per_round(cfg: FLConfig, n_c: int) -> int:
     if cfg.local_steps is not None:
         return cfg.local_steps
     if cfg.local_batch_size is None:
         return cfg.local_epochs  # E full-batch passes (paper eq. 4)
-    return cfg.local_epochs * max(1, n_c // cfg.local_batch_size)
+    return cfg.local_epochs * _num_batches(n_c, cfg.local_batch_size)
 
 
 def batch_indices_from_keys(cfg: FLConfig, keys, n_c: int):
@@ -192,7 +207,10 @@ def batches_from_indices(cfg: FLConfig, ids, xs, ys):
         xb = jax.vmap(jnp.take, in_axes=(0, 0, None))(xs, ids, 0)
         yb = jax.vmap(jnp.take, in_axes=(0, 0, None))(ys, ids, 0)
         return (xb, yb)
-    nb = max(1, n_c // b)
+    # clamp to the local dataset: n_c < b means ONE short full batch (the
+    # same count _num_batches floors to), not an impossible (nb, b) reshape
+    b = min(b, n_c)
+    nb = _num_batches(n_c, b)
     perm = ids
     xs = jnp.take_along_axis(
         xs, perm.reshape(perm.shape + (1,) * (xs.ndim - 2)), axis=1
@@ -257,9 +275,28 @@ def make_round_fn(
     bit-identical cohorts vs. the single-device path); per-client losses are
     refreshed in place on their home shard.  The state must be laid out with
     :func:`shard_server_state` over the same mesh/axis.
+
+    ``cfg.cohort_cap`` switches the sharded body to capacity-slot execution:
+    each shard packs its selected residents into ``cap = min(C_loc,
+    cohort_cap)`` slots (slot table computed at the jit level from the
+    replicated cohort; batch-index plans are generated **sized to slots**,
+    ``D·cap`` rows instead of ``C``), runs local updates only over slots,
+    and scatters losses back to resident layout — same selection, same
+    single-psum aggregation, ``C_loc/cap``× less local-update work for
+    k ≪ C cohorts.  Ignored without a mesh (the single-device body already
+    gathers exactly the k selected clients).
     """
     strategies = tuple(strategies)
     k = cfg.clients_per_round
+    if mesh is not None and cfg.cohort_cap is not None:
+        n_shards = mesh.shape[client_axis]
+        c_loc_cfg = cfg.num_clients // n_shards
+        if cfg.cohort_cap < min(k, c_loc_cfg):
+            raise ValueError(
+                f"cohort_cap={cfg.cohort_cap} < min(clients_per_round={k}, "
+                f"C_loc={c_loc_cfg}): a shard could hold more cohort members "
+                "than slots (clients would be silently dropped)"
+            )
     batched_loss = lambda p, batch: loss_fn(p, batch[0], batch[1])
     loss_of = jax.vmap(loss_fn, in_axes=(None, 0, 0))
     branches = tuple(
@@ -327,7 +364,7 @@ def make_round_fn(
             params, _, mean_loss, (num, den) = shard_round(
                 params, batches, weights, extras=gemd_parts
             )
-            g = jnp.sum(jnp.abs(num / jnp.maximum(den, 1e-30) - global_dist))
+            g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
             # loss refresh stays on the client's home shard (no scatter)
             fresh = loss_of(params, local_xs, local_ys)
             losses = jnp.where(mask, fresh, local_losses)
@@ -347,6 +384,92 @@ def make_round_fn(
             state.global_label_dist, *id_args,
         )
 
+    def _slot_sharded_body(state, k_batch, sel):
+        """Capacity-slot shard_map core: per-shard top-``cap`` slot gather.
+
+        The slot table is computed at the jit level from the replicated
+        cohort (``sel``): for each shard, a stable argsort over the resident
+        cohort mask packs selected residents (ascending local position)
+        first, padded with unselected residents up to ``cap`` — padding
+        slots carry weight 0 and behave exactly like resident mode's
+        zero-weighted clients, only there are ``cap`` of them instead of
+        ``C_loc``.  Batch-index plans are generated sized to slots (D·cap
+        keyed rows, each slot adopting its client's cohort-position key, so
+        selected clients see bit-identical batches to the other paths) and
+        shard over the client axis alongside the slot positions.  Inside the
+        shard: slot-gather data, build slot batches, ``cap`` local SGD
+        scans, the same single psum (FedAvg/loss/GEMD partials), and the
+        loss refresh runs over slots only before scattering home.
+        """
+        c = state.losses.shape[0]
+        n_c = state.client_xs.shape[1]
+        n_shards = mesh.shape[client_axis]
+        c_loc = c // n_shards
+        cap = min(c_loc, cfg.cohort_cap)
+        shard_round = rounds_lib.build_shard_cohort_round(
+            batched_loss, cfg.lr, client_axis, grad_clip=cfg.grad_clip,
+            sequential_clients=sequential_clients, cap=cap,
+        )
+        in_cohort = jnp.any(
+            sel[None, :] == jnp.arange(c)[:, None], axis=1
+        ).reshape(n_shards, c_loc)
+        # (D, cap) local resident positions: selected-first, stable order
+        slot_pos = jnp.argsort(~in_cohort, axis=1, stable=True)[:, :cap]
+        slot_gid = slot_pos + jnp.arange(n_shards)[:, None] * c_loc
+        slot_cohort = jnp.argmax(
+            sel[None, None, :] == slot_gid[..., None], axis=-1
+        )  # (D, cap) cohort position (0 for weight-0 padding slots)
+        key_data = jax.random.key_data(jax.random.split(k_batch, k))
+        slot_keys = jax.random.wrap_key_data(key_data[slot_cohort.reshape(-1)])
+        ids = batch_indices_from_keys(cfg, slot_keys, n_c)  # (D*cap, ...) | None
+        flat_pos = slot_pos.reshape(-1)  # (D*cap,)
+
+        def local_body(sel, slot_index, params, local_xs, local_ys,
+                       local_sizes, local_losses, local_dists, global_dist,
+                       *slot_ids):
+            c_loc_ = local_xs.shape[0]
+            gids = lax.axis_index(client_axis) * c_loc_ + jnp.arange(c_loc_)
+            mask = jnp.any(sel[None, :] == gids[:, None], axis=1)
+            weights = local_sizes * mask
+            slot_xs = jnp.take(local_xs, slot_index, axis=0)
+            slot_ys = jnp.take(local_ys, slot_index, axis=0)
+            batches = batches_from_indices(
+                cfg, slot_ids[0] if slot_ids else None, slot_xs, slot_ys
+            )
+            # GEMD (eq. 15) partials are unchanged from resident mode (the
+            # resident-layout mask is already O(C_loc) trivia) and ride the
+            # round's single psum
+            w = weights.astype(jnp.float32)
+            gemd_parts = ((w[:, None] * local_dists).sum(0), jnp.sum(w))
+            params, _, mean_loss, (num, den) = shard_round(
+                params, batches, weights, slot_index, extras=gemd_parts
+            )
+            g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
+            # loss refresh over slots only — the cap-not-C_loc saving applies
+            # to the refresh pass too; unselected residents keep their last
+            # known loss (scatter of distinct local positions, no collisions)
+            fresh = loss_of(params, slot_xs, slot_ys)
+            keep = jnp.take(local_losses, slot_index)
+            slot_mask = jnp.take(mask, slot_index)
+            losses = local_losses.at[slot_index].set(
+                jnp.where(slot_mask, fresh, keep)
+            )
+            return params, mean_loss, losses, g
+
+        lead = P(client_axis)
+        id_args = () if ids is None else (ids,)
+        body = _checked_shard_map(
+            local_body, mesh=mesh,
+            in_specs=(P(), lead, P(), lead, lead, lead, lead, lead, P())
+            + (lead,) * len(id_args),
+            out_specs=(P(), P(), lead, P()),
+        )
+        return body(
+            sel, flat_pos, state.params, state.client_xs, state.client_ys,
+            state.client_sizes, state.losses, state.client_label_dists,
+            state.global_label_dist, *id_args,
+        )
+
     def round_fn(state: ServerState, _=None):
         t = state.round + 1
         key, k_sel, k_batch = jax.random.split(state.key, 3)
@@ -356,6 +479,8 @@ def make_round_fn(
             sel = lax.switch(state.strategy_index, branches, k_sel, state.selection_state())
         if mesh is None:
             params, mean_loss, losses, g = _single_device_body(state, k_batch, sel)
+        elif cfg.cohort_cap is not None:
+            params, mean_loss, losses, g = _slot_sharded_body(state, k_batch, sel)
         else:
             params, mean_loss, losses, g = _sharded_body(state, k_batch, sel)
 
@@ -445,7 +570,10 @@ def run_scanned(
 
     ``mesh`` lays the state out with :func:`shard_server_state` before the
     scan (idempotent if already sharded); pass the mesh the ``round_fn`` was
-    built with — single-device round_fns must be run without one.
+    built with — single-device round_fns must be run without one.  Slot-capped
+    round_fns (``cfg.cohort_cap``, DESIGN.md §8) run through this exact path:
+    the state layout is identical (slots are transient inside the round), so
+    no extra argument is needed here.
     """
     if mesh is not None:
         state = shard_server_state(state, mesh, client_axis)
@@ -480,6 +608,8 @@ def run_many(
     With ``mesh``, every grid point's client axis (axis 1 of the stacked
     client fields) lays out over the mesh — the batch axis stays replicated,
     so the D-way cohort parallelism multiplies the grid parallelism.
+    Slot-capped round_fns (``cfg.cohort_cap``) compose unchanged: the cap
+    applies per grid point inside the vmapped round.
     """
     if mesh is not None:
         stacked_state = shard_server_state(
@@ -528,7 +658,9 @@ def shard_server_state(
     ``NamedSharding(mesh, P(clients, ...))`` on their client dimension
     (dimension ``batch_dims`` — pass ``batch_dims=1`` for :func:`stack_states`
     batches); every other field is replicated.  Idempotent: re-sharding an
-    already-sharded state is a no-op device_put.
+    already-sharded state is a no-op device_put.  The layout is the same with
+    or without ``cfg.cohort_cap``: capacity slots are a transient in-round
+    compaction, never part of the persistent state.
     """
     n_shards = mesh.shape[client_axis]
     c = state.losses.shape[batch_dims]
@@ -662,11 +794,15 @@ def history_from_outputs(
     accuracy of a final round that is not an eval round (the scan only
     evaluates on the eval grid)."""
     rounds = np.asarray(outputs["round"]).astype(int)
+    hist: Dict[str, List] = {"round": [], "acc": [], "gemd": [], "loss": []}
+    if rounds.size == 0:
+        # zero-round runs (e.g. a run_many grid scanned for 0 rounds) have
+        # no history — not an IndexError on rounds[-1]
+        return hist
     acc = np.asarray(outputs["acc"], np.float64)
     gemd = np.asarray(outputs["gemd"], np.float64)
     loss = np.asarray(outputs["loss"], np.float64)
     n = int(rounds[-1])
-    hist: Dict[str, List] = {"round": [], "acc": [], "gemd": [], "loss": []}
     for i, t in enumerate(rounds):
         t = int(t)
         if t % eval_every == 0 or t == n:

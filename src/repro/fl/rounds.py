@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import optim as optim_lib
+from repro.core.metrics import safe_div
 
 __all__ = [
     "weighted_average",
@@ -42,8 +43,7 @@ LossFn = Callable[[PyTree, PyTree], jax.Array]
 
 def weighted_average(trees: PyTree, weights: jax.Array) -> PyTree:
     """Eq. (6): Σ_c (n_c / Σ n_c) · w_c over the leading client axis."""
-    wsum = jnp.sum(weights)
-    w = (weights / jnp.maximum(wsum, 1e-30)).astype(jnp.float32)
+    w = safe_div(weights, jnp.sum(weights)).astype(jnp.float32)
 
     def avg(x):
         wb = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
@@ -157,48 +157,69 @@ def build_shard_cohort_round(
     unroll=1,
     sequential_clients: bool = True,
     micro_batches: int = 1,
-) -> Callable[[PyTree, PyTree, jax.Array], Tuple[PyTree, jax.Array]]:
+    cap: Optional[int] = None,
+) -> Callable[..., Tuple[PyTree, jax.Array, jax.Array, Any]]:
     """Mesh-sharded Mode-A round step for ONE client shard.
 
     Must be called *inside* a ``shard_map`` body whose mesh carries ``axis``:
-    each device runs local updates only for the clients resident in its shard
-    (unselected clients carry weight 0), then the eq.-(6) aggregation happens
-    as per-shard partial weighted sums combined with ``lax.psum`` — the
-    parameter tree is never all-gathered, each device contributes exactly its
-    Σ_local w_c·w_c term.
+    each device runs local updates only for clients resident in its shard,
+    then the eq.-(6) aggregation happens as per-shard partial weighted sums
+    combined with ``lax.psum`` — the parameter tree is never all-gathered,
+    each device contributes exactly its Σ_local w_c·θ_c term.
 
-    ``round_step(global_params, local_batches, local_weights, extras=None)``
-    where every leaf of ``local_batches`` has leading shape ``(C_loc,
-    local_steps, ...)`` and ``local_weights`` is ``(C_loc,)`` with ``0``
-    marking clients outside the round's cohort.  Returns the aggregated
-    global params (replicated), the per-shard client losses ``(C_loc,)``
-    (mean over local steps; computed for every resident client), the cohort
-    mean local loss (replicated), and ``extras`` summed over the axis —
-    callers fold their own per-shard partials (e.g. GEMD numerators) into
-    the round's single psum rendezvous instead of paying a second one.
+    Two execution modes, selected by ``cap``:
+
+    * ``cap=None`` (resident mode) —
+      ``round_step(global_params, local_batches, local_weights, extras=None)``
+      where every leaf of ``local_batches`` has leading shape ``(C_loc,
+      local_steps, ...)`` and ``local_weights`` is ``(C_loc,)`` with ``0``
+      marking clients outside the round's cohort.  Every resident computes a
+      (possibly zero-weighted) update: D·(C/D) work however small the cohort.
+    * ``cap=int`` (slot-compacted mode, DESIGN.md §8) —
+      ``round_step(global_params, slot_batches, local_weights, slot_index,
+      extras=None)``: the caller packs the shard's (at most ``cap =
+      min(C_loc, k)``) selected residents into a compact slot axis —
+      ``slot_batches`` leaves lead with ``(cap, local_steps, ...)`` and
+      ``slot_index`` is ``(cap,)`` distinct local resident positions,
+      selected residents first (padding slots point at unselected residents
+      and carry weight 0).  Local updates run only over slots, the slot
+      weights are gathered from the resident-layout ``local_weights``, and
+      per-client losses are scattered back to resident layout — so a
+      k-client cohort pays ``cap`` local updates per shard instead of
+      ``C_loc``.  Eq.-(6) stays the same partial weighted sums over the same
+      nonzero terms (zero-weight slots contribute exact zeros) and the
+      single psum rendezvous is unchanged, so aggregation matches resident
+      mode to fp32 tolerance.
+
+    Both modes return ``(agg_params, client_losses, mean_loss, extras)``:
+    the aggregated global params (replicated), the per-shard client losses
+    ``(C_loc,)`` (mean over local steps; **NaN for every client outside the
+    round's cohort** — the documented masking convention, so an unselected
+    client's stale/zero-weight loss can never be mistaken for a cohort
+    measurement), the cohort mean local loss (replicated), and ``extras``
+    summed over the axis — callers fold their own per-shard partials (e.g.
+    GEMD numerators) into the round's single psum rendezvous instead of
+    paying a second one.
     """
     local_update = build_local_update(
         loss_fn, lr, grad_clip=grad_clip, unroll=unroll, micro_batches=micro_batches
     )
 
-    def round_step(global_params, local_batches, local_weights, extras=None):
-        c_loc = local_weights.shape[0]
+    def _updates(global_params, batches, n):
         per_client = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x, (c_loc,) + x.shape), global_params
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape), global_params
         )
         if sequential_clients:
-            new_params, losses = jax.lax.map(
-                lambda args: local_update(*args), (per_client, local_batches)
-            )
-        else:
-            new_params, losses = jax.vmap(local_update)(per_client, local_batches)
+            return jax.lax.map(lambda args: local_update(*args), (per_client, batches))
+        return jax.vmap(local_update)(per_client, batches)
 
+    def _aggregate(new_params, losses, weights, extras):
         # eq. (6) as partial weighted sums: Σ_c w_c·θ_c / Σ_c w_c.  ALL the
         # round's partial reductions ride ONE psum call so the per-round
         # cross-device rendezvous count stays constant in tree size.
-        w = local_weights.astype(jnp.float32)
+        w = weights.astype(jnp.float32)
         mask = (w > 0).astype(jnp.float32)
-        client_losses = jnp.mean(losses, axis=tuple(range(1, losses.ndim)))
+        entry_losses = jnp.mean(losses, axis=tuple(range(1, losses.ndim)))
 
         def part_leaf(x):
             wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
@@ -209,20 +230,44 @@ def build_shard_cohort_round(
             (
                 partials,
                 jnp.sum(w),
-                jnp.sum(mask * client_losses),
+                jnp.sum(mask * entry_losses),
                 jnp.sum(mask),
                 extras,
             ),
             axis,
         )
-        inv = 1.0 / jnp.maximum(wsum, 1e-30)
+        inv = safe_div(jnp.float32(1.0), wsum)
         agg = jax.tree_util.tree_map(
             lambda part, x: (part * inv).astype(x.dtype), partials, new_params
         )
         mean_loss = tot / jnp.maximum(cnt, 1.0)
+        masked_losses = jnp.where(mask > 0, entry_losses, jnp.nan)
+        return agg, masked_losses, mean_loss, extras
+
+    def round_step(global_params, local_batches, local_weights, extras=None):
+        new_params, losses = _updates(
+            global_params, local_batches, local_weights.shape[0]
+        )
+        return _aggregate(new_params, losses, local_weights, extras)
+
+    def slot_round_step(
+        global_params, slot_batches, local_weights, slot_index, extras=None
+    ):
+        new_params, losses = _updates(global_params, slot_batches, cap)
+        slot_weights = jnp.take(local_weights, slot_index)
+        agg, slot_losses, mean_loss, extras = _aggregate(
+            new_params, losses, slot_weights, extras
+        )
+        # scatter slot losses back to resident layout; everything the slots
+        # did not cover (and weight-0 padding slots) stays NaN by convention
+        client_losses = (
+            jnp.full(local_weights.shape, jnp.nan, slot_losses.dtype)
+            .at[slot_index]
+            .set(slot_losses)
+        )
         return agg, client_losses, mean_loss, extras
 
-    return round_step
+    return round_step if cap is None else slot_round_step
 
 
 def build_server_opt_round(

@@ -85,6 +85,7 @@ def _cached_round_fn(cfg: FLConfig, loss_fn, accuracy_fn, strategy, mesh, client
         cfg.eval_every,
         cfg.local_steps,
         cfg.sample_with_replacement,
+        cfg.cohort_cap,
         mesh,
         client_axis,
     )
@@ -120,7 +121,10 @@ class FLTrainer:
         self.params = params
         # mesh-sharded cohort execution (DESIGN.md §8): the engine path lays
         # ServerState out over the mesh's client axis and runs local updates
-        # as a shard_map; run_legacy always stays single-device.
+        # as a shard_map; run_legacy always stays single-device.  With
+        # cfg.cohort_cap set, the sharded rounds run slot-compacted (each
+        # shard trains at most min(C_loc, cohort_cap) clients per round) —
+        # segments, reprofile boundaries, and re-sharding work unchanged.
         self.mesh = mesh
         self.client_axis = client_axis
         self.client_xs = jnp.asarray(client_xs)

@@ -59,9 +59,17 @@ def run_fl(args):
     shard_mapped so each device trains its resident clients and the FedAvg
     reduction runs as psum'd partial sums.  On CPU hosts combine with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+    ``--cohort-cap M`` (requires ``--shard-clients``) switches the sharded
+    round to capacity-slot scheduling: each shard trains at most
+    ``min(C/N, M)`` clients per round instead of all its residents, so a
+    small diverse cohort (k ≪ C, the paper's regime) stops paying
+    full-federation compute.  ``M`` must be ≥ min(--per-round, C/N);
+    ``M = --per-round`` is the natural setting.
     """
     mesh = None
     shard_clients = getattr(args, "shard_clients", 0)
+    cohort_cap = getattr(args, "cohort_cap", None)
     if shard_clients:
         if args.clients % shard_clients:
             raise SystemExit(
@@ -69,6 +77,8 @@ def run_fl(args):
                 f"--shard-clients={shard_clients}"
             )
         mesh = make_client_mesh(shard_clients)
+    elif cohort_cap is not None:
+        raise SystemExit("--cohort-cap requires --shard-clients")
     spec = get_arch(args.arch)
     cfg = spec.model.reduced(param_dtype="float32", dtype="float32", remat=False)
     params = T.init_params(jax.random.key(args.seed), cfg)
@@ -101,6 +111,7 @@ def run_fl(args):
         eval_every=max(args.log_every, 1),
         num_classes=num_topics,
         seed=args.seed,
+        cohort_cap=cohort_cap,
     )
     state = engine_lib.init_server_state(
         flcfg, params, loss_fn, None, clients, topics,
@@ -167,6 +178,11 @@ def main():
     ap.add_argument("--shard-clients", type=int, default=0,
                     help="shard the client axis over an N-device mesh "
                          "(FL mode; DESIGN.md §8)")
+    ap.add_argument("--cohort-cap", type=int, default=None,
+                    help="capacity-slot scheduling: max cohort clients "
+                         "trained per shard (requires --shard-clients; "
+                         ">= min(--per-round, clients/shards); the natural "
+                         "setting is --per-round)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     (run_fl if args.mode == "fl" else run_pretrain)(args)

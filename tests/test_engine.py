@@ -133,6 +133,35 @@ def test_history_from_outputs_final_round_fill():
     assert h["acc"] == [0.5, 0.7]
 
 
+def test_history_from_outputs_empty_run():
+    """Zero-round outputs (e.g. a run_many grid scanned for 0 rounds) yield
+    an empty history, not an IndexError."""
+    outs = {
+        "round": np.zeros((0,), np.int32),
+        "acc": np.zeros((0,), np.float32),
+        "gemd": np.zeros((0,), np.float32),
+        "loss": np.zeros((0,), np.float32),
+    }
+    h = engine.history_from_outputs(outs, eval_every=2)
+    assert h == {"round": [], "acc": [], "gemd": [], "loss": []}
+
+
+def test_steps_per_round_uses_shared_num_batches():
+    """_steps_per_round and batches_from_indices must agree on batches/epoch
+    (one shared _num_batches helper — drop-remainder, at least one)."""
+    cfg = FLConfig(num_clients=4, clients_per_round=2, local_epochs=3,
+                   local_batch_size=4)
+    for n_c in (3, 4, 9, 10):
+        steps = engine._steps_per_round(cfg, n_c)
+        nb = engine._num_batches(n_c, cfg.local_batch_size)
+        assert steps == cfg.local_epochs * nb
+        ids = jnp.stack([jax.random.permutation(jax.random.key(0), n_c)])
+        xs = jnp.zeros((1, n_c, 2))
+        ys = jnp.zeros((1, n_c), jnp.int32)
+        xb, yb = engine.batches_from_indices(cfg, ids, xs, ys)
+        assert xb.shape[1] == steps and yb.shape[1] == steps
+
+
 def test_make_client_batches_full_batch_mode():
     cfg = FLConfig(num_clients=4, clients_per_round=2, local_epochs=3)
     xs = jnp.arange(4 * 5 * 2, dtype=jnp.float32).reshape(4, 5, 2)

@@ -1,0 +1,248 @@
+"""Capacity-slot scheduling parity (DESIGN.md §8, slot-gather subsection).
+
+The contract under test: with ``cfg.cohort_cap`` set, the sharded round packs
+each shard's selected residents into ``cap = min(C_loc, cohort_cap)`` slots
+and trains only those — yet selects **bit-identical cohorts** (selection is
+replicated at the jit level, untouched by slotting) and matches both the
+unslotted sharded scan and the single-device scan to fp32 tolerance on
+params / losses / metrics.
+
+The multidevice cases run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI multidevice
+job); the 1-device-mesh cases exercise the same slot gather/scatter machinery
+in tier-1 on any host.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import selection as selection_lib
+from repro.fl import engine, rounds as rounds_lib
+from repro.fl.trainer import FLTrainer
+from repro.launch.mesh import make_client_mesh
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+FEAT, N_C, NCLS = 8, 6, 4
+
+
+def linear_loss(params, x, y):
+    logp = jax.nn.log_softmax(x @ params["w"] + params["b"])
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+
+def linear_accuracy(params, x, y):
+    return jnp.mean(jnp.argmax(x @ params["w"] + params["b"], -1) == y)
+
+
+def linear_features(params, x):
+    h = x @ params["w"] + params["b"]
+    return h, h
+
+
+def _federation(c, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(c, N_C, FEAT)).astype(np.float32))
+    ys = jnp.asarray(rng.integers(0, NCLS, size=(c, N_C)), jnp.int32)
+    params = {
+        "w": jnp.asarray(0.01 * rng.normal(size=(FEAT, NCLS)).astype(np.float32)),
+        "b": jnp.zeros((NCLS,), jnp.float32),
+    }
+    return xs, ys, params
+
+
+def _state_and_cfg(c, k, strategy, **cfg_kw):
+    xs, ys, params = _federation(c)
+    cfg = engine.FLConfig(
+        num_clients=c, clients_per_round=k, local_epochs=2, lr=0.1,
+        rounds=6, eval_every=2, num_classes=NCLS, seed=0, **cfg_kw,
+    )
+    state = engine.init_server_state(
+        cfg, params, linear_loss, None, xs, ys,
+        strategy=strategy, profiles=xs.mean(axis=1),
+    )
+    return cfg, state
+
+
+def _max_param_diff(a, b):
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+def _three_way(cfg, state, mesh, cohort_cap, rounds=None):
+    """(single-device, unslotted-sharded, slotted-sharded) runs of one cfg."""
+    rounds = rounds or cfg.rounds
+    strategy = selection_lib.DPPSelection()
+    ref_fn = engine.make_round_fn(cfg, linear_loss, (strategy,),
+                                  accuracy_fn=linear_accuracy)
+    ref = engine.run_scanned(ref_fn, state, rounds)
+    sh_fn = engine.make_round_fn(cfg, linear_loss, (strategy,),
+                                 accuracy_fn=linear_accuracy, mesh=mesh)
+    sh = engine.run_scanned(sh_fn, state, rounds, mesh=mesh)
+    cap_cfg = dataclasses.replace(cfg, cohort_cap=cohort_cap)
+    cap_fn = engine.make_round_fn(cap_cfg, linear_loss, (strategy,),
+                                  accuracy_fn=linear_accuracy, mesh=mesh)
+    cap = engine.run_scanned(cap_fn, state, rounds, mesh=mesh)
+    return ref, sh, cap
+
+
+def _assert_parity(ref, other, atol=1e-5):
+    st_ref, out_ref = ref
+    st_o, out_o = other
+    np.testing.assert_array_equal(
+        np.asarray(out_ref["selected"]), np.asarray(out_o["selected"]),
+        err_msg="slotted cohorts diverged",
+    )
+    assert _max_param_diff(st_ref.params, st_o.params) < atol
+    np.testing.assert_allclose(
+        np.asarray(st_ref.losses), np.asarray(st_o.losses), atol=atol
+    )
+    for key in ("loss", "gemd"):
+        np.testing.assert_allclose(
+            np.asarray(out_ref[key]), np.asarray(out_o[key]), atol=atol
+        )
+    a_ref, a_o = np.asarray(out_ref["acc"]), np.asarray(out_o["acc"])
+    np.testing.assert_array_equal(np.isnan(a_ref), np.isnan(a_o))
+    np.testing.assert_allclose(
+        a_ref[~np.isnan(a_ref)], a_o[~np.isnan(a_o)], atol=atol
+    )
+
+
+# ------------------------------------------------------------- multidevice
+
+
+@multidevice
+@pytest.mark.parametrize("local_batch_size", [None, 3])
+def test_slot_parity_small_cohort(local_batch_size):
+    """k ≪ C: the paper's regime — slots must not change any observable."""
+    mesh = make_client_mesh(jax.device_count())
+    n = jax.device_count()
+    c, k = 4 * n, 3  # C_loc = 4, cap = 3 (also non-divisible C_loc/cap)
+    cfg, state = _state_and_cfg(
+        c, k, selection_lib.DPPSelection(), local_batch_size=local_batch_size
+    )
+    ref, sh, cap = _three_way(cfg, state, mesh, cohort_cap=k)
+    _assert_parity(ref, cap)
+    _assert_parity(sh, cap)
+
+
+@multidevice
+def test_slot_parity_full_participation():
+    """k = C: every slot table degenerates to the full resident list."""
+    mesh = make_client_mesh(jax.device_count())
+    c = 2 * jax.device_count()
+    cfg, state = _state_and_cfg(c, c, selection_lib.UniformSelection())
+    ref, sh, cap = _three_way(cfg, state, mesh, cohort_cap=c, rounds=4)
+    _assert_parity(ref, cap)
+    _assert_parity(sh, cap)
+
+
+@multidevice
+def test_slot_trainer_parity_across_reprofile_boundary():
+    """FLTrainer with cohort_cap crosses a reprofile_every segment boundary
+    with the same cohorts and fp32-close history as the uncapped trainers."""
+    mesh = make_client_mesh(jax.device_count())
+    c = 2 * jax.device_count()
+    xs, ys, params = _federation(c)
+    cfg = engine.FLConfig(
+        num_clients=c, clients_per_round=4, local_epochs=1, lr=0.1,
+        rounds=6, eval_every=3, num_classes=NCLS, seed=0,
+        reprofile_every=4,  # boundary inside the 6-round run
+    )
+
+    def trainer(cfg_arg, mesh_arg):
+        return FLTrainer(
+            cfg_arg, params, linear_loss, linear_features, np.asarray(xs),
+            np.asarray(ys), selection_lib.DPPSelection(),
+            accuracy_fn=linear_accuracy, mesh=mesh_arg,
+        )
+
+    h_ref = trainer(cfg, None).run()
+    h_cap = trainer(dataclasses.replace(cfg, cohort_cap=4), mesh).run()
+    assert h_ref["round"] == h_cap["round"]
+    np.testing.assert_allclose(h_ref["acc"], h_cap["acc"], atol=1e-5)
+    np.testing.assert_allclose(h_ref["gemd"], h_cap["gemd"], atol=1e-5)
+    np.testing.assert_allclose(h_ref["loss"], h_cap["loss"], atol=1e-5)
+
+
+# ------------------------------------------------- tier-1 (any device count)
+
+
+def test_slot_parity_single_device_mesh():
+    """The slot gather/scatter machinery runs on a 1-device mesh too (cap =
+    min(C, k) = k), so tier-1 exercises it without virtual devices."""
+    mesh = make_client_mesh(1)
+    cfg, state = _state_and_cfg(8, 3, selection_lib.DPPSelection())
+    ref, sh, cap = _three_way(cfg, state, mesh, cohort_cap=3)
+    _assert_parity(ref, cap)
+    _assert_parity(sh, cap)
+
+
+def test_cohort_cap_validation():
+    """cohort_cap < min(k, C_loc) could silently drop cohort members — the
+    engine must refuse to build such a round."""
+    mesh = make_client_mesh(1)
+    cfg, _ = _state_and_cfg(8, 4, selection_lib.UniformSelection())
+    bad = dataclasses.replace(cfg, cohort_cap=2)
+    with pytest.raises(ValueError, match="cohort_cap"):
+        engine.make_round_fn(bad, linear_loss, (selection_lib.UniformSelection(),),
+                             mesh=mesh)
+
+
+def test_shard_round_masks_noncohort_losses():
+    """Satellite contract: build_shard_cohort_round returns NaN (the
+    documented convention) for every resident outside the cohort, in both
+    resident and slot mode — an unselected client's loss can never read as a
+    cohort measurement."""
+    mesh = make_client_mesh(1)
+    c_loc, steps = 4, 2
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(FEAT, NCLS)).astype(np.float32))}
+
+    def loss(p, batch):
+        x, y = batch
+        logp = jax.nn.log_softmax(x @ p["w"])
+        return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+    xb = jnp.asarray(rng.normal(size=(c_loc, steps, N_C, FEAT)).astype(np.float32))
+    yb = jnp.asarray(rng.integers(0, NCLS, size=(c_loc, steps, N_C)), jnp.int32)
+    weights = jnp.asarray([2.0, 0.0, 3.0, 0.0])  # clients 1, 3 not in cohort
+
+    resident = rounds_lib.build_shard_cohort_round(loss, 0.1, engine.CLIENT_AXIS)
+    body = engine._checked_shard_map(
+        lambda p, b, w: resident(p, b, w)[:3], mesh=mesh,
+        in_specs=(engine.P(), engine.P(engine.CLIENT_AXIS),
+                  engine.P(engine.CLIENT_AXIS)),
+        out_specs=(engine.P(), engine.P(engine.CLIENT_AXIS), engine.P()),
+    )
+    _, losses, _ = body(params, (xb, yb), weights)
+    assert np.isnan(np.asarray(losses)[[1, 3]]).all()
+    assert np.isfinite(np.asarray(losses)[[0, 2]]).all()
+
+    cap = 2
+    slot_index = jnp.asarray([0, 2], jnp.int32)
+    slotted = rounds_lib.build_shard_cohort_round(
+        loss, 0.1, engine.CLIENT_AXIS, cap=cap
+    )
+    body = engine._checked_shard_map(
+        lambda p, b, w, s: slotted(p, b, w, s)[:3], mesh=mesh,
+        in_specs=(engine.P(), engine.P(engine.CLIENT_AXIS), engine.P(),
+                  engine.P(engine.CLIENT_AXIS)),
+        out_specs=(engine.P(), engine.P(), engine.P()),
+    )
+    agg, slot_losses, mean_loss = body(
+        params, (xb[:cap], yb[:cap]), weights, slot_index
+    )
+    sl = np.asarray(slot_losses)
+    assert np.isfinite(sl[[0, 2]]).all()
+    assert np.isnan(sl[[1, 3]]).all()  # never trained AND not in cohort
+    assert np.isfinite(float(mean_loss))
