@@ -65,12 +65,34 @@ def _shard_metrics(payload: Dict):
     return out, payload.get("host_cores")
 
 
+def _async_metrics(payload: Dict):
+    # simulated wall-clock-to-target speedups (DESIGN.md §9): deterministic
+    # given the seeded scenario draws, and core-count independent — but the
+    # same-host_cores arming rule still applies uniformly (jax/XLA version
+    # drift across runner classes can move the loss trajectories)
+    out = {}
+    for scen, row in payload.get("by_scenario", {}).items():
+        if row.get("speedup") is not None:
+            out[f"sim_speedup.{scen}"] = float(row["speedup"])
+    return out, payload.get("host_cores")
+
+
+def _cohort_metrics(payload: Dict):
+    # steady-state run_many scan throughput of the slotted cohort sweep
+    out = {}
+    for kk, rps in payload.get("throughput_rounds_per_sec", {}).items():
+        out[f"cohort_rounds_per_sec.k{kk}"] = float(rps)
+    return out, payload.get("host_cores")
+
+
 # every smoke bench JSON the gate knows how to read; a file listed here that
 # exists in baselines/ but was not produced by the current run is itself a
 # failure (the harness rotted)
 MANIFEST: Dict[str, Callable] = {
     "BENCH_dpp_smoke.json": _dpp_metrics,
     "BENCH_shard_smoke.json": _shard_metrics,
+    "BENCH_async_smoke.json": _async_metrics,
+    "BENCH_cohort_smoke.json": _cohort_metrics,
 }
 
 

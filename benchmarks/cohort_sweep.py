@@ -1,0 +1,272 @@
+"""Cohort-size convergence study: rounds-to-target-loss vs k at fixed C.
+
+The throughput half of the ROADMAP cohort-size study lives in
+``shard_bench``'s k-sweep (slotted rounds cost ≈cap, not C_loc, local
+updates); this module ships the **convergence half**: at a fixed federation
+size C, how many rounds does each selection strategy need to reach a common
+target loss as the cohort size k sweeps?  Where DPP diversity stops paying
+vs uniform is exactly the question the selection surveys pose
+(arXiv:2211.01549, arXiv:2310.00198).
+
+Executed the cheap way the engine makes possible (DESIGN.md §§7-8): per k,
+ALL strategies × seeds run as ONE ``run_many`` grid over a multi-strategy
+``round_fn`` (``lax.switch`` on ``strategy_index``) through the
+**capacity-slot** sharded engine (``cohort_cap = k``), so a k-client round
+pays k — not C — local updates whatever the cohort size.  The federation is
+class-skewed non-IID (each client dominated by two classes) so profile-kernel
+diversity has signal to exploit.
+
+Per k the common target is the loss floor every arm reaches; per strategy we
+record the mean-over-seeds rounds to hit it, the mean cohort GEMD, and the
+grid's steady-state scan throughput (the ``rounds_per_sec`` metric
+``check_regression`` tracks).  Like the other gated harnesses the sweep runs
+in a subprocess with a **pinned** ``--xla_force_host_platform_device_count``
+(1 shard in smoke, the core-count divisor of C otherwise) and best-of-reps
+timing, so the throughput baseline cannot drift with whatever XLA_FLAGS the
+calling job exports.  Writes ``BENCH_cohort.json``; ``--smoke`` writes
+``BENCH_cohort_smoke.json`` at tiny scale (CI harness):
+
+    PYTHONPATH=src python -m benchmarks.cohort_sweep [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+import time
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_cohort.json")
+SMOKE_OUT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_cohort_smoke.json"
+)
+
+FULL = dict(clients=16, n_c=48, feat=16, hidden=32, ncls=8, steps=2,
+            rounds=40, lr=0.1, ks=(2, 4, 8, 16), seeds=2, reps=3, spawns=2)
+SMOKE = dict(clients=8, n_c=12, feat=8, hidden=16, ncls=4, steps=2,
+             rounds=6, lr=0.1, ks=(2, 8), seeds=1, reps=4, spawns=2)
+STRATEGIES = ("fl-dp3s", "fedavg", "fedsae")
+
+
+def _pinned_devices(w: dict, smoke: bool) -> int:
+    """Device count the child is pinned to: 1 in smoke (a deterministic
+    harness check whatever the environment forces), else the largest divisor
+    of C the physical cores can host."""
+    if smoke:
+        return 1
+    cores = os.cpu_count() or 1
+    c = w["clients"]
+    return max(d for d in range(1, min(cores, c) + 1) if c % d == 0)
+
+
+def _federation(w: dict):
+    """Class-skewed non-IID clients over Gaussian class clusters: client c's
+    labels concentrate on classes {c, c+1} mod ncls, so per-client mean
+    features (the profiles) carry the skew the DPP kernel diversifies over."""
+    import numpy as np
+
+    rng = np.random.default_rng(7)
+    c, n_c, feat, ncls = w["clients"], w["n_c"], w["feat"], w["ncls"]
+    means = rng.normal(scale=2.0, size=(ncls, feat)).astype(np.float32)
+    xs = np.empty((c, n_c, feat), np.float32)
+    ys = np.empty((c, n_c), np.int32)
+    for ci in range(c):
+        major = np.asarray([ci % ncls, (ci + 1) % ncls])
+        probs = np.full((ncls,), 0.2 / ncls)
+        probs[major] += 0.4
+        labels = rng.choice(ncls, size=(n_c,), p=probs / probs.sum())
+        xs[ci] = means[labels] + rng.normal(size=(n_c, feat)).astype(np.float32)
+        ys[ci] = labels
+    return xs, ys, means
+
+
+def _child_run(w: dict, n_shards: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import dpp as dpp_lib
+    from repro.core import make_strategy
+    from repro.core import similarity as similarity_lib
+    from repro.fl import engine
+    from repro.launch.mesh import make_client_mesh
+
+    assert jax.device_count() == n_shards, (jax.device_count(), n_shards)
+    c, ncls = w["clients"], w["ncls"]
+    xs_np, ys_np, _ = _federation(w)
+    xs, ys = jnp.asarray(xs_np), jnp.asarray(ys_np)
+
+    def loss_fn(p, x, y):
+        h = jax.nn.relu(x @ p["w1"] + p["b1"])
+        logp = jax.nn.log_softmax(h @ p["w2"] + p["b2"])
+        return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+    def init_params(seed):
+        rng = np.random.default_rng(100 + seed)
+        return {
+            "w1": jnp.asarray(
+                0.1 * rng.normal(size=(w["feat"], w["hidden"])).astype(np.float32)
+            ),
+            "b1": jnp.zeros((w["hidden"],), jnp.float32),
+            "w2": jnp.asarray(
+                0.1 * rng.normal(size=(w["hidden"], ncls)).astype(np.float32)
+            ),
+            "b2": jnp.zeros((ncls,), jnp.float32),
+        }
+
+    mesh = make_client_mesh(n_shards)
+    strategies = tuple(make_strategy(s) for s in STRATEGIES)
+
+    by_k = {}
+    throughput = {}
+    for k in w["ks"]:
+        cfg = engine.FLConfig(
+            num_clients=c, clients_per_round=k, local_epochs=w["steps"],
+            lr=w["lr"], rounds=w["rounds"], eval_every=10 * w["rounds"],
+            num_classes=ncls, seed=0, cohort_cap=k,
+        )
+        states = []
+        for seed in range(w["seeds"]):
+            params = init_params(seed)
+            profiles = xs.mean(axis=1)
+            kernel = similarity_lib.kernel_from_profiles(profiles)
+            losses0 = jax.jit(jax.vmap(loss_fn, in_axes=(None, 0, 0)))(
+                params, xs, ys
+            )
+            for si, strat in enumerate(strategies):
+                eig = (
+                    dpp_lib.kdpp_sampler_state(kernel, k)
+                    if getattr(strat, "uses_spectral_cache", False)
+                    else dpp_lib.identity_sampler_state(c, k)
+                )
+                states.append(engine.init_server_state(
+                    cfg, params, loss_fn, None, xs, ys, strategy=strat,
+                    strategy_index=si, key=jax.random.key(1000 * seed + si),
+                    profiles=profiles, kernel=kernel, losses=losses0,
+                    eig_state=eig,
+                ))
+        stacked = engine.stack_states(states)
+        rf = engine.make_round_fn(cfg, loss_fn, strategies, mesh=mesh)
+        out = engine.run_many(rf, stacked, w["rounds"], mesh=mesh)
+        jax.block_until_ready(out)  # compile + warm
+        best = float("inf")
+        for _ in range(w["reps"]):
+            t0 = time.perf_counter()
+            _, outs = engine.run_many(rf, stacked, w["rounds"], mesh=mesh)
+            jax.block_until_ready(outs)
+            best = min(best, time.perf_counter() - t0)
+        throughput[str(k)] = len(states) * w["rounds"] / best
+
+        runs = engine.unstack_outputs(outs)
+        floors = [float(np.min(r["loss"])) for r in runs]
+        target = max(floors)
+        per_strategy = {}
+        for si, name in enumerate(STRATEGIES):
+            arm = [runs[seed * len(strategies) + si]
+                   for seed in range(w["seeds"])]
+            rtt = []
+            for r in arm:
+                best_loss = np.minimum.accumulate(
+                    np.asarray(r["loss"], np.float64)
+                )
+                hit = np.nonzero(best_loss <= target)[0]
+                rtt.append(int(hit[0]) + 1 if hit.size else w["rounds"])
+            per_strategy[name] = dict(
+                rounds_to_target=float(np.mean(rtt)),
+                final_loss=float(np.mean([np.min(r["loss"]) for r in arm])),
+                mean_gemd=float(np.mean([np.mean(r["gemd"]) for r in arm])),
+            )
+        by_k[str(k)] = dict(k=k, target_loss=target, per_strategy=per_strategy)
+    return dict(
+        by_k=by_k, throughput_rounds_per_sec=throughput,
+        workload=dict(w, model="mlp(2-layer)", strategies=STRATEGIES,
+                      n_shards=n_shards),
+    )
+
+
+def _spawn(w: dict, n_shards: int) -> dict:
+    env = dict(os.environ)
+    flags = re.sub(
+        r"--xla_force_host_platform_device_count=\d+", "",
+        env.get("XLA_FLAGS", ""),
+    ).strip()
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_shards} " + flags
+    ).strip()
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.cohort_sweep", "--child",
+         json.dumps(dict(workload=w, n_shards=n_shards))],
+        env=env, capture_output=True, text=True, timeout=1800,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"cohort_sweep child failed:\n{proc.stdout}\n{proc.stderr}"
+        )
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI harness check)")
+    ap.add_argument("--child", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    if args.child is not None:
+        spec = json.loads(args.child)
+        spec["workload"]["ks"] = tuple(spec["workload"]["ks"])
+        print(json.dumps(_child_run(spec["workload"], spec["n_shards"])))
+        return None
+
+    from benchmarks import common
+
+    t0 = time.time()
+    w = SMOKE if args.smoke else FULL
+    n_shards = _pinned_devices(w, args.smoke)
+    res = _spawn(w, n_shards)
+    # convergence results are deterministic across spawns; throughput is
+    # best-of across independent children (shared-container scheduling noise
+    # swings single child measurements — same treatment as shard_bench)
+    for _ in range(w.get("spawns", 1) - 1):
+        again = _spawn(w, n_shards)
+        for kk, rps in again["throughput_rounds_per_sec"].items():
+            res["throughput_rounds_per_sec"][kk] = max(
+                res["throughput_rounds_per_sec"][kk], rps
+            )
+    for kk in sorted(res["by_k"], key=int):
+        rec = res["by_k"][kk]
+        row = "  ".join(
+            f"{n}={rec['per_strategy'][n]['rounds_to_target']:.1f}r"
+            for n in STRATEGIES
+        )
+        print(f"  cohort_sweep k={int(kk):3d} target={rec['target_loss']:.4f} "
+              f"{row} ({res['throughput_rounds_per_sec'][kk]:.1f} "
+              f"scan-rounds/s)")
+    payload = dict(
+        bench="cohort_size_rounds_to_target",
+        smoke=args.smoke,
+        host_cores=os.cpu_count() or 1,
+        total_s=round(time.time() - t0, 2),
+        **res,
+    )
+    out_path = SMOKE_OUT_PATH if args.smoke else OUT_PATH
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    ks = sorted(res["by_k"], key=int)
+    dpp_rtt = {k: res["by_k"][k]["per_strategy"]["fl-dp3s"]["rounds_to_target"]
+               for k in ks}
+    print(common.csv_line(
+        "cohort_sweep",
+        0.0,
+        "fl-dp3s rounds-to-target by k: "
+        + " ".join(f"k{k}={dpp_rtt[k]:.1f}" for k in ks),
+    ))
+    print(f"wrote {os.path.abspath(out_path)}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

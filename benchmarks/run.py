@@ -1,6 +1,6 @@
 """Benchmark harness — one entry per paper table/figure (+ kernels + DPP +
-the engine/spectral-cache/sharding perf benches, so ``--all`` covers every
-harness in the tree).
+the engine/spectral-cache/sharding/staleness perf benches and the
+cohort-size study, so ``--all`` covers every harness in the tree).
 
     PYTHONPATH=src python -m benchmarks.run            # full suite
     REPRO_BENCH_SCALE=tiny PYTHONPATH=src python -m benchmarks.run   # CI smoke
@@ -21,6 +21,8 @@ import time
 
 def main() -> None:
     from benchmarks import (
+        async_bench,
+        cohort_sweep,
         dpp_bench,
         dpp_scaling,
         engine_bench,
@@ -56,6 +58,8 @@ def main() -> None:
     engine_bench.main()
     gated("dpp_bench", lambda: dpp_bench.main(perf_args))
     gated("shard_bench", lambda: shard_bench.main(perf_args))
+    gated("async_bench", lambda: async_bench.main(perf_args))
+    cohort_sweep.main(perf_args)
     fig45_init_invariance.main()
     fig1_convergence.main()
     fig2_gemd.main()

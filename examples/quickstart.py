@@ -1,7 +1,10 @@
 """Quickstart: FL-DP³S vs FedAvg on synthetic non-IID image data.
 
-Runs the paper's Algorithm 1 at reduced scale (CPU-friendly) and prints the
-accuracy / GEMD trajectories of both selection strategies.
+Runs the paper's Algorithm 1 at reduced scale (CPU-friendly) straight on the
+scanned federation engine (DESIGN.md §7): both strategies share ONE
+multi-strategy ``round_fn`` (``lax.switch`` on ``ServerState.strategy_index``)
+and execute as a single ``run_many`` grid — one compiled XLA program for the
+whole comparison, zero per-round host round-trips.
 
     PYTHONPATH=src python examples/quickstart.py [--rounds 40] [--xi 1.0]
 """
@@ -13,11 +16,16 @@ import numpy as np
 
 from repro.core import make_strategy
 from repro.data import make_image_dataset, skewness_partition
-from repro.fl import FLConfig, FLTrainer
+from repro.fl import engine
+from repro.fl.engine import FLConfig
 from repro.models import cnn
 
+METHODS = ("fl-dp3s", "fedavg")
 
-def build_trainer(cfg, xi, strategy_name, data_seed=0):
+
+def build_states(cfg, xi, strategies, data_seed=0):
+    """One federation, one state per strategy (shared data/profiles/kernel;
+    per-strategy spectral cache + strategy_index)."""
     ds = make_image_dataset(n=cfg.num_clients * 200, seed=data_seed)
     shards = skewness_partition(
         ds.ys, cfg.num_clients, xi, ds.num_classes,
@@ -26,16 +34,20 @@ def build_trainer(cfg, xi, strategy_name, data_seed=0):
     client_xs = np.stack([ds.xs[s] for s in shards])
     client_ys = np.stack([ds.ys[s] for s in shards])
     params = cnn.init_cnn(jax.random.key(cfg.seed))
-    return FLTrainer(
-        cfg,
-        params,
-        loss_fn=cnn.cnn_loss,
-        feature_fn=cnn.apply_with_features,
-        client_xs=client_xs,
-        client_ys=client_ys,
-        strategy=make_strategy(strategy_name),
-        accuracy_fn=cnn.accuracy,
-    )
+
+    states = []
+    for i, strat in enumerate(strategies):
+        state = engine.init_server_state(
+            cfg, params, cnn.cnn_loss, cnn.apply_with_features,
+            client_xs, client_ys, strategy=strat, strategy_index=i,
+            # shared Alg.-1 init: profiles/kernel/losses computed once by the
+            # first strategy's state, reused by the rest
+            profiles=states[0].profiles if states else None,
+            kernel=states[0].kernel if states else None,
+            losses=states[0].losses if states else None,
+        )
+        states.append(state)
+    return states
 
 
 def main():
@@ -48,18 +60,40 @@ def main():
     args = ap.parse_args()
     xi = args.xi if args.xi in ("H", "h") else float(args.xi)
 
-    for name in ("fl-dp3s", "fedavg"):
-        cfg = FLConfig(
-            num_clients=args.clients,
-            clients_per_round=args.per_round,
-            rounds=args.rounds,
-            local_epochs=2,
-            lr=0.1,
-            eval_every=5,
-            seed=args.seed,
+    cfg = FLConfig(
+        num_clients=args.clients,
+        clients_per_round=args.per_round,
+        rounds=args.rounds,
+        local_epochs=2,
+        lr=0.1,
+        eval_every=5,
+        seed=args.seed,
+    )
+    strategies = tuple(make_strategy(m) for m in METHODS)
+    states = build_states(cfg, xi, strategies)
+
+    # the whole strategy grid: ONE compiled scan program via run_many
+    round_fn = engine.make_round_fn(
+        cfg, cnn.cnn_loss, strategies, accuracy_fn=cnn.accuracy
+    )
+    final, outs = engine.run_many(
+        round_fn, engine.stack_states(states), args.rounds
+    )
+    per_run = engine.unstack_outputs(outs)
+
+    for i, name in enumerate(METHODS):
+        final_acc = None
+        if args.rounds % cfg.eval_every != 0:
+            params_i = jax.tree_util.tree_map(lambda x, i=i: x[i], final.params)
+            xs = states[i].client_xs.reshape((-1,) + states[i].client_xs.shape[2:])
+            final_acc = float(
+                cnn.accuracy(params_i, xs, states[i].client_ys.reshape(-1))
+            )
+        hist = engine.history_from_outputs(
+            per_run[i], cfg.eval_every, final_acc=final_acc
         )
-        trainer = build_trainer(cfg, xi, name)
-        hist = trainer.run(progress=True)
+        for t, a, g, l in zip(hist["round"], hist["acc"], hist["gemd"], hist["loss"]):
+            print(f"[{name}] round {t:4d} acc={a:.4f} gemd={g:.3f} loss={l:.4f}")
         mean_gemd = float(np.mean(hist["gemd"]))
         print(f"== {name}: final acc={hist['acc'][-1]:.4f}  mean GEMD={mean_gemd:.3f}\n")
 

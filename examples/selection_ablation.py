@@ -1,20 +1,94 @@
-"""Ablation example (paper Figs. 3/6): profiling methods and init schemes.
+"""Selection-strategy ablation on one non-IID federation, engine-native.
 
-    PYTHONPATH=src REPRO_BENCH_SCALE=tiny python examples/selection_ablation.py
+Every registry strategy with a pure ``select_fn`` — the paper's k-DPP
+(sampled + greedy-MAP), FedAvg uniform, FedSAE loss-weighted, clustered
+sampling, power-of-choice — runs on the SAME federation through the scanned
+engine (DESIGN.md §7): one multi-strategy ``round_fn`` dispatched by
+``lax.switch``, all strategies × seeds as one ``run_many`` grid, host-side
+work (cluster fitting, the spectral cache) done once in
+``init_server_state``.  Prints final accuracy / mean GEMD / rounds-to-target
+per strategy.
+
+    PYTHONPATH=src python examples/selection_ablation.py [--rounds 30]
 """
 
-from benchmarks import fig3_profiling, fig45_init_invariance, fig6_init_robustness
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import make_strategy
+from repro.data import make_image_dataset, skewness_partition
+from repro.fl import engine
+from repro.fl.engine import FLConfig
+from repro.models import cnn
+
+METHODS = (
+    "fl-dp3s", "fl-dp3s-map", "fedavg", "fedsae", "cluster", "power-of-choice"
+)
 
 
 def main():
-    print("-- Fig. 4/5: kernel init-invariance --")
-    r = fig45_init_invariance.run()
-    print(f"kernel corr across inits: {r['kernel_corr']:.3f} "
-          f"(profiles only: {r['profile_corr']:.3f})")
-    print("-- Fig. 3: profiling ablation --")
-    fig3_profiling.run()
-    print("-- Fig. 6: init robustness --")
-    fig6_init_robustness.run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--per-round", type=int, default=4)
+    ap.add_argument("--seeds", type=int, default=2)
+    ap.add_argument("--xi", type=float, default=1.0)
+    ap.add_argument("--target-acc", type=float, default=0.6)
+    args = ap.parse_args()
+
+    cfg = FLConfig(
+        num_clients=args.clients, clients_per_round=args.per_round,
+        rounds=args.rounds, local_epochs=2, lr=0.1, eval_every=2, seed=0,
+    )
+    ds = make_image_dataset(n=args.clients * 120, seed=0)
+    shards = skewness_partition(
+        ds.ys, args.clients, args.xi, ds.num_classes,
+        samples_per_client=120, seed=0,
+    )
+    cxs = np.stack([ds.xs[s] for s in shards])
+    cys = np.stack([ds.ys[s] for s in shards])
+
+    strategies = tuple(make_strategy(m) for m in METHODS)
+    states = []
+    for seed in range(args.seeds):
+        params = cnn.init_cnn(jax.random.key(seed))
+        shared = None
+        for i, strat in enumerate(strategies):
+            state = engine.init_server_state(
+                cfg, params, cnn.cnn_loss, cnn.apply_with_features, cxs, cys,
+                strategy=strat, strategy_index=i,
+                key=jax.random.key(100 * seed + i),
+                profiles=shared.profiles if shared else None,
+                kernel=shared.kernel if shared else None,
+                losses=shared.losses if shared else None,
+            )
+            shared = shared or state
+            states.append(state)
+
+    round_fn = engine.make_round_fn(
+        cfg, cnn.cnn_loss, strategies, accuracy_fn=cnn.accuracy
+    )
+    _, outs = engine.run_many(
+        round_fn, engine.stack_states(states), args.rounds
+    )
+    per_run = engine.unstack_outputs(outs)
+
+    print(f"{'strategy':>16s}  {'final acc':>9s}  {'mean GEMD':>9s}  "
+          f"rounds to acc>={args.target_acc}")
+    for i, name in enumerate(METHODS):
+        arm = [per_run[seed * len(METHODS) + i] for seed in range(args.seeds)]
+        accs, gemds, rtts = [], [], []
+        for r in arm:
+            hist = engine.history_from_outputs(r, cfg.eval_every)
+            accs.append(hist["acc"][-1])
+            gemds.append(float(np.mean(hist["gemd"])))
+            hit = [t for t, a in zip(hist["round"], hist["acc"])
+                   if a >= args.target_acc]
+            rtts.append(hit[0] if hit else args.rounds)
+        print(f"{name:>16s}  {np.mean(accs):9.4f}  {np.mean(gemds):9.3f}  "
+              f"{np.mean(rtts):6.1f}")
 
 
 if __name__ == "__main__":

@@ -41,6 +41,7 @@ __all__ = [
     "kdpp_sampler_state",
     "log_det_subset",
     "greedy_map_kdpp",
+    "masked_kernel",
     "sample_kdpp",
     "sample_kdpp_from_eigh",
     "sampler_dtype",
@@ -281,6 +282,21 @@ def greedy_map_kdpp(kernel: jax.Array, k: int) -> jax.Array:
     mask = jnp.zeros((c,), bool)
     (_, _, _), items = lax.scan(body, (d2, cis, mask), jnp.arange(k))
     return items.astype(jnp.int32)
+
+
+def masked_kernel(kernel: jax.Array, avail: jax.Array) -> jax.Array:
+    """Fold an availability mask into a PSD kernel (DESIGN.md §9).
+
+    Zeroes the rows/columns of unavailable items: ``L' = m mᵀ ⊙ L`` with
+    ``m = avail``.  L' stays PSD (a congruence by ``diag(m)``), its spectrum
+    is supported on the available block, and every eigenvector is zero on
+    unavailable coordinates — so a k-DPP draw from L' can only return
+    available items (phase-2 weights vanish there).  Requires the available
+    block to have rank ≥ k; callers fall back to the unmasked kernel when
+    fewer than k items are available.
+    """
+    m = avail.astype(kernel.dtype)
+    return kernel * (m[:, None] * m[None, :])
 
 
 def log_det_subset(kernel: jax.Array, idx: jax.Array) -> jax.Array:

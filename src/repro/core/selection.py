@@ -42,6 +42,7 @@ from repro.core import dpp as dpp_mod
 __all__ = [
     "RoundState",
     "SelectionState",
+    "availability_logits",
     "selection_state",
     "SelectionStrategy",
     "UniformSelection",
@@ -127,6 +128,18 @@ def selection_state(
     )
 
 
+def availability_logits(
+    avail: jax.Array, k: int, logits: jax.Array
+) -> jax.Array:
+    """Mask sampling logits to available clients, with a degenerate-mask
+    fallback: when fewer than ``k`` clients are available the unmasked
+    logits are used unchanged (the round must still field a k-cohort —
+    DESIGN.md §9 documents the convention).  Pure/jittable."""
+    masked = jnp.where(avail, logits, -jnp.inf)
+    enough = jnp.sum(avail) >= k
+    return jnp.where(enough, masked, logits)
+
+
 class SelectionStrategy:
     name = "base"
     # True when select_fn draws from SelectionState.eig_state: tells state
@@ -138,6 +151,21 @@ class SelectionStrategy:
     def select_fn(self, key: jax.Array, state: SelectionState, k: int) -> jax.Array:
         """Pure, jittable selection: (key, SelectionState, static k) -> (k,)."""
         raise NotImplementedError
+
+    def select_avail_fn(
+        self, key: jax.Array, state: SelectionState, k: int, avail: jax.Array
+    ) -> jax.Array:
+        """Availability-aware selection: restrict the draw to ``avail`` (a
+        (C,) bool mask from a scenario's availability model, DESIGN.md §9).
+
+        Every built-in strategy overrides this (DPP folds the mask into the
+        kernel before sampling; the samplers mask their logits).  The base
+        default is availability-*blind* — custom strategies that don't
+        override simply ignore the mask.  All overrides share one fallback
+        convention (:func:`availability_logits`): with fewer than ``k``
+        available clients the unmasked draw is used.
+        """
+        return self.select_fn(key, state, k)
 
     def prepare(self, state: RoundState, k: int) -> SelectionState:
         """RoundState -> SelectionState (host-side; runs ``fit`` if any)."""
@@ -163,6 +191,12 @@ class UniformSelection(SelectionStrategy):
         return jax.random.choice(
             key, state.num_clients, shape=(k,), replace=False
         ).astype(jnp.int32)
+
+    def select_avail_fn(self, key, state, k, avail):
+        logits = availability_logits(
+            avail, k, jnp.zeros((state.num_clients,), jnp.float32)
+        )
+        return _gumbel_topk_without_replacement(key, logits, k)
 
 
 class DPPSelection(SelectionStrategy):
@@ -194,6 +228,20 @@ class DPPSelection(SelectionStrategy):
             return dpp_mod.sample_kdpp_from_eigh(key, state.eig_state, k)
         return dpp_mod.sample_kdpp(key, state.kernel, k)
 
+    def select_avail_fn(self, key, state, k, avail):
+        # Fold the availability mask into the kernel before sampling
+        # (DESIGN.md §9): L' = m mᵀ ⊙ L keeps PSD-ness with its spectrum
+        # supported on the available block, so the draw can only return
+        # available clients.  The spectral cache decomposes the *unmasked*
+        # kernel, so availability rounds pay the one-shot eigh path (the
+        # mask changes every round — no cacheable spectrum to reuse).
+        enough = jnp.sum(avail) >= k
+        kern = jnp.where(enough, dpp_mod.masked_kernel(state.kernel, avail),
+                         state.kernel)
+        if self.mode == "map":
+            return dpp_mod.greedy_map_kdpp(kern, k)
+        return dpp_mod.sample_kdpp(key, kern, k)
+
     def prepare(self, state, k):
         assert state.kernel is not None, "DPPSelection needs the profile kernel"
         return selection_state(
@@ -222,6 +270,12 @@ class FedSAESelection(SelectionStrategy):
         w = jnp.maximum(state.losses, 1e-8)
         return _gumbel_topk_without_replacement(key, jnp.log(w), k)
 
+    def select_avail_fn(self, key, state, k, avail):
+        w = jnp.maximum(state.losses, 1e-8)
+        return _gumbel_topk_without_replacement(
+            key, availability_logits(avail, k, jnp.log(w)), k
+        )
+
 
 class PowerOfChoiceSelection(SelectionStrategy):
     """d uniform candidates -> keep the k with the highest loss."""
@@ -236,6 +290,26 @@ class PowerOfChoiceSelection(SelectionStrategy):
         k1, _ = jax.random.split(key)
         cand = jax.random.choice(k1, state.num_clients, shape=(d,), replace=False)
         order = jnp.argsort(-state.losses[cand])
+        return cand[order[:k]].astype(jnp.int32)
+
+    def select_avail_fn(self, key, state, k, avail):
+        # candidates drawn uniformly among available clients, then the usual
+        # loss top-k.  Gumbel over -inf-masked logits ranks every available
+        # client ahead of the unavailable padding, so with ≥ k available the
+        # d candidates contain ≥ k available entries; masking the candidate
+        # losses then keeps unavailable padding out of the final top-k.  The
+        # shared fallback (fewer than k available ⇒ unmasked draw) applies.
+        d = min(self.d, state.num_clients)
+        k1, _ = jax.random.split(key)
+        enough = jnp.sum(avail) >= k
+        logits = availability_logits(
+            avail, k, jnp.zeros((state.num_clients,), jnp.float32)
+        )
+        cand = _gumbel_topk_without_replacement(k1, logits, d)
+        cand_losses = jnp.where(
+            avail[cand] | ~enough, state.losses[cand], -jnp.inf
+        )
+        order = jnp.argsort(-cand_losses)
         return cand[order[:k]].astype(jnp.int32)
 
     def prepare(self, state, k):
@@ -310,6 +384,18 @@ class ClusterSelection(SelectionStrategy):
             self._fingerprint = fp
         return jnp.asarray(self._labels, jnp.int32)
 
+    @staticmethod
+    def _cluster_logits(member, base):
+        """Row l of the (k, C) draw logits: ``base`` masked to cluster l's
+        members, falling back to plain ``base`` for rows with no finite
+        member entry (empty/degenerate — or fully unavailable, when ``base``
+        itself is availability-masked).  The ONE construction both
+        :meth:`select_fn` and :meth:`select_avail_fn` draw from, so the
+        fewer-than-k-available fallback is provably the unmasked draw."""
+        logits = jnp.where(member, base[None, :], -jnp.inf)
+        ok = jnp.any(member & jnp.isfinite(base)[None, :], axis=1, keepdims=True)
+        return jnp.where(ok, logits, base[None, :])
+
     def select_fn(self, key, state, k):
         # One vmapped masked-categorical draw over all k clusters (the
         # unrolled Python loop emitted k separate categorical ops into every
@@ -319,9 +405,23 @@ class ClusterSelection(SelectionStrategy):
         labels = state.cluster_labels
         log_sizes = jnp.log(jnp.maximum(state.client_sizes, 1e-30))
         member = labels[None, :] == jnp.arange(k, dtype=labels.dtype)[:, None]
-        logits = jnp.where(member, log_sizes[None, :], -jnp.inf)
+        logits = self._cluster_logits(member, log_sizes)
+        picks = jax.vmap(jax.random.categorical)(jax.random.split(key, k), logits)
+        return picks.astype(jnp.int32)
+
+    def select_avail_fn(self, key, state, k, avail):
+        # availability-masked per-cluster draw: row l samples cluster l's
+        # *available* members ∝ n_c; a cluster with no available member
+        # falls back to size-weighted sampling over all available clients,
+        # and fewer than k available clients drops the mask entirely (the
+        # shared availability_logits convention).
+        labels = state.cluster_labels
+        log_sizes = jnp.log(jnp.maximum(state.client_sizes, 1e-30))
+        member = labels[None, :] == jnp.arange(k, dtype=labels.dtype)[:, None]
         logits = jnp.where(
-            jnp.any(member, axis=1, keepdims=True), logits, log_sizes[None, :]
+            jnp.sum(avail) >= k,
+            self._cluster_logits(member, jnp.where(avail, log_sizes, -jnp.inf)),
+            self._cluster_logits(member, log_sizes),
         )
         picks = jax.vmap(jax.random.categorical)(jax.random.split(key, k), logits)
         return picks.astype(jnp.int32)

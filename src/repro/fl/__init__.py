@@ -1,5 +1,6 @@
 """Federated runtime: local updates (eq. 3-5), aggregation (eq. 6), rounds,
-and the scan-compiled federation engine (DESIGN.md §7)."""
+the scan-compiled federation engine (DESIGN.md §7), and the bounded-staleness
+subsystem + system-heterogeneity scenarios (DESIGN.md §9)."""
 
 from repro.fl.engine import (
     ServerState,
@@ -16,5 +17,11 @@ from repro.fl.rounds import (
     build_fedsgd_step,
     build_server_opt_round,
     weighted_average,
+)
+from repro.fl.scenarios import SCENARIO_NAMES, Scenario, get_scenario
+from repro.fl.staleness import (
+    DECAY_FAMILIES,
+    decay_weights,
+    normalized_decay_weights,
 )
 from repro.fl.trainer import FLConfig, FLTrainer

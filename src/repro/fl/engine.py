@@ -69,6 +69,8 @@ from repro.core import profiles as profiles_lib
 from repro.core import selection as selection_lib
 from repro.core import similarity as similarity_lib
 from repro.fl import rounds as rounds_lib
+from repro.fl import scenarios as scenarios_lib
+from repro.fl import staleness as staleness_lib
 from repro.launch.sharding import CLIENT_AXIS, client_axis_spec
 
 __all__ = [
@@ -113,6 +115,57 @@ class FLConfig:
     # k ≪ C cohorts stop paying D·(C/D) redundant local updates.  Must be
     # >= min(clients_per_round, C_loc) so no shard can overflow its slots.
     cohort_cap: Optional[int] = None
+    # Bounded-staleness aggregation (DESIGN.md §9, sharded path only).
+    # None = synchronous psum barrier; an int s lets shards that miss the
+    # scenario's round deadline contribute eq.-(6) partial sums computed
+    # against params from round t−s_d (s_d <= s, ring buffer in
+    # ServerState.param_hist) weighted by the staleness-decay family below.
+    # s = 0 reduces bit-identically to the synchronous sharded round.
+    # Requires a mesh (make_round_fn validates) and a `scenario`; mutually
+    # exclusive with cohort_cap (validated here, not inside jit tracing).
+    staleness_bound: Optional[int] = None
+    # one default across every surface (FLConfig, train.py --staleness-decay,
+    # dryrun): polynomial (1+s)^-alpha, the standard stale-gradient weighting
+    staleness_decay: str = "polynomial"  # constant | polynomial | exponential
+    staleness_alpha: float = 0.5  # decay rate for polynomial/exponential
+    # System-heterogeneity scenario (repro.fl.scenarios registry): drives
+    # per-client latency draws (simulated round wall clock in the metrics,
+    # straggler/staleness dynamics when staleness_bound is set) and, for
+    # scenarios with an availability model, availability-masked selection.
+    scenario: Optional[str] = None
+
+    def __post_init__(self):
+        # flag-combination contract: every invalid combo dies HERE with one
+        # clear ValueError, never inside jit tracing
+        if self.staleness_bound is not None:
+            if self.staleness_bound < 0:
+                raise ValueError(
+                    f"staleness_bound={self.staleness_bound} must be >= 0"
+                )
+            if self.cohort_cap is not None:
+                raise ValueError(
+                    f"cohort_cap={self.cohort_cap} is incompatible with "
+                    f"staleness_bound={self.staleness_bound}: capacity-slot "
+                    "compaction assumes a synchronous cohort (every slot "
+                    "trains on round-t params) — drop one of the two flags"
+                )
+            if self.scenario is None:
+                raise ValueError(
+                    f"staleness_bound={self.staleness_bound} requires a "
+                    "latency scenario (set FLConfig.scenario / --scenario): "
+                    "without a latency model no shard ever goes stale"
+                )
+            if self.staleness_decay not in staleness_lib.DECAY_FAMILIES:
+                raise ValueError(
+                    f"unknown staleness_decay {self.staleness_decay!r}; "
+                    f"known: {staleness_lib.DECAY_FAMILIES}"
+                )
+            if self.staleness_alpha < 0:
+                raise ValueError(
+                    f"staleness_alpha={self.staleness_alpha} must be >= 0"
+                )
+        if self.scenario is not None:
+            scenarios_lib.get_scenario(self.scenario)  # unknown name raises
 
 
 @jax.tree_util.register_dataclass
@@ -139,6 +192,10 @@ class ServerState:
     client_label_dists: jax.Array  # (C, num_classes)
     global_label_dist: jax.Array  # (num_classes,)
     strategy_index: jax.Array  # int32 scalar into the round_fn's strategies
+    # Bounded-staleness bookkeeping (DESIGN.md §9) — None on synchronous
+    # configs, so the pytree stays unchanged for every existing path:
+    param_hist: Optional[PyTree] = None  # (s+1, ...) ring of param snapshots
+    shard_staleness: Optional[jax.Array] = None  # (D,) int32 per-shard lag
 
     @property
     def num_clients(self) -> int:
@@ -245,6 +302,12 @@ def make_client_batches(cfg: FLConfig, key, client_xs, client_ys, sel):
 
 # ---------------------------------------------------------------- round_fn
 
+# fold_in salt branching the scenario's environment stream (latency /
+# availability draws) off the carried server key WITHOUT consuming a split:
+# the selection/batch key streams stay bit-identical with or without a
+# scenario attached.
+_ENV_SALT = 0x5CE7A210
+
 
 def make_round_fn(
     cfg: FLConfig,
@@ -285,6 +348,21 @@ def make_round_fn(
     single-psum aggregation, ``C_loc/cap``× less local-update work for
     k ≪ C cohorts.  Ignored without a mesh (the single-device body already
     gathers exactly the k selected clients).
+
+    ``cfg.scenario`` attaches a system-heterogeneity model (DESIGN.md §9):
+    per-round latency draws priced into a ``sim_time`` metric, and — for
+    scenarios with an availability model — selection routed through the
+    strategies' ``select_avail_fn`` hook (cohorts drawn from available
+    clients only; the mask rides the outputs as ``avail``).
+    ``cfg.staleness_bound`` additionally relaxes the sharded round's psum
+    barrier to bounded-staleness aggregation: shards that miss the
+    scenario's deadline contribute eq.-(6) partials computed against ring-
+    buffered params from round ``t − s_d`` (``s_d ≤ staleness_bound``),
+    scaled by the ``cfg.staleness_decay`` family — same single psum, with
+    ``staleness_bound = 0`` reducing bit-identically to the synchronous
+    sharded round.  Requires a mesh and a scenario (validated here / in
+    ``FLConfig``); the state must carry the staleness fields
+    (:func:`init_server_state` builds them).
     """
     strategies = tuple(strategies)
     k = cfg.clients_per_round
@@ -297,14 +375,37 @@ def make_round_fn(
                 f"C_loc={c_loc_cfg}): a shard could hold more cohort members "
                 "than slots (clients would be silently dropped)"
             )
+    if cfg.staleness_bound is not None and mesh is None:
+        raise ValueError(
+            f"staleness_bound={cfg.staleness_bound} requires the mesh-sharded "
+            "engine (pass mesh=...; launchers: --staleness-bound needs "
+            "--shard-clients): staleness is a per-shard property"
+        )
+    scen = (
+        scenarios_lib.get_scenario(cfg.scenario)
+        if cfg.scenario is not None
+        else None
+    )
+    avail_aware = scen is not None and scen.availability is not None
     batched_loss = lambda p, batch: loss_fn(p, batch[0], batch[1])
     loss_of = jax.vmap(loss_fn, in_axes=(None, 0, 0))
-    branches = tuple(
-        functools.partial(
-            lambda strat, key, sstate: strat.select_fn(key, sstate, k), strat
+    if avail_aware:
+        branches = tuple(
+            functools.partial(
+                lambda strat, key, sstate, avail: strat.select_avail_fn(
+                    key, sstate, k, avail
+                ),
+                strat,
+            )
+            for strat in strategies
         )
-        for strat in strategies
-    )
+    else:
+        branches = tuple(
+            functools.partial(
+                lambda strat, key, sstate: strat.select_fn(key, sstate, k), strat
+            )
+            for strat in strategies
+        )
     steps_of = lambda state: _steps_per_round(cfg, state.client_xs.shape[1])
 
     def _single_device_body(state, k_batch, sel):
@@ -326,27 +427,35 @@ def make_round_fn(
         )
         return params, mean_loss, losses, g
 
-    def _sharded_body(state, k_batch, sel):
-        """shard_map core: in-place masked local updates + psum'd FedAvg.
-
-        Random *index plans* (permutations / replacement draws) are computed
-        at the jit level: residents adopt the batch key of their cohort slot,
-        so every selected client sees bit-identical batches to the gathered
-        path.  Only data slicing, the local SGD scans, and the psum'd
-        aggregation live inside the shard_map — fusing the random-bit
-        generation into the shard body miscompiles on jax 0.4.37 (clients
-        read other slots' draws).
-        """
-        shard_round = rounds_lib.build_shard_cohort_round(
-            batched_loss, cfg.lr, client_axis, grad_clip=cfg.grad_clip,
-            sequential_clients=sequential_clients,
-        )
+    def _resident_batch_plans(state, k_batch, sel):
+        """Jit-level per-resident batch *index plans*: every client adopts
+        the batch key of its cohort slot, so a selected client sees
+        bit-identical batches to the gathered single-device path.  The ONE
+        construction shared by the synchronous (:func:`_sharded_body`) and
+        bounded-staleness (:func:`_stale_sharded_body`) resident-layout
+        bodies — the cross-path bit-identical-batches parity contract lives
+        here, and only data slicing / SGD scans / the psum go inside the
+        shard_map (fusing random-bit generation into the shard body
+        miscompiles on jax 0.4.37: clients read other slots' draws)."""
         c = state.losses.shape[0]
         n_c = state.client_xs.shape[1]
         slot_full = jnp.argmax(sel[None, :] == jnp.arange(c)[:, None], axis=1)
         key_data = jax.random.key_data(jax.random.split(k_batch, k))
         client_keys = jax.random.wrap_key_data(key_data[slot_full])
-        ids = batch_indices_from_keys(cfg, client_keys, n_c)  # (C, ...) | None
+        return batch_indices_from_keys(cfg, client_keys, n_c)  # (C, ...) | None
+
+    def _sharded_body(state, k_batch, sel):
+        """shard_map core: in-place masked local updates + psum'd FedAvg.
+
+        Random index plans come from :func:`_resident_batch_plans` (jit
+        level); only data slicing, the local SGD scans, and the psum'd
+        aggregation live inside the shard_map.
+        """
+        shard_round = rounds_lib.build_shard_cohort_round(
+            batched_loss, cfg.lr, client_axis, grad_clip=cfg.grad_clip,
+            sequential_clients=sequential_clients,
+        )
+        ids = _resident_batch_plans(state, k_batch, sel)
 
         def local_body(sel, params, local_xs, local_ys, local_sizes,
                        local_losses, local_dists, global_dist, *local_ids):
@@ -470,19 +579,135 @@ def make_round_fn(
             state.global_label_dist, *id_args,
         )
 
+    def _stale_sharded_body(state, k_batch, sel, lat):
+        """Bounded-staleness shard_map core (DESIGN.md §9).
+
+        Same residents, masks, batch plans, and single psum as
+        :func:`_sharded_body`; the difference is each shard's *base* params
+        come from the ring buffer at its staleness ``s_d`` (params of round
+        ``t − s_d``), and its eq.-(6) partials are scaled by λ(s_d).  All
+        staleness bookkeeping — deadline misses from the scenario's
+        per-client latency draw, counter dynamics, decay weights, ring
+        slots, the simulated round wall clock — is computed at the jit
+        level on tiny replicated arrays; only the ring read, the SGD scans,
+        and the psum live inside the shard_map.  With ``staleness_bound=0``
+        every slow shard is forced to sync, λ ≡ 1, and the ring read
+        returns the current params: bit-identical to the synchronous round.
+        """
+        bound = cfg.staleness_bound
+        c = state.losses.shape[0]
+        n_shards = mesh.shape[client_axis]
+        c_loc = c // n_shards
+        t_prev = state.round  # rounds completed; ring slot t_prev holds θ_t
+        shard_round = rounds_lib.build_stale_shard_cohort_round(
+            batched_loss, cfg.lr, client_axis, grad_clip=cfg.grad_clip,
+            sequential_clients=sequential_clients,
+        )
+        in_cohort = jnp.any(sel[None, :] == jnp.arange(c)[:, None], axis=1)
+        # a shard's round latency is its slowest selected resident (shards
+        # with no cohort member are instant and re-sync for free)
+        shard_lat = (
+            jnp.where(in_cohort, lat, 0.0).reshape(n_shards, c_loc).max(axis=1)
+        )
+        slow = shard_lat > scen.deadline
+        # the POST-update counters price this round's contribution: a shard
+        # that misses the deadline delivers work based on pre-miss params
+        # (read slot t − s_d with s_d including this round's miss), so a
+        # deadline-capped round never aggregates information the simulated
+        # clock says arrived after it closed.  Forced shards block the round
+        # (full latency) and deliver fresh work with a reset counter.
+        new_s, forced = staleness_lib.staleness_step(
+            state.shard_staleness, slow, bound
+        )
+        lam = staleness_lib.decay_weights(
+            new_s, cfg.staleness_decay, cfg.staleness_alpha
+        )
+        read_slot = staleness_lib.read_slots(t_prev, new_s, bound)
+        sim_time = staleness_lib.round_sim_time(
+            shard_lat, slow, forced, scen.deadline
+        )
+        ids = _resident_batch_plans(state, k_batch, sel)
+
+        def local_body(sel, lam_d, slot_d, hist, local_xs, local_ys,
+                       local_sizes, local_losses, local_dists, global_dist,
+                       *local_ids):
+            c_loc_ = local_xs.shape[0]
+            gids = lax.axis_index(client_axis) * c_loc_ + jnp.arange(c_loc_)
+            mask = jnp.any(sel[None, :] == gids[:, None], axis=1)
+            batches = batches_from_indices(
+                cfg, local_ids[0] if local_ids else None, local_xs, local_ys
+            )
+            weights = local_sizes * mask
+            # GEMD partials stay λ-free: the metric describes the cohort's
+            # label mix, not the staleness-decayed aggregation weights
+            w = weights.astype(jnp.float32)
+            gemd_parts = ((w[:, None] * local_dists).sum(0), jnp.sum(w))
+            params, _, mean_loss, (num, den) = shard_round(
+                hist, slot_d[0], lam_d[0], batches, weights, extras=gemd_parts
+            )
+            g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
+            # the refresh measures the NEW aggregate on each home shard —
+            # fresh params, even when the contribution was stale
+            fresh = loss_of(params, local_xs, local_ys)
+            losses = jnp.where(mask, fresh, local_losses)
+            return params, mean_loss, losses, g
+
+        lead = P(client_axis)
+        id_args = () if ids is None else (ids,)
+        body = _checked_shard_map(
+            local_body, mesh=mesh,
+            in_specs=(P(), lead, lead, P(), lead, lead, lead, lead, lead, P())
+            + (lead,) * len(id_args),
+            out_specs=(P(), P(), lead, P()),
+        )
+        params, mean_loss, losses, g = body(
+            sel, lam, read_slot, state.param_hist, state.client_xs,
+            state.client_ys, state.client_sizes, state.losses,
+            state.client_label_dists, state.global_label_dist, *id_args,
+        )
+        hist = staleness_lib.update_param_hist(
+            state.param_hist, params, t_prev + 1, bound
+        )
+        return params, mean_loss, losses, g, hist, new_s, sim_time
+
     def round_fn(state: ServerState, _=None):
         t = state.round + 1
         key, k_sel, k_batch = jax.random.split(state.key, 3)
+        # the scenario's environment stream branches off the carried key so
+        # the selection/batch streams are untouched: a latency-only scenario
+        # leaves cohorts and batches bit-identical to a scenario-free run
+        lat = avail = None
+        if scen is not None:
+            k_env = jax.random.fold_in(state.key, _ENV_SALT)
+            lat = scen.latency(jax.random.fold_in(k_env, 0), state.num_clients)
+            if avail_aware:
+                avail = scen.availability(
+                    jax.random.fold_in(k_env, 1), t, state.num_clients
+                )
+        sel_args = (k_sel, state.selection_state())
+        if avail_aware:
+            sel_args = sel_args + (avail,)
         if len(branches) == 1:
-            sel = branches[0](k_sel, state.selection_state())
+            sel = branches[0](*sel_args)
         else:
-            sel = lax.switch(state.strategy_index, branches, k_sel, state.selection_state())
+            sel = lax.switch(state.strategy_index, branches, *sel_args)
+        hist = new_s = sim_time = None
         if mesh is None:
             params, mean_loss, losses, g = _single_device_body(state, k_batch, sel)
+        elif cfg.staleness_bound is not None:
+            params, mean_loss, losses, g, hist, new_s, sim_time = (
+                _stale_sharded_body(state, k_batch, sel, lat)
+            )
         elif cfg.cohort_cap is not None:
             params, mean_loss, losses, g = _slot_sharded_body(state, k_batch, sel)
         else:
             params, mean_loss, losses, g = _sharded_body(state, k_batch, sel)
+        if scen is not None and sim_time is None:
+            # synchronous barrier under the scenario: the round closes at
+            # the slowest selected client
+            c = state.losses.shape[0]
+            in_cohort = jnp.any(sel[None, :] == jnp.arange(c)[:, None], axis=1)
+            sim_time = jnp.max(jnp.where(in_cohort, lat, 0.0))
 
         if accuracy_fn is None:
             acc = jnp.float32(jnp.nan)
@@ -499,9 +724,10 @@ def make_round_fn(
                 params,
             )
 
-        new_state = dataclasses.replace(
-            state, params=params, key=key, round=t, losses=losses
-        )
+        updates = dict(params=params, key=key, round=t, losses=losses)
+        if hist is not None:
+            updates.update(param_hist=hist, shard_staleness=new_s)
+        new_state = dataclasses.replace(state, **updates)
         out = {
             "round": t,
             "acc": acc,
@@ -509,6 +735,13 @@ def make_round_fn(
             "loss": jnp.asarray(mean_loss, jnp.float32),
             "selected": sel,
         }
+        if scen is not None:
+            out["sim_time"] = jnp.asarray(sim_time, jnp.float32)
+        if avail_aware:
+            out["avail"] = avail
+        if cfg.staleness_bound is not None:
+            # mean lag the round's contributions were computed at
+            out["staleness"] = jnp.mean(new_s.astype(jnp.float32))
         return new_state, out
 
     return round_fn
@@ -635,7 +868,10 @@ def unstack_outputs(outputs: Dict[str, jax.Array]) -> List[Dict[str, np.ndarray]
 # ServerState fields carrying one row per client: these shard over the mesh
 # client axis; everything else (params, kernel, spectral cache, PRNG key,
 # counters) replicates.  The kernel stays replicated on purpose — selection
-# needs the full Gram matrix and stays bit-identical across devices.
+# needs the full Gram matrix and stays bit-identical across devices.  The
+# staleness fields (DESIGN.md §9) also replicate: every device needs the
+# full param ring buffer (any shard may read any slot), and the (D,)
+# counters are trivia the stale shard_map re-slices per shard.
 CLIENT_SHARDED_FIELDS = (
     "losses",
     "profiles",
@@ -758,6 +994,11 @@ def init_server_state(
     global_dist = metrics_lib.label_distribution(
         client_ys.reshape(-1), cfg.num_classes
     )
+    param_hist = shard_staleness = None
+    if cfg.staleness_bound is not None:
+        param_hist, shard_staleness = staleness_lib.init_staleness_fields(
+            params, cfg.staleness_bound, mesh, client_axis
+        )
     state = ServerState(
         params=params,
         key=key if key is not None else jax.random.key(cfg.seed),
@@ -773,6 +1014,8 @@ def init_server_state(
         client_label_dists=label_dists,
         global_label_dist=global_dist,
         strategy_index=jnp.asarray(strategy_index, jnp.int32),
+        param_hist=param_hist,
+        shard_staleness=shard_staleness,
     )
     if mesh is not None:
         state = shard_server_state(state, mesh, client_axis)

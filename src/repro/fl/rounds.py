@@ -32,6 +32,7 @@ __all__ = [
     "build_local_update",
     "build_client_parallel_round",
     "build_shard_cohort_round",
+    "build_stale_shard_cohort_round",
     "build_fedsgd_step",
     "build_server_opt_round",
 ]
@@ -268,6 +269,59 @@ def build_shard_cohort_round(
         return agg, client_losses, mean_loss, extras
 
     return round_step if cap is None else slot_round_step
+
+
+def build_stale_shard_cohort_round(
+    loss_fn: LossFn,
+    lr: float,
+    axis: str,
+    grad_clip: Optional[float] = None,
+    unroll=1,
+    sequential_clients: bool = True,
+    micro_batches: int = 1,
+) -> Callable[..., Tuple[PyTree, jax.Array, jax.Array, Any]]:
+    """Bounded-staleness variant of :func:`build_shard_cohort_round`
+    (DESIGN.md §9) — same residents, same local updates, same single psum,
+    but the shard's *base* params are stale.
+
+    Must run inside a ``shard_map`` body over ``axis``.
+    ``round_step(param_hist, read_slot, stale_scale, local_batches,
+    local_weights, extras=None)`` where ``param_hist`` is the replicated
+    ring buffer of global param snapshots (leaves lead with ``(s+1, ...)``,
+    see ``repro.fl.staleness``), ``read_slot`` is this shard's ring index
+    (the round-``t − s_d`` snapshot) and ``stale_scale`` is its
+    staleness-decay weight λ(s_d).
+
+    The shard reads its base params from the ring, runs the standard
+    resident-mode local updates (:func:`build_local_update` via the
+    synchronous round — bit-identical per-client math), and contributes
+    eq.-(6) partial weighted sums with weights ``λ(s_d)·w_c`` to the SAME
+    single psum rendezvous; the psum'd ``Σ λw`` denominator normalises the
+    decay (``core.metrics.safe_div``), so the aggregate is a convex
+    combination across shards of different staleness.  ``stale_scale`` must
+    be > 0 (every decay family satisfies this), which preserves the
+    weight-0 ⟺ non-cohort NaN loss-masking convention unchanged; with
+    ``read_slot`` pointing at the current round and ``stale_scale = 1`` the
+    step is bit-identical to the synchronous round.
+    """
+    inner = build_shard_cohort_round(
+        loss_fn, lr, axis, grad_clip=grad_clip, unroll=unroll,
+        sequential_clients=sequential_clients, micro_batches=micro_batches,
+    )
+
+    def round_step(
+        param_hist, read_slot, stale_scale, local_batches, local_weights,
+        extras=None,
+    ):
+        base = jax.tree_util.tree_map(
+            lambda h: lax.dynamic_index_in_dim(h, read_slot, 0, keepdims=False),
+            param_hist,
+        )
+        return inner(
+            base, local_batches, local_weights * stale_scale, extras=extras
+        )
+
+    return round_step
 
 
 def build_server_opt_round(

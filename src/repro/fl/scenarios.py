@@ -1,0 +1,131 @@
+"""System-heterogeneity scenario simulator (DESIGN.md §9).
+
+The client-selection surveys (arXiv:2211.01549, arXiv:2207.03681) split the
+selection problem into *statistical* heterogeneity (non-IID data — the
+paper's axis) and *system* heterogeneity (stragglers and intermittent
+availability).  This registry models the second axis as pure, PRNG-keyed
+functions the scanned engine calls **at the jit level** — no host callbacks,
+scan/vmap-compatible, bit-reproducible per key:
+
+* ``latency(key, n) -> (n,) float32`` — one round's per-client wall-clock
+  draw.  Families: uniform (homogeneous fleet), lognormal (moderate
+  dispersion), heavy-tail Pareto (the straggler regime: occasional clients
+  10–100× slower than the median).
+* ``availability(key, t, n) -> (n,) bool`` — time-varying participation
+  mask (diurnal sine-modulated Bernoulli, per-client phase).  When present,
+  the engine routes selection through the strategies'
+  ``select_avail_fn`` hook so cohorts are drawn from available clients only
+  (DPP folds the mask into the kernel before sampling).
+* ``deadline`` — the round cutoff the bounded-staleness engine
+  (``FLConfig.staleness_bound``, ``repro.fl.staleness``) holds shards to: a
+  shard whose selected residents exceed it misses the round and goes stale.
+
+Scenarios are *static* config (named in ``FLConfig.scenario``, resolved at
+``make_round_fn`` time); all per-round randomness flows from the scanned key
+chain, so a scenario never perturbs the selection/batch key streams — a
+latency-only scenario leaves cohorts bit-identical to a scenario-free run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Scenario", "SCENARIOS", "SCENARIO_NAMES", "get_scenario"]
+
+LatencyFn = Callable[[jax.Array, int], jax.Array]
+AvailabilityFn = Callable[[jax.Array, jax.Array, int], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named system-heterogeneity model (latency + optional availability).
+
+    Time units are arbitrary "round-cost" units — only ratios matter for the
+    sync-vs-stale comparisons in ``benchmarks/async_bench.py``.
+    """
+
+    name: str
+    deadline: float  # round cutoff for the bounded-staleness engine
+    latency: LatencyFn
+    availability: Optional[AvailabilityFn] = None
+
+
+def _uniform_latency(lo: float, hi: float) -> LatencyFn:
+    def draw(key, n):
+        return jax.random.uniform(key, (n,), jnp.float32, lo, hi)
+
+    return draw
+
+
+def _lognormal_latency(sigma: float) -> LatencyFn:
+    def draw(key, n):
+        return jnp.exp(sigma * jax.random.normal(key, (n,), jnp.float32))
+
+    return draw
+
+
+def _pareto_latency(alpha: float, scale: float) -> LatencyFn:
+    # inverse-CDF Pareto: scale · (1 − u)^{−1/α}; α near 1 ⇒ very heavy tail
+    # (infinite variance), the regime where a synchronous barrier pays the
+    # max of the cohort's draws while bounded staleness pays ~the deadline.
+    def draw(key, n):
+        u = jax.random.uniform(key, (n,), jnp.float32)
+        return scale * (1.0 - u) ** jnp.float32(-1.0 / alpha)
+
+    return draw
+
+
+def _diurnal_availability(
+    period: float = 24.0, base: float = 0.55, swing: float = 0.4
+) -> AvailabilityFn:
+    # per-client phase spread over the day: client c is "on its charger"
+    # with probability base + swing·sin(2π(t/period + c/n)) at round t
+    def draw(key, t, n):
+        phase = jnp.arange(n, dtype=jnp.float32) / jnp.float32(n)
+        tt = jnp.asarray(t).astype(jnp.float32)
+        p = base + swing * jnp.sin(2.0 * jnp.pi * (tt / period + phase))
+        return jax.random.uniform(key, (n,), jnp.float32) < p
+
+    return draw
+
+
+SCENARIOS = {
+    # homogeneous fleet: barrier ≈ deadline, staleness buys ~nothing (the
+    # honest control arm for BENCH_async)
+    "uniform": Scenario(
+        name="uniform", deadline=1.15, latency=_uniform_latency(0.8, 1.2)
+    ),
+    # moderate dispersion: median 1, P95 ≈ 2.7
+    "lognormal": Scenario(
+        name="lognormal", deadline=1.6, latency=_lognormal_latency(0.6)
+    ),
+    # straggler regime: Pareto(α=1.1), median ≈ 0.94, unbounded mean — the
+    # synchronous max-of-cohort barrier is dominated by the tail
+    "heavy_tail": Scenario(
+        name="heavy_tail", deadline=2.0, latency=_pareto_latency(1.1, 0.5)
+    ),
+    # heavy-tail latency + diurnal availability: exercises the
+    # availability-aware selection hook on top of staleness
+    "flaky": Scenario(
+        name="flaky",
+        deadline=2.0,
+        latency=_pareto_latency(1.1, 0.5),
+        availability=_diurnal_availability(),
+    ),
+}
+
+SCENARIO_NAMES = tuple(sorted(SCENARIOS))
+
+
+def get_scenario(name: str) -> Scenario:
+    """Resolve a registry name; raises ``ValueError`` listing known names."""
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {name!r}; known: {list(SCENARIO_NAMES)}"
+        ) from None

@@ -1,0 +1,204 @@
+"""Bounded-staleness aggregation primitives (DESIGN.md §9).
+
+The synchronous sharded round (DESIGN.md §8) is a hard barrier: the eq.-(6)
+psum rendezvous waits for every shard, so one straggler sets the round's
+wall clock.  Bounded staleness relaxes exactly that: a shard that misses the
+round deadline keeps contributing, but its partial weighted sums are
+computed against params from round ``t − s_d`` (its *staleness* ``s_d``,
+capped at ``FLConfig.staleness_bound``) and enter the SAME single psum
+scaled by a staleness-decay weight ``λ(s_d)``.
+
+This module holds the pure, jit/scan-compatible pieces the engine composes:
+
+* **Ring buffer** — the scan carries the last ``s + 1`` param snapshots as
+  one pytree whose leaves lead with ``(s + 1, ...)``; slot ``t mod (s+1)``
+  holds the round-``t`` params (:func:`init_param_hist`,
+  :func:`update_param_hist`, :func:`read_slots`).
+* **Staleness counters** — per-shard int32 ``s_d`` with the bounded-lag
+  dynamics of :func:`staleness_step`: a shard that beats the deadline syncs
+  (``s_d ← 0``); one that misses falls behind (``s_d ← s_d + 1``) until the
+  bound forces a blocking sync (``s_d ← 0``, the round waits for it).
+* **Decay weighting** — :data:`DECAY_FAMILIES` (constant / polynomial /
+  exponential), ``λ(0) = 1`` for every family so ``staleness_bound = 0``
+  reduces *bit-identically* to the synchronous round.  Normalisation is the
+  psum'd ``Σ λ·w`` denominator itself (``core.metrics.safe_div``);
+  :func:`normalized_decay_weights` exposes the explicit distribution form
+  for analysis and the property tests.
+* **Simulated wall clock** — :func:`round_sim_time` prices one round under
+  a latency scenario (``repro.fl.scenarios``): fast shards finish at their
+  own latency, slow-but-unforced shards are cut off at the deadline (their
+  work lands stale), forced shards block the round at full latency.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import metrics as metrics_lib
+
+__all__ = [
+    "DECAY_FAMILIES",
+    "decay_weights",
+    "normalized_decay_weights",
+    "init_param_hist",
+    "init_staleness_fields",
+    "update_param_hist",
+    "read_slots",
+    "staleness_step",
+    "round_sim_time",
+]
+
+PyTree = Any
+
+# Staleness-decay families λ(s), all with λ(0) = 1 and λ non-increasing:
+#   constant     λ(s) = 1                 (plain stale FedAvg)
+#   polynomial   λ(s) = (1 + s)^{-α}      (Xie et al.-style poly decay)
+#   exponential  λ(s) = exp(-α·s)
+DECAY_FAMILIES = ("constant", "polynomial", "exponential")
+
+
+def decay_weights(staleness: jax.Array, family: str, alpha: float) -> jax.Array:
+    """λ(s) per entry of ``staleness`` (int array) — raw, un-normalised.
+
+    The engine multiplies each shard's eq.-(6) weights by its λ(s_d); the
+    Σλw denominator of the psum rendezvous (``safe_div``) then performs the
+    normalisation, so every family yields a convex combination of client
+    params.  λ is strictly positive, so the weight-0 ⟺ non-cohort masking
+    convention (NaN losses, DESIGN.md §8) survives the rescale.
+    """
+    s = jnp.asarray(staleness).astype(jnp.float32)
+    if family == "constant":
+        return jnp.ones_like(s)
+    if family == "polynomial":
+        return (1.0 + s) ** jnp.float32(-alpha)
+    if family == "exponential":
+        return jnp.exp(jnp.float32(-alpha) * s)
+    raise ValueError(
+        f"unknown staleness decay family {family!r}; known: {DECAY_FAMILIES}"
+    )
+
+
+def normalized_decay_weights(
+    staleness: jax.Array, family: str, alpha: float
+) -> jax.Array:
+    """λ(s) normalised to a distribution via :func:`~repro.core.metrics.safe_div`.
+
+    The explicit form of the weighting the psum denominator applies
+    implicitly — non-negative, sums to 1 for any non-empty staleness vector
+    (property-tested in ``tests/test_staleness_engine.py``).
+    """
+    lam = decay_weights(staleness, family, alpha)
+    return metrics_lib.safe_div(lam, jnp.sum(lam))
+
+
+# -------------------------------------------------------------- ring buffer
+
+
+def init_param_hist(params: PyTree, bound: int) -> PyTree:
+    """Ring buffer of ``bound + 1`` param snapshots, every slot = ``params``.
+
+    Slot convention: slot ``t mod (bound + 1)`` holds the round-``t`` global
+    params, so at init (round 0) every reachable staleness reads θ₀.
+    """
+    n = bound + 1
+    return jax.tree_util.tree_map(
+        lambda x: jnp.tile(x[None], (n,) + (1,) * x.ndim), params
+    )
+
+
+def init_staleness_fields(params, bound: int, mesh, client_axis: str):
+    """Fresh staleness bookkeeping for a ``ServerState``: ``(param_hist,
+    shard_staleness)`` — the ring buffer with every slot at ``params`` and
+    zeroed per-shard lag counters.  The ONE constructor every state builder
+    (``engine.init_server_state``, ``FLTrainer.server_state``) goes through,
+    so the ring/counter layout can never drift between paths.  Staleness is
+    a per-shard property, so a mesh is mandatory.
+    """
+    if mesh is None:
+        raise ValueError(
+            f"staleness_bound={bound} requires a client mesh (pass mesh=...; "
+            "launchers: --staleness-bound needs --shard-clients)"
+        )
+    return (
+        init_param_hist(params, bound),
+        jnp.zeros((mesh.shape[client_axis],), jnp.int32),
+    )
+
+
+def update_param_hist(
+    hist: PyTree, params: PyTree, round_t: jax.Array, bound: int
+) -> PyTree:
+    """Write the round-``round_t`` params into their ring slot."""
+    slot = jnp.mod(jnp.asarray(round_t, jnp.int32), bound + 1)
+    return jax.tree_util.tree_map(
+        lambda h, p: lax.dynamic_update_index_in_dim(
+            h, p.astype(h.dtype), slot, 0
+        ),
+        hist,
+        params,
+    )
+
+
+def read_slots(round_t: jax.Array, staleness: jax.Array, bound: int) -> jax.Array:
+    """Ring slots holding the round-``t − s_d`` params, per shard.
+
+    Counters satisfy ``s_d ≤ min(round_t + 1, bound)`` (they start at 0 and
+    bump at most once per round, and the engine reads with the post-update
+    counters), so ``t − s_d ≥ −1`` and the read never leaves the
+    ``{θ_max(0, t−bound) … θ_t}`` window the ring holds — the ``t = 0``,
+    ``s_d = 1`` corner lands on a slot still carrying the init value θ₀.
+    """
+    return jnp.mod(round_t - staleness, bound + 1).astype(jnp.int32)
+
+
+# ----------------------------------------------------------------- dynamics
+
+
+def staleness_step(
+    staleness: jax.Array, slow: jax.Array, bound: int
+) -> Tuple[jax.Array, jax.Array]:
+    """One round of the bounded-lag counter dynamics.
+
+    ``slow`` marks shards that missed this round's deadline.  Fast shards
+    sync (``0``); slow shards fall one round further behind; a shard whose
+    counter would exceed ``bound`` is **forced**: the round blocks on it
+    (see :func:`round_sim_time`) and it re-syncs to 0.  With ``bound = 0``
+    every slow shard is forced every round — the synchronous barrier.
+
+    The engine keys the round's decay weight and ring read on the
+    POST-update counters returned here: what lands by round ``t``'s deadline
+    is work based on pre-miss params, so a deadline-capped round never
+    aggregates information the simulated clock says arrived after it closed
+    (a first-time straggler delivers round-``t−1`` work, not free fresh
+    work).  Forced shards block the round and deliver fresh work at 0.
+
+    Returns ``(new_staleness, forced)``.
+    """
+    s = jnp.asarray(staleness, jnp.int32)
+    bumped = jnp.where(slow, s + 1, 0)
+    forced = bumped > bound
+    return jnp.where(forced, 0, bumped).astype(jnp.int32), forced
+
+
+def round_sim_time(
+    shard_lat: jax.Array,
+    slow: jax.Array,
+    forced: jax.Array,
+    deadline: float,
+) -> jax.Array:
+    """Simulated wall clock of one bounded-staleness round.
+
+    Fast shards finish at their own latency; slow-but-unforced shards are
+    cut off at the ``deadline`` (their work continues into later rounds as
+    staleness); forced shards block the round at their full latency.  The
+    round closes at the max over shards — with ``bound = 0`` (all slow
+    shards forced) this is exactly the synchronous ``max(latency)`` barrier.
+    """
+    per_shard = jnp.where(
+        slow, jnp.where(forced, shard_lat, jnp.float32(deadline)), shard_lat
+    )
+    return jnp.max(per_shard)

@@ -34,6 +34,7 @@ from repro.core import selection as selection_lib
 from repro.core import similarity as similarity_lib
 from repro.fl import engine as engine_lib
 from repro.fl import rounds as rounds_lib
+from repro.fl import staleness as staleness_lib
 from repro.fl.engine import FLConfig
 
 __all__ = ["FLConfig", "FLTrainer"]
@@ -86,6 +87,10 @@ def _cached_round_fn(cfg: FLConfig, loss_fn, accuracy_fn, strategy, mesh, client
         cfg.local_steps,
         cfg.sample_with_replacement,
         cfg.cohort_cap,
+        cfg.staleness_bound,
+        cfg.staleness_decay,
+        cfg.staleness_alpha,
+        cfg.scenario,
         mesh,
         client_axis,
     )
@@ -245,9 +250,21 @@ class FLTrainer:
 
     def server_state(self) -> engine_lib.ServerState:
         """Pack the trainer's current server knowledge into a ServerState
-        (laid out over ``self.mesh``'s client axis when a mesh is set)."""
+        (laid out over ``self.mesh``'s client axis when a mesh is set).
+
+        With ``cfg.staleness_bound`` set (DESIGN.md §9) the staleness
+        bookkeeping is (re-)initialised from the *current* params: the ring
+        buffer starts with every slot at θ_now and the per-shard counters at
+        0 — each ``run()`` call opens with a freshly synced federation (the
+        scanned segments inside one run carry the evolving ring/counters
+        through unchanged)."""
         cfg = self.cfg
         cluster_labels = self._cluster_labels()
+        param_hist = shard_staleness = None
+        if cfg.staleness_bound is not None:
+            param_hist, shard_staleness = staleness_lib.init_staleness_fields(
+                self.params, cfg.staleness_bound, self.mesh, self.client_axis
+            )
         state = engine_lib.ServerState(
             params=self.params,
             key=self.key,
@@ -263,6 +280,8 @@ class FLTrainer:
             client_label_dists=self.client_label_dists,
             global_label_dist=self.global_label_dist,
             strategy_index=jnp.asarray(0, jnp.int32),
+            param_hist=param_hist,
+            shard_staleness=shard_staleness,
         )
         if self.mesh is not None:
             state = engine_lib.shard_server_state(

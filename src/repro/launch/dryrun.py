@@ -288,7 +288,9 @@ def _serve_case(spec, cfg, dims, mesh, multi_pod, prefill: bool):
 
 def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
                         clients_per_round: int = 32, rounds: int = 4,
-                        cohort_cap: Optional[int] = None) -> Dict:
+                        cohort_cap: Optional[int] = None,
+                        staleness_bound: Optional[int] = None,
+                        scenario: Optional[str] = None) -> Dict:
     """Prove the mesh-sharded federation engine (DESIGN.md §8) lowers and
     compiles at scale: C clients sharded over an N-device client mesh, the
     scanned round's local-update core as a shard_map with psum'd FedAvg.
@@ -302,6 +304,13 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
     local-update scan is sized to ``min(C/N, cohort_cap)`` slots, proving the
     k ≪ C round really lowers to slot-count work (visible in the HLO loop
     trip counts) with the psum rendezvous unchanged.
+
+    ``staleness_bound``/``scenario`` compile the bounded-staleness variant
+    (DESIGN.md §9): the scan carries the ``s+1``-slot param ring buffer +
+    per-shard staleness counters, every shard's base params come from a
+    dynamic ring read, and the latency scenario's straggler bookkeeping all
+    lower inside the same single-psum round — proving the stale temporal
+    dimension fits the compiled-scan contract at production scale.
     """
     import numpy as np
 
@@ -309,13 +318,19 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
     from repro.fl import engine as engine_lib
 
     t0 = time.time()
+    case = "fl_sharded_engine"
+    if cohort_cap is not None:
+        case = "fl_sharded_engine_slotted"
+    elif staleness_bound is not None:
+        case = "fl_sharded_engine_stale"
     rec: Dict = {
-        "case": ("fl_sharded_engine" if cohort_cap is None
-                 else "fl_sharded_engine_slotted"),
+        "case": case,
         "mesh": f"{num_devices}x1({sh.CLIENT_AXIS})",
         "clients": clients,
         "clients_per_round": clients_per_round,
         "cohort_cap": cohort_cap,
+        "staleness_bound": staleness_bound,
+        "scenario": scenario,
         "scan_rounds": rounds,
     }
     try:
@@ -337,6 +352,7 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
             num_clients=clients, clients_per_round=clients_per_round,
             local_epochs=2, lr=0.1, rounds=rounds, eval_every=rounds,
             num_classes=ncls, seed=0, cohort_cap=cohort_cap,
+            staleness_bound=staleness_bound, scenario=scenario,
         )
         strat = selection_lib.DPPSelection()
         state = engine_lib.init_server_state(
@@ -555,13 +571,18 @@ def main():
     ap.add_argument("--fl-cohort-cap", type=int, default=2,
                     help="per-shard slot count (and cohort size) for the "
                          "--fl-sharded capacity-slot case (DESIGN.md §8)")
+    ap.add_argument("--fl-staleness-bound", type=int, default=2,
+                    help="staleness bound for the --fl-sharded bounded-"
+                         "staleness compile case (DESIGN.md §9)")
     ap.add_argument("--out", default=None, help="append JSONL records here")
     ap.add_argument("--dump-hlo", default=None)
     args = ap.parse_args()
 
     if args.fl_sharded:
-        # resident-mode round, then the capacity-slot variant on a k ≪ C_loc
-        # cohort (cap = min(C/N, k)) — both must lower and compile
+        # resident-mode round, the capacity-slot variant on a k ≪ C_loc
+        # cohort (cap = min(C/N, k)), and the bounded-staleness variant
+        # (ring buffer + counters under heavy-tail latency, DESIGN.md §9)
+        # — all three must lower and compile
         recs = [
             run_fl_sharded_case(num_devices=args.fl_devices),
             run_fl_sharded_case(
@@ -569,15 +590,23 @@ def main():
                 clients_per_round=args.fl_cohort_cap,
                 cohort_cap=args.fl_cohort_cap,
             ),
+            run_fl_sharded_case(
+                num_devices=args.fl_devices,
+                staleness_bound=args.fl_staleness_bound,
+                scenario="heavy_tail",
+            ),
         ]
         any_fail = False
         for rec in recs:
             status = "OK " if rec["ok"] else "FAIL"
             cap = rec["cohort_cap"]
+            stale = rec.get("staleness_bound")
             print(
                 f"[{status}] {rec['case']} {rec['mesh']:14s} "
                 f"C={rec['clients']} k={rec['clients_per_round']}"
                 + (f" cap={cap}" if cap is not None else "")
+                + (f" stale<=%d(%s)" % (stale, rec["scenario"])
+                   if stale is not None else "")
                 + f" {rec['total_s']:7.1f}s"
                 + ("" if rec["ok"] else f"  {rec['error'][:120]}")
             )

@@ -26,6 +26,8 @@ from repro.core import make_strategy
 from repro.data import make_token_dataset
 from repro.fl import engine as engine_lib
 from repro.fl import rounds as rounds_lib
+from repro.fl.scenarios import SCENARIO_NAMES
+from repro.fl.staleness import DECAY_FAMILIES
 from repro.launch.mesh import make_client_mesh
 from repro.models import transformer as T
 
@@ -66,10 +68,20 @@ def run_fl(args):
     small diverse cohort (k ≪ C, the paper's regime) stops paying
     full-federation compute.  ``M`` must be ≥ min(--per-round, C/N);
     ``M = --per-round`` is the natural setting.
+
+    ``--scenario NAME`` attaches a system-heterogeneity model (DESIGN.md
+    §9): per-client latency draws priced into a simulated round wall clock
+    (reported at the end), and availability-masked selection for scenarios
+    with an availability model.  ``--staleness-bound S`` (requires
+    ``--shard-clients`` and ``--scenario``) relaxes the sharded round's
+    psum barrier to bounded-staleness aggregation: shards that miss the
+    scenario deadline contribute partial sums computed on params up to S
+    rounds old, weighted by ``--staleness-decay``/``--staleness-alpha``.
     """
     mesh = None
     shard_clients = getattr(args, "shard_clients", 0)
     cohort_cap = getattr(args, "cohort_cap", None)
+    staleness_bound = getattr(args, "staleness_bound", None)
     if shard_clients:
         if args.clients % shard_clients:
             raise SystemExit(
@@ -79,6 +91,8 @@ def run_fl(args):
         mesh = make_client_mesh(shard_clients)
     elif cohort_cap is not None:
         raise SystemExit("--cohort-cap requires --shard-clients")
+    elif staleness_bound is not None:
+        raise SystemExit("--staleness-bound requires --shard-clients")
     spec = get_arch(args.arch)
     cfg = spec.model.reduced(param_dtype="float32", dtype="float32", remat=False)
     params = T.init_params(jax.random.key(args.seed), cfg)
@@ -112,6 +126,10 @@ def run_fl(args):
         num_classes=num_topics,
         seed=args.seed,
         cohort_cap=cohort_cap,
+        staleness_bound=staleness_bound,
+        staleness_decay=getattr(args, "staleness_decay", "polynomial"),
+        staleness_alpha=getattr(args, "staleness_alpha", 0.5),
+        scenario=getattr(args, "scenario", None),
     )
     state = engine_lib.init_server_state(
         flcfg, params, loss_fn, None, clients, topics,
@@ -127,6 +145,13 @@ def run_fl(args):
         if t % args.log_every == 0 or t == args.rounds:
             print(f"[fl:{args.selection}] round {t:4d} sel={sels[t - 1].tolist()} "
                   f"loss={losses[t - 1]:.4f} gemd={gemds[t - 1]:.3f}")
+    if "sim_time" in outs:
+        sim = np.asarray(outs["sim_time"])
+        mode = ("bounded-staleness" if staleness_bound is not None
+                else "synchronous barrier")
+        print(f"[fl:{args.selection}] scenario={args.scenario} ({mode}): "
+              f"simulated wall clock {sim.sum():.2f} "
+              f"(mean round {sim.mean():.2f})")
     params = state.params
     if args.ckpt:
         save(args.ckpt, args.rounds, params)
@@ -183,6 +208,21 @@ def main():
                          "trained per shard (requires --shard-clients; "
                          ">= min(--per-round, clients/shards); the natural "
                          "setting is --per-round)")
+    ap.add_argument("--scenario", choices=SCENARIO_NAMES, default=None,
+                    help="system-heterogeneity scenario (DESIGN.md §9): "
+                         "per-client latency model + optional availability "
+                         "masks; prices a simulated round wall clock")
+    ap.add_argument("--staleness-bound", type=int, default=None,
+                    help="bounded-staleness aggregation: max rounds a shard "
+                         "may lag (requires --shard-clients and --scenario; "
+                         "0 = synchronous semantics)")
+    ap.add_argument("--staleness-decay", choices=DECAY_FAMILIES,
+                    default="polynomial",
+                    help="staleness-decay weighting family for stale "
+                         "contributions")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="decay rate for polynomial/exponential staleness "
+                         "weighting")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     (run_fl if args.mode == "fl" else run_pretrain)(args)

@@ -1,0 +1,430 @@
+"""Bounded-staleness engine + scenario simulator (DESIGN.md §9).
+
+Extends the ``tests/test_shard_engine.py`` parity pattern with the staleness
+contract: under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+CI ``multidevice`` job) ``staleness_bound=0`` must reproduce the synchronous
+sharded engine — bit-identical cohorts, fp32-tolerance params — and bounded
+runs must respect the staleness invariants (counters ≤ bound, per-round
+simulated time ≤ the synchronous barrier under the same latency draws).
+
+Pure pieces (decay weighting, ring buffer, counter dynamics, scenario
+registry, availability-masked selection) are tier-1: they run on one device.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dpp as dpp_lib
+from repro.core import selection as selection_lib
+from repro.fl import engine, scenarios, staleness
+from repro.fl.trainer import FLTrainer
+from repro.launch.mesh import make_client_mesh
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+FEAT, N_C, NCLS = 8, 6, 4
+
+
+def linear_loss(params, x, y):
+    logp = jax.nn.log_softmax(x @ params["w"] + params["b"])
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+
+def linear_features(params, x):
+    h = x @ params["w"] + params["b"]
+    return h, h
+
+
+def linear_accuracy(params, x, y):
+    return jnp.mean(jnp.argmax(x @ params["w"] + params["b"], -1) == y)
+
+
+def _federation(c, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(c, N_C, FEAT)).astype(np.float32))
+    ys = jnp.asarray(rng.integers(0, NCLS, size=(c, N_C)), jnp.int32)
+    params = {
+        "w": jnp.asarray(0.01 * rng.normal(size=(FEAT, NCLS)).astype(np.float32)),
+        "b": jnp.zeros((NCLS,), jnp.float32),
+    }
+    return xs, ys, params
+
+
+def _state_and_cfg(c, k, strategy, mesh=None, **cfg_kw):
+    xs, ys, params = _federation(c)
+    cfg = engine.FLConfig(
+        num_clients=c, clients_per_round=k, local_epochs=2, lr=0.1,
+        rounds=8, eval_every=2, num_classes=NCLS, seed=0, **cfg_kw,
+    )
+    state = engine.init_server_state(
+        cfg, params, linear_loss, None, xs, ys,
+        strategy=strategy, profiles=xs.mean(axis=1), mesh=mesh,
+    )
+    return cfg, state
+
+
+def _max_param_diff(a, b):
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+# ------------------------------------------------------- decay weighting
+
+
+@pytest.mark.parametrize("family", staleness.DECAY_FAMILIES)
+def test_decay_weights_basic_contract(family):
+    s = jnp.arange(6)
+    lam = staleness.decay_weights(s, family, 0.7)
+    lam = np.asarray(lam)
+    assert np.all(lam > 0) and np.all(lam <= 1.0)
+    assert lam[0] == 1.0  # λ(0) = 1 for every family: s=0 ⇒ synchronous
+    assert np.all(np.diff(lam) <= 1e-7)  # non-increasing in staleness
+
+
+def test_decay_weights_unknown_family():
+    with pytest.raises(ValueError, match="unknown staleness decay"):
+        staleness.decay_weights(jnp.arange(3), "bogus", 0.5)
+
+
+def test_decay_weights_property():
+    """Hypothesis: normalised weights are a distribution for every family,
+    rate, and staleness vector."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        family=st.sampled_from(staleness.DECAY_FAMILIES),
+        alpha=st.floats(0.0, 5.0, allow_nan=False),
+        svec=st.lists(st.integers(0, 12), min_size=1, max_size=16),
+    )
+    def check(family, alpha, svec):
+        w = np.asarray(
+            staleness.normalized_decay_weights(jnp.asarray(svec), family, alpha)
+        )
+        assert np.all(w >= 0)
+        assert np.isclose(w.sum(), 1.0, atol=1e-5)
+
+    check()
+
+
+# -------------------------------------------------- ring buffer / dynamics
+
+
+def test_param_hist_ring_semantics():
+    params = {"w": jnp.arange(4.0)}
+    hist = staleness.init_param_hist(params, bound=2)
+    assert hist["w"].shape == (3, 4)
+    # write rounds 1..4 and read them back at every reachable staleness
+    for t in range(1, 5):
+        hist = staleness.update_param_hist(
+            hist, {"w": jnp.full((4,), float(t))}, t, bound=2
+        )
+    for s in range(3):
+        slot = staleness.read_slots(jnp.asarray(4), jnp.asarray([s]), bound=2)
+        got = hist["w"][int(slot[0]), 0]
+        assert float(got) == 4.0 - s
+
+
+def test_staleness_step_dynamics():
+    s = jnp.asarray([0, 1, 2, 2, 0], jnp.int32)
+    slow = jnp.asarray([False, True, True, False, True])
+    new_s, forced = staleness.staleness_step(s, slow, bound=2)
+    np.testing.assert_array_equal(np.asarray(new_s), [0, 2, 0, 0, 1])
+    np.testing.assert_array_equal(np.asarray(forced), [False, False, True, False, False])
+    # bound 0: every slow shard is forced every round (the sync barrier)
+    new_s0, forced0 = staleness.staleness_step(
+        jnp.zeros((3,), jnp.int32), jnp.asarray([True, False, True]), bound=0
+    )
+    np.testing.assert_array_equal(np.asarray(new_s0), [0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(forced0), [True, False, True])
+
+
+def test_round_sim_time_semantics():
+    lat = jnp.asarray([0.5, 3.0, 9.0], jnp.float32)
+    slow = jnp.asarray([False, True, True])
+    # no forced shard: stragglers cut off at the deadline
+    t = staleness.round_sim_time(lat, slow, jnp.zeros((3,), bool), 2.0)
+    assert float(t) == 2.0
+    # forced shard blocks at full latency
+    t = staleness.round_sim_time(lat, slow, jnp.asarray([False, False, True]), 2.0)
+    assert float(t) == 9.0
+    # all fast: round closes at the slowest shard, below the deadline
+    t = staleness.round_sim_time(lat, jnp.zeros((3,), bool), jnp.zeros((3,), bool), 2.0)
+    assert float(t) == 9.0  # slow=False everywhere ⇒ raw latencies
+
+
+# ------------------------------------------------------ config validation
+
+
+def test_config_rejects_cohort_cap_with_staleness():
+    with pytest.raises(ValueError, match="incompatible"):
+        engine.FLConfig(cohort_cap=2, staleness_bound=1, scenario="uniform")
+
+
+def test_config_rejects_staleness_without_scenario():
+    with pytest.raises(ValueError, match="requires a latency scenario"):
+        engine.FLConfig(staleness_bound=1)
+
+
+def test_config_rejects_negative_bound_and_bad_decay():
+    with pytest.raises(ValueError, match="must be >= 0"):
+        engine.FLConfig(staleness_bound=-1, scenario="uniform")
+    with pytest.raises(ValueError, match="unknown staleness_decay"):
+        engine.FLConfig(
+            staleness_bound=1, scenario="uniform", staleness_decay="bogus"
+        )
+
+
+def test_config_rejects_unknown_scenario():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        engine.FLConfig(scenario="does-not-exist")
+
+
+def test_make_round_fn_rejects_staleness_without_mesh():
+    cfg = engine.FLConfig(
+        num_clients=4, clients_per_round=2, staleness_bound=1,
+        scenario="uniform",
+    )
+    with pytest.raises(ValueError, match="requires the mesh-sharded engine"):
+        engine.make_round_fn(cfg, linear_loss, (selection_lib.UniformSelection(),))
+
+
+# --------------------------------------------------------- scenarios
+
+
+def test_scenario_registry_deterministic():
+    for name in scenarios.SCENARIO_NAMES:
+        scen = scenarios.get_scenario(name)
+        key = jax.random.key(3)
+        a = np.asarray(scen.latency(key, 32))
+        b = np.asarray(scen.latency(key, 32))
+        np.testing.assert_array_equal(a, b)
+        assert a.dtype == np.float32 and np.all(a > 0)
+        if scen.availability is not None:
+            m = np.asarray(scen.availability(key, jnp.asarray(5), 32))
+            np.testing.assert_array_equal(
+                m, np.asarray(scen.availability(key, jnp.asarray(5), 32))
+            )
+            assert m.dtype == bool
+    with pytest.raises(ValueError, match="unknown scenario"):
+        scenarios.get_scenario("nope")
+
+
+def _masked_state(c, k, rng):
+    profiles = jnp.asarray(rng.normal(size=(c, 5)).astype(np.float32))
+    kernel = profiles @ profiles.T + 0.1 * jnp.eye(c)
+    return selection_lib.selection_state(
+        c, k,
+        kernel=kernel,
+        losses=jnp.asarray(rng.uniform(0.5, 2.0, size=(c,)).astype(np.float32)),
+        client_sizes=jnp.full((c,), 10.0),
+        cluster_labels=jnp.asarray(rng.integers(0, k, size=(c,)), jnp.int32),
+    )
+
+
+@pytest.mark.parametrize(
+    "strat",
+    [
+        selection_lib.UniformSelection(),
+        selection_lib.DPPSelection(),
+        selection_lib.DPPSelection(mode="map"),
+        selection_lib.FedSAESelection(),
+        selection_lib.ClusterSelection(),
+        selection_lib.PowerOfChoiceSelection(d=6),
+    ],
+    ids=lambda s: s.name,
+)
+def test_select_avail_fn_respects_mask(strat):
+    """With ≥ k clients available, every pick is available; with fewer the
+    draw falls back to the unmasked strategy but stays well-formed."""
+    c, k = 12, 4
+    rng = np.random.default_rng(0)
+    state = _masked_state(c, k, rng)
+    avail = jnp.asarray(rng.uniform(size=(c,)) < 0.6)
+    if int(jnp.sum(avail)) < k:  # keep the test's premise
+        avail = avail.at[:k].set(True)
+    sel = np.asarray(strat.select_avail_fn(jax.random.key(1), state, k, avail))
+    assert sel.shape == (k,)
+    assert np.all(np.asarray(avail)[sel]), (sel, np.asarray(avail))
+    # degenerate mask: fewer than k available -> fallback still yields k ids
+    scarce = jnp.zeros((c,), bool).at[0].set(True)
+    sel = np.asarray(strat.select_avail_fn(jax.random.key(2), state, k, scarce))
+    assert sel.shape == (k,) and np.all((0 <= sel) & (sel < c))
+
+
+def test_engine_emits_sim_time_single_device():
+    """A latency-only scenario works without a mesh: sim_time = the cohort's
+    synchronous barrier, and cohorts are bit-identical to a scenario-free run."""
+    strategy = selection_lib.DPPSelection()
+    cfg, state = _state_and_cfg(8, 3, strategy)
+    scfg = dataclasses.replace(cfg, scenario="heavy_tail")
+    rf = engine.make_round_fn(cfg, linear_loss, (strategy,))
+    srf = engine.make_round_fn(scfg, linear_loss, (strategy,))
+    _, out = engine.run_scanned(rf, state, 4)
+    _, sout = engine.run_scanned(srf, state, 4)
+    np.testing.assert_array_equal(
+        np.asarray(out["selected"]), np.asarray(sout["selected"])
+    )
+    np.testing.assert_allclose(
+        np.asarray(out["loss"]), np.asarray(sout["loss"]), atol=1e-6
+    )
+    assert np.all(np.asarray(sout["sim_time"]) > 0)
+
+
+def test_engine_availability_masks_cohorts():
+    """The 'flaky' scenario's availability mask rides the outputs and bounds
+    the cohort whenever enough clients are up."""
+    strategy = selection_lib.UniformSelection()
+    cfg, state = _state_and_cfg(8, 3, strategy, scenario="flaky")
+    rf = engine.make_round_fn(cfg, linear_loss, (strategy,))
+    _, out = engine.run_scanned(rf, state, 8)
+    avail = np.asarray(out["avail"])
+    sel = np.asarray(out["selected"])
+    assert avail.shape == (8, 8) and avail.dtype == bool
+    for r in range(8):
+        if avail[r].sum() >= 3:
+            assert np.all(avail[r][sel[r]]), (r, avail[r], sel[r])
+
+
+# ------------------------------------------------- sharded staleness parity
+
+
+@multidevice
+@pytest.mark.parametrize("strat_name", ["fl-dp3s", "fedavg"])
+def test_stale_bound0_matches_synchronous(strat_name):
+    """The acceptance contract: staleness_bound=0 reproduces the synchronous
+    sharded engine — bit-identical cohorts, fp32-tolerance params/metrics."""
+    from repro.core import make_strategy
+
+    strategy = make_strategy(strat_name)
+    mesh = make_client_mesh(jax.device_count())
+    c = 2 * jax.device_count()
+    cfg, state = _state_and_cfg(c, 4, strategy)
+    rounds = cfg.rounds
+
+    sync_fn = engine.make_round_fn(cfg, linear_loss, (strategy,),
+                                   accuracy_fn=linear_accuracy, mesh=mesh)
+    st_sync, out_sync = engine.run_scanned(sync_fn, state, rounds, mesh=mesh)
+
+    scfg = dataclasses.replace(
+        cfg, staleness_bound=0, staleness_decay="polynomial",
+        scenario="heavy_tail",
+    )
+    xs, ys, params = _federation(c)
+    sstate = engine.init_server_state(
+        scfg, params, linear_loss, None, xs, ys, strategy=strategy,
+        profiles=xs.mean(axis=1), mesh=mesh,
+    )
+    stale_fn = engine.make_round_fn(scfg, linear_loss, (strategy,),
+                                    accuracy_fn=linear_accuracy, mesh=mesh)
+    st_stale, out_stale = engine.run_scanned(stale_fn, sstate, rounds, mesh=mesh)
+
+    np.testing.assert_array_equal(
+        np.asarray(out_sync["selected"]), np.asarray(out_stale["selected"]),
+        err_msg="staleness_bound=0 cohorts diverged from the synchronous engine",
+    )
+    assert _max_param_diff(st_sync.params, st_stale.params) < 1e-5
+    np.testing.assert_allclose(
+        np.asarray(st_sync.losses), np.asarray(st_stale.losses), atol=1e-5
+    )
+    for key in ("loss", "gemd"):
+        np.testing.assert_allclose(
+            np.asarray(out_sync[key]), np.asarray(out_stale[key]), atol=1e-5
+        )
+    # the bound-0 counters are pinned at zero: the sync semantics held
+    assert np.all(np.asarray(st_stale.shard_staleness) == 0)
+
+
+@multidevice
+def test_stale_bounded_run_invariants():
+    """s≥1: counters stay within the bound, stale rounds never cost more
+    simulated time than the synchronous barrier under the same draws, and
+    latency-only staleness leaves the cohorts untouched."""
+    strategy = selection_lib.DPPSelection()
+    mesh = make_client_mesh(jax.device_count())
+    c = 2 * jax.device_count()
+    xs, ys, params = _federation(c)
+    base = dict(
+        num_clients=c, clients_per_round=4, local_epochs=2, lr=0.1,
+        rounds=10, eval_every=5, num_classes=NCLS, seed=0,
+        scenario="heavy_tail",
+    )
+    cfg_sync = engine.FLConfig(**base)
+    cfg_stale = engine.FLConfig(
+        **base, staleness_bound=3, staleness_decay="exponential",
+        staleness_alpha=0.3,
+    )
+
+    def run(cfg):
+        st = engine.init_server_state(
+            cfg, params, linear_loss, None, xs, ys, strategy=strategy,
+            profiles=xs.mean(axis=1), mesh=mesh,
+        )
+        rf = engine.make_round_fn(cfg, linear_loss, (strategy,), mesh=mesh)
+        return engine.run_scanned(rf, st, 10, mesh=mesh)
+
+    st_sync, out_sync = run(cfg_sync)
+    st_stale, out_stale = run(cfg_stale)
+
+    np.testing.assert_array_equal(
+        np.asarray(out_sync["selected"]), np.asarray(out_stale["selected"]),
+        err_msg="a latency-only scenario must never move the cohorts",
+    )
+    assert np.all(np.isfinite(np.asarray(out_stale["loss"])))
+    assert np.all(np.asarray(st_stale.shard_staleness) <= 3)
+    assert np.all(np.asarray(out_stale["staleness"]) <= 3.0)
+    sim_sync = np.asarray(out_sync["sim_time"])
+    sim_stale = np.asarray(out_stale["sim_time"])
+    assert np.all(sim_stale <= sim_sync + 1e-5), (sim_stale, sim_sync)
+
+
+@multidevice
+def test_stale_run_many_grid():
+    """The staleness machinery composes with the vmapped run grid: ring
+    buffers / counters ride the stacked state per grid point."""
+    strategy = selection_lib.UniformSelection()
+    mesh = make_client_mesh(jax.device_count())
+    c = 2 * jax.device_count()
+    cfg, s0 = _state_and_cfg(
+        c, 4, strategy, mesh=mesh, staleness_bound=2,
+        staleness_decay="polynomial", scenario="lognormal",
+    )
+    s1 = dataclasses.replace(s0, key=jax.random.key(123))
+    stacked = engine.stack_states([s0, s1])
+    rf = engine.make_round_fn(cfg, linear_loss, (strategy,), mesh=mesh)
+    final, outs = engine.run_many(rf, stacked, 4, mesh=mesh)
+    assert np.asarray(outs["loss"]).shape == (2, 4)
+    assert np.all(np.isfinite(np.asarray(outs["loss"])))
+    assert np.all(np.asarray(final.shard_staleness) <= 2)
+
+
+@multidevice
+def test_trainer_stale_run():
+    """FLTrainer(mesh=...) drives the staleness engine through segments."""
+    mesh = make_client_mesh(jax.device_count())
+    c = 2 * jax.device_count()
+    xs, ys, params = _federation(c)
+    cfg = engine.FLConfig(
+        num_clients=c, clients_per_round=4, local_epochs=1, lr=0.1,
+        rounds=6, eval_every=3, num_classes=NCLS, seed=0, reprofile_every=4,
+        staleness_bound=2, staleness_decay="polynomial", scenario="heavy_tail",
+    )
+    trainer = FLTrainer(
+        cfg, params, linear_loss, linear_features, np.asarray(xs),
+        np.asarray(ys), selection_lib.DPPSelection(),
+        accuracy_fn=linear_accuracy, mesh=mesh,
+    )
+    hist = trainer.run()
+    assert hist["round"] == [3, 6]
+    assert np.all(np.isfinite(hist["loss"]))
