@@ -77,6 +77,20 @@ def _async_metrics(payload: Dict):
     return out, payload.get("host_cores")
 
 
+def _funnel_metrics(payload: Dict):
+    # two-stage funnel (DESIGN.md §10): selection-phase speedup per
+    # federation size, plus both engine arms' scanned throughput so the
+    # funneled round can't silently regress back to full-federation cost
+    out = {}
+    for c, row in payload.get("selection_phase", {}).items():
+        out[f"funnel_speedup.C{c}"] = float(row["speedup"])
+    for c, row in payload.get("engine_rounds_per_sec", {}).items():
+        for variant in ("full", "funnel"):
+            if variant in row:
+                out[f"funnel_rounds_per_sec.C{c}.{variant}"] = float(row[variant])
+    return out, payload.get("host_cores")
+
+
 def _cohort_metrics(payload: Dict):
     # steady-state run_many scan throughput of the slotted cohort sweep
     out = {}
@@ -93,6 +107,7 @@ MANIFEST: Dict[str, Callable] = {
     "BENCH_shard_smoke.json": _shard_metrics,
     "BENCH_async_smoke.json": _async_metrics,
     "BENCH_cohort_smoke.json": _cohort_metrics,
+    "BENCH_funnel_smoke.json": _funnel_metrics,
 }
 
 

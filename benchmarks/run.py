@@ -31,6 +31,7 @@ def main() -> None:
         fig3_profiling,
         fig45_init_invariance,
         fig6_init_robustness,
+        funnel_bench,
         kernels_bench,
         shard_bench,
         table1_rounds,
@@ -59,6 +60,7 @@ def main() -> None:
     gated("dpp_bench", lambda: dpp_bench.main(perf_args))
     gated("shard_bench", lambda: shard_bench.main(perf_args))
     gated("async_bench", lambda: async_bench.main(perf_args))
+    gated("funnel_bench", lambda: funnel_bench.main(perf_args))
     cohort_sweep.main(perf_args)
     fig45_init_invariance.main()
     fig1_convergence.main()

@@ -21,6 +21,7 @@ from repro.core.profiles import (
     representative_gradient_profile,
 )
 from repro.core.selection import (
+    CandidateSet,
     ClusterSelection,
     DPPSelection,
     FedSAESelection,
@@ -28,9 +29,12 @@ from repro.core.selection import (
     RoundState,
     SelectionStrategy,
     UniformSelection,
+    funnel_candidates,
+    funnel_scores,
     make_strategy,
 )
 from repro.core.similarity import (
+    candidate_kernel,
     dpp_kernel,
     kernel_from_profiles,
     pairwise_dists,

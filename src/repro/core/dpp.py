@@ -22,6 +22,13 @@ inside the scanned round:
 * :func:`greedy_map_kdpp` — deterministic greedy MAP inference (Chen et al.,
   NeurIPS'18 fast greedy MAP), a beyond-paper variant that is O(C·k) per step,
   device-friendly and reproducible — useful at serving scale.
+
+Everything here is **size-agnostic in the leading dimension**: under the
+two-stage selection funnel (DESIGN.md §10) the same spectral cache + draw
+run on the Q×Q candidate block instead of the full C×C kernel — the eigh
+drops from O(C³) to O(Q³) and the per-round draw to O(k²·Q), with local
+candidate indices mapped back to global ids by the caller
+(``SelectionStrategy.select_global_fn``).
 """
 
 from __future__ import annotations

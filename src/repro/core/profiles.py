@@ -24,6 +24,7 @@ from typing import Callable, Iterable, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "fc1_profile",
@@ -40,9 +41,20 @@ def fc1_profile(feature_fn: FeatureFn, params, xs: jax.Array, batch_size: int = 
 
     ``feature_fn(params, x_batch) -> (logits, feats)`` with feats (B, Q).
     Streams in fixed-size batches so the profile pass is O(batch) memory.
+
+    A client with an **empty** local dataset (n = 0) gets the zero profile of
+    width Q — probed with an empty forward batch so the width matches every
+    populated client's row and ``profile_all_clients`` can still stack.
+    (The mean of zero samples is undefined; zero is the neutral element of
+    the eq.-(14) similarity pipeline and keeps the kernel finite.)
     """
     n = xs.shape[0]
-    q = None
+    if n == 0:
+        _, feats = feature_fn(params, xs[:0])
+        # width from the static shape: reshape(0, -1) is ambiguous on a
+        # zero-row array, so flatten the trailing dims by hand
+        width = int(np.prod(feats.shape[1:]))
+        return jnp.zeros((width,), feats.dtype)
     total = None
     for start in range(0, n, batch_size):
         xb = xs[start : start + batch_size]
@@ -50,7 +62,6 @@ def fc1_profile(feature_fn: FeatureFn, params, xs: jax.Array, batch_size: int = 
         feats = feats.reshape(feats.shape[0], -1)
         s = jnp.sum(feats, axis=0)
         total = s if total is None else total + s
-        q = feats.shape[-1]
     return total / n
 
 

@@ -41,8 +41,12 @@ from repro.core import dpp as dpp_mod
 
 __all__ = [
     "RoundState",
+    "CandidateSet",
     "SelectionState",
     "availability_logits",
+    "candidate_availability",
+    "funnel_scores",
+    "funnel_candidates",
     "selection_state",
     "SelectionStrategy",
     "UniformSelection",
@@ -70,6 +74,57 @@ class RoundState:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class CandidateSet:
+    """Stage-1 output of the two-stage selection funnel (DESIGN.md §10):
+    the global ids of the Q clients that survived the cheap prefilter.
+
+    ``ids`` is **sorted ascending**, which makes the degenerate Q=C funnel
+    the identity permutation (``arange(C)``) — the bit-identical-parity
+    contract every funnel test leans on.  A :class:`SelectionState` whose
+    ``candidates`` is a :class:`CandidateSet` is *candidate-space*: kernel
+    (Q, Q), losses/sizes/labels (Q,), spectral cache over the Q×Q block."""
+
+    ids: jax.Array  # (Q,) int32 global client ids, sorted ascending
+
+    @property
+    def size(self) -> int:
+        return self.ids.shape[0]
+
+
+def funnel_scores(
+    losses: jax.Array,
+    avail: Optional[jax.Array] = None,
+    latency: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Stage-1 prefilter score (DESIGN.md §10), cheap and O(C):
+
+        score_i = max(loss_i, eps) / (1 + max(latency_i, 0)) * avail_i
+
+    High running loss promotes a client (FedSAE's signal, eq.-SAE in §4 of
+    the paper's baselines); predicted latency demotes stragglers; an
+    unavailable client scores exactly 0, so with ≥ Q available clients no
+    unavailable one enters the candidate set, and ties at 0 break
+    deterministically by client id (``top_k`` index order).  Pure/jittable,
+    never touches profiles — the privacy point of the funnel: only the Q
+    survivors are ever asked to upload an eq.-(11) profile."""
+    score = jnp.maximum(losses.astype(jnp.float32), 1e-8)
+    if latency is not None:
+        score = score / (1.0 + jnp.maximum(latency.astype(jnp.float32), 0.0))
+    if avail is not None:
+        score = score * avail.astype(jnp.float32)
+    return score
+
+
+def funnel_candidates(scores: jax.Array, q: int) -> jax.Array:
+    """Top-``q`` prefilter survivors as **ascending** global ids (see
+    :class:`CandidateSet` for why ordering matters).  One fused ``top_k``
+    over the full federation — the only O(C) step of a funneled round."""
+    _, idx = jax.lax.top_k(scores, q)
+    return jnp.sort(idx).astype(jnp.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class SelectionState:
     """Pure-array view of :class:`RoundState` — a pytree every ``select_fn``
     can consume under ``jit``/``vmap``/``scan``.  All fields are concrete
@@ -85,9 +140,13 @@ class SelectionState:
     client_sizes: jax.Array  # (C,) n_c
     cluster_labels: jax.Array  # (C,) int32 — host-fitted, 0 when unused
     eig_state: dpp_mod.KDPPSamplerState  # spectral cache of ``kernel``
+    # Two-stage funnel (DESIGN.md §10): when set, every array field above is
+    # candidate-space (Q-sized) and ``candidates.ids`` maps local -> global.
+    candidates: Optional[CandidateSet] = None
 
     @property
     def num_clients(self) -> int:
+        """Population the ``select_fn``s draw over — Q under the funnel."""
         return self.losses.shape[0]
 
 
@@ -100,6 +159,7 @@ def selection_state(
     cluster_labels: Optional[jax.Array] = None,
     eig_state: Optional[dpp_mod.KDPPSamplerState] = None,
     decompose_kernel: bool = False,
+    candidates: Optional[CandidateSet] = None,
 ) -> SelectionState:
     """Build a :class:`SelectionState`, filling neutral defaults for the
     signals a given strategy does not use.
@@ -125,6 +185,7 @@ def selection_state(
             jnp.zeros((c,), jnp.int32) if cluster_labels is None else cluster_labels
         ),
         eig_state=eig_state,
+        candidates=candidates,
     )
 
 
@@ -138,6 +199,20 @@ def availability_logits(
     masked = jnp.where(avail, logits, -jnp.inf)
     enough = jnp.sum(avail) >= k
     return jnp.where(enough, masked, logits)
+
+
+def candidate_availability(
+    avail: jax.Array, candidates: CandidateSet
+) -> jax.Array:
+    """Gather a global (C,) availability mask into candidate space — THE
+    shared guard in front of every ``select_avail_fn`` (DESIGN.md §10).
+
+    Under the funnel the strategies only ever see this (Q,) view, so the
+    <k-available fallback of :func:`availability_logits` — "drop the mask,
+    use the unmasked logits" — can only fall back to *candidates*: logits
+    are candidate-space, and the gather-back maps the draw through
+    ``candidates.ids``.  Selecting a non-candidate is unrepresentable."""
+    return jnp.take(avail, candidates.ids)
 
 
 class SelectionStrategy:
@@ -166,6 +241,35 @@ class SelectionStrategy:
         available clients the unmasked draw is used.
         """
         return self.select_fn(key, state, k)
+
+    def select_global_fn(
+        self,
+        key: jax.Array,
+        state: SelectionState,
+        k: int,
+        avail: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Selection in **global** client ids, funnel-aware (DESIGN.md §10).
+
+        Without a funnel (``state.candidates is None``) this is exactly
+        ``select_fn`` / ``select_avail_fn``.  With one, ``state`` is
+        candidate-space: the draw happens over the Q candidates (``avail``,
+        a *global* (C,) mask, is first gathered through
+        :func:`candidate_availability` — the shared guard) and the local
+        picks are mapped back through ``candidates.ids``.  Pure/jittable;
+        this is the one entry point the engine's round dispatch calls."""
+        cand = state.candidates
+        if cand is None:
+            if avail is None:
+                return self.select_fn(key, state, k)
+            return self.select_avail_fn(key, state, k, avail)
+        if avail is None:
+            local = self.select_fn(key, state, k)
+        else:
+            local = self.select_avail_fn(
+                key, state, k, candidate_availability(avail, cand)
+            )
+        return jnp.take(cand.ids, local).astype(jnp.int32)
 
     def prepare(self, state: RoundState, k: int) -> SelectionState:
         """RoundState -> SelectionState (host-side; runs ``fit`` if any)."""

@@ -29,6 +29,7 @@ __all__ = [
     "similarity_matrix",
     "dpp_kernel",
     "kernel_from_profiles",
+    "candidate_kernel",
 ]
 
 
@@ -83,3 +84,25 @@ def kernel_from_profiles(f: jax.Array, use_kernel: bool = False) -> jax.Array:
 
         return _gram_ops.kernel_from_profiles(f)
     return dpp_kernel(similarity_matrix(f, use_kernel=use_kernel))
+
+
+def candidate_kernel(
+    f: jax.Array, candidates: jax.Array, use_kernel: bool = False
+) -> jax.Array:
+    """Q×Q eq.-(14) kernel over a funnel candidate block (DESIGN.md §10).
+
+    Semantics: ``kernel_from_profiles(f[candidates])`` — the min-max
+    normalisation runs over the *candidate* distance block, NOT the full
+    federation, so this is deliberately **not** a submatrix of the C×C
+    kernel.  (With ``candidates == arange(C)`` the two coincide — the Q=C
+    parity contract.)  The gather plus the Q-sized pipeline never touch a
+    C×C intermediate; ``use_kernel=True`` routes the ragged-Q block through
+    the fused Pallas pipeline, whose pad-to-tile masking already handles
+    non-tile-multiple Q.
+    """
+    fq = jnp.take(f, jnp.asarray(candidates, jnp.int32), axis=0)
+    if use_kernel:
+        from repro.kernels.gram import ops as _gram_ops
+
+        return _gram_ops.candidate_kernel_from_profiles(fq)
+    return kernel_from_profiles(fq, use_kernel=False)

@@ -85,6 +85,8 @@ __all__ = [
     "init_server_state",
     "shard_server_state",
     "history_from_outputs",
+    "funnel_fields",
+    "candidate_profile_block",
 ]
 
 PyTree = Any
@@ -133,6 +135,21 @@ class FLConfig:
     # straggler/staleness dynamics when staleness_bound is set) and, for
     # scenarios with an availability model, availability-masked selection.
     scenario: Optional[str] = None
+    # Two-stage selection funnel (DESIGN.md §10): fraction of the federation
+    # surviving the cheap stage-1 prefilter (loss / predicted-latency /
+    # availability score, one fused top-Q).  None = no funnel; with a float
+    # in (0, 1], Q = candidate_count() candidates carry the (Q, Q) eq.-(14)
+    # kernel + spectral cache — the O(C³) eigh and the C×C Gram disappear
+    # (the million-client regime).  Candidates are fixed per reprofile
+    # segment, so the spectral cache stays valid between boundaries.
+    candidate_frac: Optional[float] = None
+
+    def candidate_count(self) -> int:
+        """Q — stage-1 survivors; ``round(C·frac)`` clamped to
+        ``[clients_per_round, num_clients]`` (a cohort must always fit)."""
+        assert self.candidate_frac is not None
+        q = int(round(self.num_clients * self.candidate_frac))
+        return max(self.clients_per_round, min(q, self.num_clients))
 
     def __post_init__(self):
         # flag-combination contract: every invalid combo dies HERE with one
@@ -166,6 +183,12 @@ class FLConfig:
                 )
         if self.scenario is not None:
             scenarios_lib.get_scenario(self.scenario)  # unknown name raises
+        if self.candidate_frac is not None:
+            if not (0.0 < self.candidate_frac <= 1.0):
+                raise ValueError(
+                    f"candidate_frac={self.candidate_frac} must be in (0, 1] "
+                    "(1.0 = degenerate funnel, bit-identical to no funnel)"
+                )
 
 
 @jax.tree_util.register_dataclass
@@ -182,10 +205,10 @@ class ServerState:
     key: jax.Array  # server PRNG key
     round: jax.Array  # int32 scalar, rounds completed
     losses: jax.Array  # (C,) last-known local losses
-    kernel: jax.Array  # (C, C) eq.-(14) DPP kernel
-    profiles: jax.Array  # (C, Q) eq.-(11) client profiles
+    kernel: jax.Array  # eq.-(14) DPP kernel: (C, C), or (Q, Q) under funnel
+    profiles: jax.Array  # (C, Q_f) eq.-(11) client profiles
     eig_state: dpp_lib.KDPPSamplerState  # spectral cache of ``kernel``
-    cluster_labels: jax.Array  # (C,) int32, host-prefitted (0 if unused)
+    cluster_labels: jax.Array  # (C,)/(Q,) int32, host-prefitted (0 if unused)
     client_xs: jax.Array  # (C, n_c, ...) simulated client shards
     client_ys: jax.Array  # (C, n_c)
     client_sizes: jax.Array  # (C,) n_c
@@ -196,18 +219,38 @@ class ServerState:
     # configs, so the pytree stays unchanged for every existing path:
     param_hist: Optional[PyTree] = None  # (s+1, ...) ring of param snapshots
     shard_staleness: Optional[jax.Array] = None  # (D,) int32 per-shard lag
+    # Two-stage funnel (DESIGN.md §10) — None on unfunneled configs.  When
+    # set: (Q,) int32 ascending global ids of the stage-1 survivors, and the
+    # kernel / eig_state / cluster_labels above live on the Q-block.  Fixed
+    # per reprofile segment (rebuilt with the profiles), replicated.
+    candidates: Optional[jax.Array] = None
 
     @property
     def num_clients(self) -> int:
         return self.losses.shape[0]
 
     def selection_state(self) -> selection_lib.SelectionState:
+        """The per-round :class:`~repro.core.selection.SelectionState` view.
+
+        Under the funnel this is **candidate-space**: the O(Q) gathers of the
+        per-client signals are the only per-round funnel cost, and the
+        strategies then draw over Q with ``select_global_fn`` mapping the
+        picks back to global ids."""
+        if self.candidates is None:
+            return selection_lib.SelectionState(
+                kernel=self.kernel,
+                losses=self.losses,
+                client_sizes=self.client_sizes,
+                cluster_labels=self.cluster_labels,
+                eig_state=self.eig_state,
+            )
         return selection_lib.SelectionState(
             kernel=self.kernel,
-            losses=self.losses,
-            client_sizes=self.client_sizes,
+            losses=jnp.take(self.losses, self.candidates),
+            client_sizes=jnp.take(self.client_sizes, self.candidates),
             cluster_labels=self.cluster_labels,
             eig_state=self.eig_state,
+            candidates=selection_lib.CandidateSet(ids=self.candidates),
         )
 
 
@@ -389,10 +432,17 @@ def make_round_fn(
     avail_aware = scen is not None and scen.availability is not None
     batched_loss = lambda p, batch: loss_fn(p, batch[0], batch[1])
     loss_of = jax.vmap(loss_fn, in_axes=(None, 0, 0))
+    # selection dispatches through select_global_fn — the funnel-aware entry
+    # point (DESIGN.md §10): without candidates it is exactly select_fn /
+    # select_avail_fn; with them the draw runs in candidate space (the avail
+    # mask gathered through the shared candidate_availability guard) and the
+    # picks come back as global ids, so everything downstream of ``sel`` —
+    # batches, aggregation, loss refresh, GEMD, slots, staleness — is
+    # untouched by funnelling.
     if avail_aware:
         branches = tuple(
             functools.partial(
-                lambda strat, key, sstate, avail: strat.select_avail_fn(
+                lambda strat, key, sstate, avail: strat.select_global_fn(
                     key, sstate, k, avail
                 ),
                 strat,
@@ -402,7 +452,8 @@ def make_round_fn(
     else:
         branches = tuple(
             functools.partial(
-                lambda strat, key, sstate: strat.select_fn(key, sstate, k), strat
+                lambda strat, key, sstate: strat.select_global_fn(key, sstate, k),
+                strat,
             )
             for strat in strategies
         )
@@ -921,6 +972,114 @@ def shard_server_state(
     return ServerState(**updates)
 
 
+# ------------------------------------------------------------------- funnel
+
+# fold_in salt branching the funnel's stage-1 environment stream (predicted
+# latency / availability at the segment boundary) off the caller's key
+# WITHOUT consuming a split — the per-round selection/batch key streams stay
+# bit-identical funnel-or-not, which the Q=C parity tests assert.
+_FUNNEL_SALT = 0xF0A11E17
+
+
+def candidate_profile_block(
+    profiles: jax.Array,
+    candidates: jax.Array,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    client_axis: str = CLIENT_AXIS,
+) -> jax.Array:
+    """Gather the Q candidate profile rows (Q, F) — shard-locally on a mesh.
+
+    Without a mesh this is one ``take``.  With one, ``profiles`` is laid out
+    over the client axis (:data:`CLIENT_SHARDED_FIELDS`), so each shard
+    contributes exactly the candidate rows it owns — non-resident candidate
+    slots are zero-filled — and ONE ``psum`` assembles the replicated (Q, F)
+    block.  That psum is the funnel's only collective: ``Q·F`` floats cross
+    the interconnect, never anything C-sized, and adding the other shards'
+    exact zeros leaves the owned rows bit-identical to an unsharded gather
+    (the mesh Q=C parity contract).
+    """
+    cand = jnp.asarray(candidates, jnp.int32)
+    profiles = jnp.asarray(profiles)
+    if mesh is None:
+        return jnp.take(profiles, cand, axis=0)
+
+    def gather(local_f, ids):
+        c_loc = local_f.shape[0]
+        pos = ids - lax.axis_index(client_axis) * c_loc
+        owned = (pos >= 0) & (pos < c_loc)
+        rows = jnp.take(local_f, jnp.clip(pos, 0, c_loc - 1), axis=0)
+        rows = jnp.where(owned[:, None], rows, jnp.zeros((), local_f.dtype))
+        return lax.psum(rows, client_axis)
+
+    body = _checked_shard_map(
+        gather, mesh=mesh, in_specs=(P(client_axis), P()), out_specs=P()
+    )
+    return body(profiles, cand)
+
+
+def funnel_fields(
+    cfg: FLConfig,
+    key: jax.Array,
+    profiles: jax.Array,
+    losses: jax.Array,
+    strategy: Optional[selection_lib.SelectionStrategy] = None,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    client_axis: str = CLIENT_AXIS,
+    round_index: int = 0,
+) -> Tuple[jax.Array, jax.Array, dpp_lib.KDPPSamplerState]:
+    """Stage 1 of the two-stage funnel (DESIGN.md §10): the segment-boundary
+    state pieces ``(candidates, kernel, eig_state)``.
+
+    * **prefilter** — ``funnel_scores`` (running loss × scenario-predicted
+      latency × availability; the scenario draws branch off ``key`` via
+      ``_FUNNEL_SALT`` as a *prediction* of next-round conditions) and one
+      fused ``top_k`` pick Q ascending global ids;
+    * **candidate Gram** — the (Q, F) profile block assembled shard-locally
+      (:func:`candidate_profile_block`), then the eq.-(14) pipeline on the
+      Q-block only (Pallas-fused when ``cfg.use_pallas_kernel``) — min-max
+      normalisation runs over the candidate block, NOT a C×C submatrix;
+    * **spectral cache** — the O(Q³) eigh + ESP table (or the identity
+      placeholder for strategies that never draw from it), replacing the
+      O(C³) decomposition entirely.
+
+    Called by :func:`init_server_state` and at every reprofile boundary
+    (``FLTrainer.run``) — never per round, so the cache stays valid for the
+    whole segment.  Non-candidates never ship a profile row anywhere: the
+    privacy note of DESIGN.md §10.
+    """
+    assert cfg.candidate_frac is not None
+    q = cfg.candidate_count()
+    c = losses.shape[0]
+    lat = avail = None
+    scen = (
+        scenarios_lib.get_scenario(cfg.scenario) if cfg.scenario is not None
+        else None
+    )
+    if scen is not None:
+        k_env = jax.random.fold_in(key, _FUNNEL_SALT)
+        lat = scen.latency(jax.random.fold_in(k_env, 0), c)
+        if scen.availability is not None:
+            avail = scen.availability(
+                jax.random.fold_in(k_env, 1), round_index, c
+            )
+    scores = selection_lib.funnel_scores(losses, avail=avail, latency=lat)
+    candidates = selection_lib.funnel_candidates(scores, q)
+    fq = candidate_profile_block(
+        profiles, candidates, mesh=mesh, client_axis=client_axis
+    )
+    if cfg.use_pallas_kernel:
+        from repro.kernels.gram import ops as gram_ops
+
+        kernel = gram_ops.candidate_kernel_from_profiles(fq)
+    else:
+        kernel = similarity_lib.kernel_from_profiles(fq, use_kernel=False)
+    if strategy is None or getattr(strategy, "uses_spectral_cache", False):
+        eig_state = dpp_lib.kdpp_sampler_state(kernel, cfg.clients_per_round)
+    else:
+        eig_state = dpp_lib.identity_sampler_state(q, cfg.clients_per_round)
+    return candidates, kernel, eig_state
+
+
 def init_server_state(
     cfg: FLConfig,
     params: PyTree,
@@ -949,6 +1108,12 @@ def init_server_state(
     host ``fit`` so the per-round draw is pure.  Any precomputed piece can be
     passed in to skip recomputation.  ``mesh`` lays the result out with
     :func:`shard_server_state` for the sharded execution path.
+
+    With ``cfg.candidate_frac`` set (DESIGN.md §10) the kernel, spectral
+    cache, and cluster labels are built by :func:`funnel_fields` on the
+    Q-candidate block instead — this path never materialises a C×C array,
+    and passing a precomputed full-federation ``kernel``/``eig_state`` is a
+    :class:`ValueError`.
     """
     client_xs = jnp.asarray(client_xs)
     client_ys = jnp.asarray(client_ys)
@@ -957,6 +1122,27 @@ def init_server_state(
         assert feature_fn is not None, "need feature_fn to compute profiles"
         profiles = profiles_lib.profile_all_clients(
             jax.jit(feature_fn), params, list(client_xs)
+        )
+    if losses is None:
+        losses = jax.jit(jax.vmap(loss_fn, in_axes=(None, 0, 0)))(
+            params, client_xs, client_ys
+        )
+    candidates = None
+    if cfg.candidate_frac is not None:
+        # Funnel init (DESIGN.md §10): losses come FIRST (they are the
+        # stage-1 prefilter score), then every kernel-shaped piece lives on
+        # the Q-block — this path never materialises a C×C array.
+        if kernel is not None or eig_state is not None:
+            raise ValueError(
+                "candidate_frac is set: the kernel and spectral cache are "
+                "funnel-owned (Q×Q, rebuilt with the candidates) — don't "
+                "pass precomputed full-federation kernel/eig_state"
+            )
+        candidates, kernel, eig_state = funnel_fields(
+            cfg,
+            key if key is not None else jax.random.key(cfg.seed),
+            profiles, losses, strategy=strategy,
+            mesh=mesh, client_axis=client_axis,
         )
     if kernel is None:
         kernel = similarity_lib.kernel_from_profiles(
@@ -972,21 +1158,25 @@ def init_server_state(
             eig_state = dpp_lib.kdpp_sampler_state(kernel, cfg.clients_per_round)
         else:
             eig_state = dpp_lib.identity_sampler_state(c, cfg.clients_per_round)
-    if losses is None:
-        losses = jax.jit(jax.vmap(loss_fn, in_axes=(None, 0, 0)))(
-            params, client_xs, client_ys
-        )
     if cluster_labels is None:
         if isinstance(strategy, selection_lib.ClusterSelection):
+            # funnel mode fits the clusters on the SAME fingerprints as the
+            # unfunneled path, restricted to the candidate rows — with
+            # candidates == arange(C) (Q=C) the labels are bit-identical
+            idx = (
+                range(c) if candidates is None
+                else np.asarray(candidates).tolist()
+            )
             gp = jnp.stack([
                 profiles_lib.representative_gradient_profile(
                     loss_fn, params, client_xs[i], client_ys[i]
                 )
-                for i in range(c)
+                for i in idx
             ])
             cluster_labels = strategy.fit(gp, cfg.clients_per_round)
         else:
-            cluster_labels = jnp.zeros((c,), jnp.int32)
+            n_lbl = c if candidates is None else candidates.shape[0]
+            cluster_labels = jnp.zeros((n_lbl,), jnp.int32)
     label_dists = jnp.stack([
         metrics_lib.label_distribution(client_ys[i], cfg.num_classes)
         for i in range(c)
@@ -1016,6 +1206,7 @@ def init_server_state(
         strategy_index=jnp.asarray(strategy_index, jnp.int32),
         param_hist=param_hist,
         shard_staleness=shard_staleness,
+        candidates=candidates,
     )
     if mesh is not None:
         state = shard_server_state(state, mesh, client_axis)

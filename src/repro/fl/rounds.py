@@ -14,6 +14,14 @@ Two execution modes (DESIGN.md §2):
 
 Both are pure functions of (params, batch pytrees) so ``jax.jit`` +
 ``in_shardings`` decide the distribution; nothing here touches devices.
+
+Every round builder here consumes **global** client ids / resident masks —
+the two-stage selection funnel (DESIGN.md §10) lives entirely upstream in
+``SelectionStrategy.select_global_fn``, which hands back global ids whatever
+the candidate set was.  That is why slot-capped (``cohort_cap``) and
+bounded-staleness execution compose with ``candidate_frac`` with no code
+here changing: a funneled cohort is just a cohort by the time it reaches a
+round step.
 """
 
 from __future__ import annotations

@@ -91,6 +91,7 @@ def _cached_round_fn(cfg: FLConfig, loss_fn, accuracy_fn, strategy, mesh, client
         cfg.staleness_decay,
         cfg.staleness_alpha,
         cfg.scenario,
+        cfg.candidate_frac,
         mesh,
         client_axis,
     )
@@ -186,9 +187,15 @@ class FLTrainer:
             jax.jit(self.feature_fn), self.params, list(self.client_xs)
         )
         self.round_state.profiles = feats
-        self.round_state.kernel = similarity_lib.kernel_from_profiles(
-            feats, use_kernel=self.cfg.use_pallas_kernel
-        )
+        if self.cfg.candidate_frac is None:
+            self.round_state.kernel = similarity_lib.kernel_from_profiles(
+                feats, use_kernel=self.cfg.use_pallas_kernel
+            )
+        else:
+            # funnel (DESIGN.md §10): the kernel lives on the Q-candidate
+            # block and is rebuilt per segment by engine.funnel_fields — the
+            # trainer never materialises the C×C matrix
+            self.round_state.kernel = None
         # the spectral cache decomposes exactly this kernel — invalidate
         self._eig_state = None
         self._eig_kernel = None
@@ -216,7 +223,11 @@ class FLTrainer:
             is not selection_lib.SelectionStrategy.select_fn
         )
 
-    def _cluster_labels(self) -> jax.Array:
+    def _cluster_labels(self, candidates=None) -> jax.Array:
+        """Host-fitted cluster labels — restricted to the funnel candidate
+        rows when ``candidates`` is given, so the fit sees the same
+        fingerprints as the unfunneled path (with ``candidates == arange(C)``
+        the labels are bit-identical: the Q=C parity contract)."""
         cfg = self.cfg
         if isinstance(self.strategy, selection_lib.ClusterSelection):
             feats = (
@@ -224,8 +235,11 @@ class FLTrainer:
                 if self.round_state.grad_profiles is not None
                 else self.round_state.profiles
             )
+            if candidates is not None:
+                feats = jnp.take(feats, candidates, axis=0)
             return self.strategy.fit(feats, cfg.clients_per_round)
-        return jnp.zeros((cfg.num_clients,), jnp.int32)
+        n = cfg.num_clients if candidates is None else candidates.shape[0]
+        return jnp.zeros((n,), jnp.int32)
 
     def eig_state(self) -> dpp_lib.KDPPSamplerState:
         """Spectral cache of the current kernel (one eigh per kernel refresh).
@@ -259,7 +273,21 @@ class FLTrainer:
         scanned segments inside one run carry the evolving ring/counters
         through unchanged)."""
         cfg = self.cfg
-        cluster_labels = self._cluster_labels()
+        candidates = None
+        if cfg.candidate_frac is not None:
+            # funnel (DESIGN.md §10): stage-1 prefilter on the *current*
+            # losses, candidate kernel + spectral cache on the Q-block
+            candidates, kernel, eig_state = engine_lib.funnel_fields(
+                cfg, self.key, self.round_state.profiles, self.losses,
+                strategy=self.strategy, mesh=self.mesh,
+                client_axis=self.client_axis,
+                round_index=self.round_state.round,
+            )
+            cluster_labels = self._cluster_labels(candidates)
+        else:
+            kernel = self.round_state.kernel
+            eig_state = self.eig_state()
+            cluster_labels = self._cluster_labels()
         param_hist = shard_staleness = None
         if cfg.staleness_bound is not None:
             param_hist, shard_staleness = staleness_lib.init_staleness_fields(
@@ -270,9 +298,9 @@ class FLTrainer:
             key=self.key,
             round=jnp.asarray(self.round_state.round, jnp.int32),
             losses=self.losses,
-            kernel=self.round_state.kernel,
+            kernel=kernel,
             profiles=self.round_state.profiles,
-            eig_state=self.eig_state(),
+            eig_state=eig_state,
             cluster_labels=cluster_labels,
             client_xs=self.client_xs,
             client_ys=self.client_ys,
@@ -282,6 +310,7 @@ class FLTrainer:
             strategy_index=jnp.asarray(0, jnp.int32),
             param_hist=param_hist,
             shard_staleness=shard_staleness,
+            candidates=candidates,
         )
         if self.mesh is not None:
             state = engine_lib.shard_server_state(
@@ -335,6 +364,12 @@ class FLTrainer:
         cfg = self.cfg
         rounds = rounds or cfg.rounds
         if not self._supports_engine():
+            if cfg.candidate_frac is not None:
+                raise ValueError(
+                    "candidate_frac requires a strategy with a pure "
+                    "select_fn (the scanned engine path): the legacy host "
+                    "loop is unfunneled"
+                )
             return self.run_legacy(rounds=rounds, progress=progress)
 
         round_fn = self.round_fn()
@@ -351,13 +386,34 @@ class FLTrainer:
             if done < rounds and cfg.reprofile_every:
                 self._absorb(state)
                 self._init_profiles()  # host: re-profile + re-fit clusters
-                state = dataclasses.replace(
-                    state,
-                    kernel=self.round_state.kernel,
-                    profiles=self.round_state.profiles,
-                    eig_state=self.eig_state(),  # re-decompose refreshed kernel
-                    cluster_labels=self._cluster_labels(),
-                )
+                if cfg.candidate_frac is not None:
+                    # reprofile segments RE-FUNNEL (DESIGN.md §10): fresh
+                    # profiles + evolved losses -> new candidate set, new
+                    # Q×Q kernel, new spectral cache — the carried key gives
+                    # fresh environment predictions without touching the
+                    # per-round selection/batch streams
+                    cand, kern, eig = engine_lib.funnel_fields(
+                        cfg, self.key, self.round_state.profiles,
+                        self.losses, strategy=self.strategy,
+                        mesh=self.mesh, client_axis=self.client_axis,
+                        round_index=self.round_state.round,
+                    )
+                    state = dataclasses.replace(
+                        state,
+                        kernel=kern,
+                        profiles=self.round_state.profiles,
+                        eig_state=eig,
+                        cluster_labels=self._cluster_labels(cand),
+                        candidates=cand,
+                    )
+                else:
+                    state = dataclasses.replace(
+                        state,
+                        kernel=self.round_state.kernel,
+                        profiles=self.round_state.profiles,
+                        eig_state=self.eig_state(),  # re-decompose refreshed kernel
+                        cluster_labels=self._cluster_labels(),
+                    )
                 if self.mesh is not None:
                     # restore the mesh layout on the refreshed host arrays so
                     # every segment reuses one compiled scan program

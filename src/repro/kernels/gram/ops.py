@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from repro.kernels.gram.gram import gram_kernel, normalized_gram_kernel
 from repro.kernels.pairwise_l2.pairwise_l2 import pairwise_dists_stats_kernel
 
-__all__ = ["gram", "kernel_from_profiles"]
+__all__ = ["gram", "kernel_from_profiles", "candidate_kernel_from_profiles"]
 
 
 def _interpret() -> bool:
@@ -61,4 +61,33 @@ def kernel_from_profiles(
         s0, lo, rng, f.shape[0],
         block_m=block_gram, block_n=block_gram, block_k=block_gram,
         compute_dtype=compute_dtype, interpret=interpret,
+    )
+
+
+def candidate_kernel_from_profiles(
+    fq: jax.Array,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    block_gram: int = 128,
+) -> jax.Array:
+    """Funnel candidate block (Q, F) -> PSD DPP kernel (Q, Q) — DESIGN.md §10.
+
+    The ragged-Q path of the fused two-launch pipeline: the candidate count Q
+    is whatever ``FLConfig.candidate_frac`` yields and is rarely a tile
+    multiple, so both launches run with their pad-to-tile masking doing real
+    work — ``pairwise_dists_stats_kernel`` excludes the pad region from the
+    min/max stats (``(rows < c) & (cols < c)``) and ``normalized_gram_kernel``
+    zeroes pad rows (``rows < c``) before the contraction, exactly as for a
+    ragged C.  Tile sizes deliberately stay the :func:`kernel_from_profiles`
+    defaults: identical tiling means identical fp32 accumulation order, so
+    the Q=C funnel is **bit-identical** to the unfunneled pipeline (the
+    parity contract tests assert) — a worst case of one mostly-pad tile row
+    is cheaper than losing that guarantee.
+    """
+    if fq.ndim != 2:
+        raise ValueError(f"candidate profiles must be (Q, F), got {fq.shape}")
+    return kernel_from_profiles(
+        fq, block_m=block_m, block_n=block_n, block_k=block_k,
+        block_gram=block_gram,
     )

@@ -290,7 +290,8 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
                         clients_per_round: int = 32, rounds: int = 4,
                         cohort_cap: Optional[int] = None,
                         staleness_bound: Optional[int] = None,
-                        scenario: Optional[str] = None) -> Dict:
+                        scenario: Optional[str] = None,
+                        candidate_frac: Optional[float] = None) -> Dict:
     """Prove the mesh-sharded federation engine (DESIGN.md §8) lowers and
     compiles at scale: C clients sharded over an N-device client mesh, the
     scanned round's local-update core as a shard_map with psum'd FedAvg.
@@ -311,6 +312,12 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
     dynamic ring read, and the latency scenario's straggler bookkeeping all
     lower inside the same single-psum round — proving the stale temporal
     dimension fits the compiled-scan contract at production scale.
+
+    ``candidate_frac`` compiles the two-stage funnel variant (DESIGN.md
+    §10): the state carries the (Q,) candidate table and a Q×Q kernel +
+    spectral cache instead of C×C, selection draws in candidate space and
+    gathers back to global ids — proving the funneled round (and its
+    shard-local candidate-profile psum at init) lowers on the client mesh.
     """
     import numpy as np
 
@@ -323,6 +330,8 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
         case = "fl_sharded_engine_slotted"
     elif staleness_bound is not None:
         case = "fl_sharded_engine_stale"
+    elif candidate_frac is not None:
+        case = "fl_sharded_engine_funnel"
     rec: Dict = {
         "case": case,
         "mesh": f"{num_devices}x1({sh.CLIENT_AXIS})",
@@ -331,6 +340,7 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
         "cohort_cap": cohort_cap,
         "staleness_bound": staleness_bound,
         "scenario": scenario,
+        "candidate_frac": candidate_frac,
         "scan_rounds": rounds,
     }
     try:
@@ -353,12 +363,16 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
             local_epochs=2, lr=0.1, rounds=rounds, eval_every=rounds,
             num_classes=ncls, seed=0, cohort_cap=cohort_cap,
             staleness_bound=staleness_bound, scenario=scenario,
+            candidate_frac=candidate_frac,
         )
         strat = selection_lib.DPPSelection()
         state = engine_lib.init_server_state(
             cfg, params, loss_fn, None, xs, ys, strategy=strat,
             profiles=xs.mean(axis=1), mesh=mesh,
         )
+        if candidate_frac is not None:
+            rec["candidates"] = int(state.candidates.shape[0])
+            rec["kernel_shape"] = list(state.kernel.shape)
         round_fn = engine_lib.make_round_fn(cfg, loss_fn, (strat,), mesh=mesh)
         program = jax.jit(
             lambda s: jax.lax.scan(round_fn, s, None, length=rounds)
@@ -574,15 +588,19 @@ def main():
     ap.add_argument("--fl-staleness-bound", type=int, default=2,
                     help="staleness bound for the --fl-sharded bounded-"
                          "staleness compile case (DESIGN.md §9)")
+    ap.add_argument("--fl-candidate-frac", type=float, default=0.25,
+                    help="candidate fraction for the --fl-sharded two-stage "
+                         "funnel compile case (DESIGN.md §10)")
     ap.add_argument("--out", default=None, help="append JSONL records here")
     ap.add_argument("--dump-hlo", default=None)
     args = ap.parse_args()
 
     if args.fl_sharded:
         # resident-mode round, the capacity-slot variant on a k ≪ C_loc
-        # cohort (cap = min(C/N, k)), and the bounded-staleness variant
-        # (ring buffer + counters under heavy-tail latency, DESIGN.md §9)
-        # — all three must lower and compile
+        # cohort (cap = min(C/N, k)), the bounded-staleness variant (ring
+        # buffer + counters under heavy-tail latency, DESIGN.md §9), and the
+        # two-stage funnel variant (Q×Q candidate kernel, DESIGN.md §10)
+        # — all four must lower and compile
         recs = [
             run_fl_sharded_case(num_devices=args.fl_devices),
             run_fl_sharded_case(
@@ -595,18 +613,25 @@ def main():
                 staleness_bound=args.fl_staleness_bound,
                 scenario="heavy_tail",
             ),
+            run_fl_sharded_case(
+                num_devices=args.fl_devices,
+                candidate_frac=args.fl_candidate_frac,
+            ),
         ]
         any_fail = False
         for rec in recs:
             status = "OK " if rec["ok"] else "FAIL"
             cap = rec["cohort_cap"]
             stale = rec.get("staleness_bound")
+            frac = rec.get("candidate_frac")
             print(
                 f"[{status}] {rec['case']} {rec['mesh']:14s} "
                 f"C={rec['clients']} k={rec['clients_per_round']}"
                 + (f" cap={cap}" if cap is not None else "")
                 + (f" stale<=%d(%s)" % (stale, rec["scenario"])
                    if stale is not None else "")
+                + (f" Q={rec.get('candidates')}({frac})"
+                   if frac is not None else "")
                 + f" {rec['total_s']:7.1f}s"
                 + ("" if rec["ok"] else f"  {rec['error'][:120]}")
             )

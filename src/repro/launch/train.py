@@ -77,6 +77,12 @@ def run_fl(args):
     psum barrier to bounded-staleness aggregation: shards that miss the
     scenario deadline contribute partial sums computed on params up to S
     rounds old, weighted by ``--staleness-decay``/``--staleness-alpha``.
+
+    ``--candidate-frac F`` (DESIGN.md §10) turns on the two-stage selection
+    funnel: a cheap loss/latency/availability prefilter keeps Q = F·C
+    candidates, and the eq.-(14) kernel + k-DPP spectral cache live on the
+    Q×Q block — the O(C³) eigh and the C×C Gram never happen (the
+    million-client regime).  Composes with every flag above.
     """
     mesh = None
     shard_clients = getattr(args, "shard_clients", 0)
@@ -130,12 +136,17 @@ def run_fl(args):
         staleness_decay=getattr(args, "staleness_decay", "polynomial"),
         staleness_alpha=getattr(args, "staleness_alpha", 0.5),
         scenario=getattr(args, "scenario", None),
+        candidate_frac=getattr(args, "candidate_frac", None),
     )
     state = engine_lib.init_server_state(
         flcfg, params, loss_fn, None, clients, topics,
         strategy=strategy, profiles=profiles, losses=jnp.ones((c,)),
         mesh=mesh,
     )
+    if flcfg.candidate_frac is not None:
+        print(f"[fl:{args.selection}] funnel: C={c} -> "
+              f"Q={flcfg.candidate_count()} candidates "
+              f"(kernel {state.kernel.shape})")
     round_fn = engine_lib.make_round_fn(flcfg, loss_fn, (strategy,), mesh=mesh)
     state, outs = engine_lib.run_scanned(round_fn, state, args.rounds, mesh=mesh)
     sels = np.asarray(outs["selected"])
@@ -223,6 +234,11 @@ def main():
     ap.add_argument("--staleness-alpha", type=float, default=0.5,
                     help="decay rate for polynomial/exponential staleness "
                          "weighting")
+    ap.add_argument("--candidate-frac", type=float, default=None,
+                    help="two-stage selection funnel (DESIGN.md §10): keep "
+                         "Q = F*C prefilter candidates and run the DPP on "
+                         "the QxQ block only (F in (0, 1]; 1.0 is "
+                         "bit-identical to no funnel)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     (run_fl if args.mode == "fl" else run_pretrain)(args)

@@ -1,0 +1,431 @@
+"""Two-stage selection funnel (DESIGN.md §10).
+
+Contracts under test:
+
+* **Q=C parity** — with ``candidate_frac=1.0`` the funnel is the identity
+  permutation (``CandidateSet.ids == arange(C)``), so every observable —
+  selected cohorts, params, losses, loss/GEMD/acc curves — must be
+  **bit-identical** to the unfunneled path, for every registered strategy,
+  including availability-aware scenarios, ``--shard-clients`` meshes,
+  ``cohort_cap`` slots, and bounded staleness s>0.
+* **candidate guard** — a round with fewer than k available *candidates*
+  falls back deterministically (the shared ``availability_logits``
+  convention, gathered through ``candidate_availability``) and can never
+  select a non-candidate, even when plenty of non-candidates are available.
+* **no C×C** — a funneled ``ServerState`` never materialises a C×C array:
+  kernel, spectral cache and cluster labels all live on the Q-block.
+* **shard-local Gram assembly** — ``candidate_profile_block`` on a mesh is
+  bit-identical to the unsharded gather (zero-fill + one psum).
+* **empty-client profiles** — ``fc1_profile`` of an empty local dataset is
+  the zero profile of width Q (regression: used to TypeError on n=0).
+
+The multidevice cases run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI multidevice
+job); the 1-device-mesh cases exercise the same machinery in tier-1.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import profiles as profiles_lib
+from repro.core import selection as selection_lib
+from repro.core import similarity as similarity_lib
+from repro.fl import engine
+from repro.fl.trainer import FLTrainer
+from repro.kernels.gram import ops as gram_ops
+from repro.launch.mesh import make_client_mesh
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+FEAT, N_C, NCLS = 8, 6, 4
+
+STRATEGIES = {
+    "uniform": selection_lib.UniformSelection,
+    "dpp": selection_lib.DPPSelection,
+    "fedsae": selection_lib.FedSAESelection,
+    "power-of-choice": lambda: selection_lib.PowerOfChoiceSelection(d=5),
+    "cluster": selection_lib.ClusterSelection,
+}
+
+# run modes for the Q=C parity sweep; "mesh" requests a 1-device client mesh
+# (tier-1-safe; the multidevice job reruns the sweep on the full mesh)
+MODES = {
+    "plain": {},
+    "avail": {"scenario": "flaky"},  # availability-aware select path
+    "sharded": {"mesh": True},
+    "cohort-cap": {"mesh": True, "cohort_cap": 3},
+    "stale": {"mesh": True, "scenario": "heavy_tail", "staleness_bound": 1},
+}
+
+
+def linear_loss(params, x, y):
+    logp = jax.nn.log_softmax(x @ params["w"] + params["b"])
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+
+def linear_accuracy(params, x, y):
+    return jnp.mean(jnp.argmax(x @ params["w"] + params["b"], -1) == y)
+
+
+def linear_features(params, x):
+    h = x @ params["w"] + params["b"]
+    return h, h
+
+
+def _federation(c, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(c, N_C, FEAT)).astype(np.float32))
+    ys = jnp.asarray(rng.integers(0, NCLS, size=(c, N_C)), jnp.int32)
+    params = {
+        "w": jnp.asarray(0.01 * rng.normal(size=(FEAT, NCLS)).astype(np.float32)),
+        "b": jnp.zeros((NCLS,), jnp.float32),
+    }
+    return xs, ys, params
+
+
+def _run(strategy_factory, frac, c=8, k=3, rounds=4, mesh=None, **cfg_kw):
+    xs, ys, params = _federation(c)
+    cfg = engine.FLConfig(
+        num_clients=c, clients_per_round=k, local_epochs=1, lr=0.1,
+        rounds=rounds, eval_every=2, num_classes=NCLS, seed=0,
+        candidate_frac=frac, **cfg_kw,
+    )
+    strat = strategy_factory()
+    state = engine.init_server_state(
+        cfg, params, linear_loss, None, xs, ys,
+        strategy=strat, profiles=xs.mean(axis=1), mesh=mesh,
+    )
+    fn = engine.make_round_fn(
+        cfg, linear_loss, (strat,), accuracy_fn=linear_accuracy, mesh=mesh
+    )
+    return cfg, state, engine.run_scanned(fn, state, rounds, mesh=mesh)
+
+
+def _assert_bit_identical(ref, fun):
+    """Every observable identical to the last bit (NaN == NaN positionally)."""
+    st_r, out_r = ref
+    st_f, out_f = fun
+    np.testing.assert_array_equal(
+        np.asarray(out_r["selected"]), np.asarray(out_f["selected"]),
+        err_msg="Q=C funnel cohorts diverged from unfunneled",
+    )
+    for a, b in zip(
+        jax.tree_util.tree_leaves(st_r.params),
+        jax.tree_util.tree_leaves(st_f.params),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(st_r.losses), np.asarray(st_f.losses)
+    )
+    for key in ("loss", "gemd", "acc"):
+        np.testing.assert_array_equal(
+            np.asarray(out_r[key]), np.asarray(out_f[key]), err_msg=key
+        )
+
+
+# --------------------------------------------------- Q=C parity (tentpole)
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_q_equals_c_bit_identical(name, mode):
+    kw = dict(MODES[mode])
+    mesh = make_client_mesh(1) if kw.pop("mesh", False) else None
+    _, _, ref = _run(STRATEGIES[name], None, mesh=mesh, **kw)
+    _, state, fun = _run(STRATEGIES[name], 1.0, mesh=mesh, **kw)
+    np.testing.assert_array_equal(np.asarray(state.candidates), np.arange(8))
+    _assert_bit_identical(ref, fun)
+
+
+@multidevice
+@pytest.mark.parametrize("mode", ["sharded", "cohort-cap", "stale"])
+def test_q_equals_c_bit_identical_multidevice(mode):
+    kw = dict(MODES[mode])
+    kw.pop("mesh")
+    n = jax.device_count()
+    mesh = make_client_mesh(n)
+    _, _, ref = _run(selection_lib.DPPSelection, None, c=4 * n, mesh=mesh, **kw)
+    _, _, fun = _run(selection_lib.DPPSelection, 1.0, c=4 * n, mesh=mesh, **kw)
+    _assert_bit_identical(ref, fun)
+
+
+# ------------------------------------------------ funnelled runs with Q < C
+
+
+def test_funnel_selects_only_candidates_and_no_cxc():
+    """frac<1: cohorts live inside the candidate set; no state leaf is C×C."""
+    c, k = 64, 4
+    cfg, state, (st, outs) = _run(
+        selection_lib.DPPSelection, 0.25, c=c, k=k, rounds=5
+    )
+    q = cfg.candidate_count()
+    assert q == 16
+    assert state.kernel.shape == (q, q)
+    assert state.candidates.shape == (q,)
+    cand = np.asarray(state.candidates)
+    assert (np.diff(cand) > 0).all()  # ascending, unique global ids
+    for leaf in jax.tree_util.tree_leaves(state):
+        shape = getattr(leaf, "shape", ())
+        assert not (len(shape) >= 2 and shape[0] == c and shape[1] == c), (
+            f"funneled state materialised a C×C array: {shape}"
+        )
+    sel = np.asarray(outs["selected"])
+    assert sel.shape == (5, k)
+    assert np.isin(sel, cand).all(), "selected a non-candidate"
+
+
+def test_funnel_prefers_high_loss_candidates():
+    """The stage-1 score is loss-driven: with unit latency/availability the
+    candidate set is exactly the top-Q-by-loss clients."""
+    losses = jnp.asarray([0.1, 5.0, 0.2, 4.0, 3.0, 0.3, 2.0, 1.0])
+    scores = selection_lib.funnel_scores(losses)
+    cand = selection_lib.funnel_candidates(scores, 4)
+    np.testing.assert_array_equal(np.asarray(cand), [1, 3, 4, 6])
+
+
+def test_funnel_scores_signals():
+    losses = jnp.asarray([1.0, 1.0, 1.0, 1.0])
+    # availability zeroes a client out entirely
+    avail = jnp.asarray([True, False, True, True])
+    s = selection_lib.funnel_scores(losses, avail=avail)
+    assert float(s[1]) == 0.0 and float(s[0]) > 0.0
+    # latency demotes stragglers monotonically
+    lat = jnp.asarray([0.0, 1.0, 3.0, 9.0])
+    s = selection_lib.funnel_scores(losses, latency=lat)
+    assert (np.diff(np.asarray(s)) < 0).all()
+    # non-positive losses clamp to eps, never to a negative score
+    s = selection_lib.funnel_scores(jnp.asarray([-1.0, 0.0]))
+    assert (np.asarray(s) > 0).all()
+
+
+def test_funnel_candidates_identity_at_q_equals_c():
+    scores = selection_lib.funnel_scores(jnp.asarray([3.0, 1.0, 2.0, 5.0]))
+    cand = selection_lib.funnel_candidates(scores, 4)
+    np.testing.assert_array_equal(np.asarray(cand), np.arange(4))
+    assert cand.dtype == jnp.int32
+
+
+# ------------------------------------- availability guard (satellite #2)
+
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_avail_fallback_respects_candidate_set(name):
+    """<k available candidates ⇒ the deterministic unmasked-candidate draw —
+    never a non-candidate, even with every non-candidate available."""
+    c, q, k = 16, 6, 4
+    rng = np.random.default_rng(3)
+    profiles = jnp.asarray(rng.normal(size=(c, FEAT)).astype(np.float32))
+    losses = jnp.asarray(rng.uniform(0.5, 2.0, size=(c,)).astype(np.float32))
+    cand = selection_lib.funnel_candidates(selection_lib.funnel_scores(losses), q)
+    state = selection_lib.selection_state(
+        q, k,
+        kernel=similarity_lib.candidate_kernel(profiles, cand),
+        losses=jnp.take(losses, cand),
+        client_sizes=jnp.full((q,), float(N_C)),
+        decompose_kernel=True,
+        candidates=selection_lib.CandidateSet(ids=cand),
+    )
+    # only 2 (< k) candidates available; every NON-candidate is available
+    avail = jnp.ones((c,), bool).at[cand].set(False).at[cand[:2]].set(True)
+    assert int(jnp.sum(selection_lib.candidate_availability(avail, state.candidates))) == 2
+    strat = STRATEGIES[name]()
+    key = jax.random.key(7)
+    sel_few = strat.select_global_fn(key, state, k, avail=avail)
+    assert np.isin(np.asarray(sel_few), np.asarray(cand)).all(), (
+        f"{name}: fallback escaped the candidate set"
+    )
+    # the fallback is exactly the draw with an all-available mask (the
+    # availability_logits convention, posed in candidate space)
+    sel_all = strat.select_global_fn(key, state, k, avail=jnp.ones((c,), bool))
+    np.testing.assert_array_equal(np.asarray(sel_few), np.asarray(sel_all))
+
+
+def test_candidate_availability_gather():
+    avail = jnp.asarray([True, False, True, False, True])
+    cand = selection_lib.CandidateSet(ids=jnp.asarray([1, 2, 4], jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(selection_lib.candidate_availability(avail, cand)),
+        [False, True, True],
+    )
+
+
+# ----------------------------------------- empty-client profile (satellite #1)
+
+
+def test_fc1_profile_empty_dataset():
+    """Regression: n=0 used to TypeError (``total`` never assigned); the
+    contract is the zero profile of width Q so stacking still works."""
+    params = {
+        "w": jnp.ones((FEAT, 5), jnp.float32),
+        "b": jnp.zeros((5,), jnp.float32),
+    }
+
+    def feat(p, x):
+        h = x @ p["w"] + p["b"]
+        return h, h
+
+    p = profiles_lib.fc1_profile(feat, params, jnp.zeros((0, FEAT)))
+    assert p.shape == (5,)
+    assert (np.asarray(p) == 0.0).all()
+    stacked = profiles_lib.profile_all_clients(
+        feat, params, [jnp.zeros((0, FEAT)), jnp.ones((3, FEAT))]
+    )
+    assert stacked.shape == (2, 5)
+    assert np.isfinite(np.asarray(stacked)).all()
+
+
+# ------------------------------------------------ candidate Gram (kernels)
+
+
+def test_candidate_kernel_matches_gathered_pipeline():
+    """candidate_kernel == eq.-(14) pipeline on the gathered rows — exactly,
+    for both the jnp path and the fused Pallas path (ragged Q=11)."""
+    rng = np.random.default_rng(0)
+    f = jnp.asarray(rng.normal(size=(37, 16)).astype(np.float32))
+    cand = selection_lib.funnel_candidates(
+        selection_lib.funnel_scores(jnp.asarray(rng.uniform(size=(37,)))), 11
+    )
+    fq = jnp.take(f, cand, axis=0)
+    got = similarity_lib.candidate_kernel(f, cand)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(similarity_lib.kernel_from_profiles(fq))
+    )
+    got_pallas = similarity_lib.candidate_kernel(f, cand, use_kernel=True)
+    # same Pallas pipeline, same tile geometry ⇒ bit-identical to the direct
+    # fused call on the gathered rows …
+    np.testing.assert_array_equal(
+        np.asarray(got_pallas), np.asarray(gram_ops.kernel_from_profiles(fq))
+    )
+    # … and numerically tight against the jnp oracle
+    np.testing.assert_allclose(
+        np.asarray(got_pallas), np.asarray(got), atol=2e-5
+    )
+
+
+def test_candidate_kernel_is_not_a_cxc_submatrix():
+    """min-max normalisation runs over the candidate block — slicing the full
+    C×C kernel would use the WRONG normalisation constants."""
+    rng = np.random.default_rng(1)
+    f = jnp.asarray(rng.normal(size=(12, 6)).astype(np.float32))
+    cand = jnp.asarray([0, 3, 5, 9], jnp.int32)
+    block = np.asarray(similarity_lib.candidate_kernel(f, cand))
+    full = np.asarray(similarity_lib.kernel_from_profiles(f))
+    sub = full[np.ix_(np.asarray(cand), np.asarray(cand))]
+    assert not np.allclose(block, sub, atol=1e-6)
+
+
+def test_candidate_profile_block_mesh_matches_gather():
+    """Zero-fill + one psum on a mesh == the plain unsharded take, bitwise."""
+    rng = np.random.default_rng(2)
+    profiles = jnp.asarray(rng.normal(size=(16, FEAT)).astype(np.float32))
+    cand = jnp.asarray([1, 4, 7, 9, 12, 15], jnp.int32)
+    ref = engine.candidate_profile_block(profiles, cand)
+    got = engine.candidate_profile_block(
+        profiles, cand, mesh=make_client_mesh(1)
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@multidevice
+def test_candidate_profile_block_multidevice():
+    n = jax.device_count()
+    rng = np.random.default_rng(2)
+    profiles = jnp.asarray(rng.normal(size=(4 * n, FEAT)).astype(np.float32))
+    cand = selection_lib.funnel_candidates(
+        selection_lib.funnel_scores(
+            jnp.asarray(rng.uniform(size=(4 * n,)).astype(np.float32))
+        ),
+        2 * n,
+    )
+    ref = engine.candidate_profile_block(profiles, cand)
+    got = engine.candidate_profile_block(
+        profiles, cand, mesh=make_client_mesh(n)
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# --------------------------------------------------------- config contracts
+
+
+def test_candidate_frac_validation():
+    def cfg(frac, k=2):
+        return engine.FLConfig(
+            num_clients=8, clients_per_round=k, local_epochs=1, lr=0.1,
+            rounds=1, eval_every=1, num_classes=NCLS, seed=0,
+            candidate_frac=frac,
+        )
+
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="candidate_frac"):
+            cfg(bad)
+    # Q clamps to [k, C]: a cohort must always fit in the candidate set
+    assert cfg(0.01, k=4).candidate_count() == 4
+    assert cfg(1.0).candidate_count() == 8
+    assert cfg(0.5).candidate_count() == 4
+
+
+def test_init_rejects_precomputed_kernel_under_funnel():
+    xs, ys, params = _federation(8)
+    cfg = engine.FLConfig(
+        num_clients=8, clients_per_round=2, local_epochs=1, lr=0.1,
+        rounds=1, eval_every=1, num_classes=NCLS, seed=0, candidate_frac=0.5,
+    )
+    with pytest.raises(ValueError, match="funnel-owned"):
+        engine.init_server_state(
+            cfg, params, linear_loss, None, xs, ys,
+            strategy=selection_lib.DPPSelection(),
+            profiles=xs.mean(axis=1), kernel=jnp.eye(8),
+        )
+
+
+# ------------------------------------------------------------- FLTrainer
+
+
+def _trainer(cfg, seed=0):
+    xs, ys, params = _federation(cfg.num_clients, seed=seed)
+    return FLTrainer(
+        cfg, params, linear_loss, linear_features, np.asarray(xs),
+        np.asarray(ys), selection_lib.DPPSelection(),
+        accuracy_fn=linear_accuracy,
+    )
+
+
+def test_trainer_q_equals_c_parity_across_reprofile():
+    """FLTrainer with frac=1.0 crosses a reprofile boundary (re-funnel) with
+    bit-identical history to the unfunneled trainer."""
+    cfg = engine.FLConfig(
+        num_clients=8, clients_per_round=3, local_epochs=1, lr=0.1,
+        rounds=5, eval_every=2, num_classes=NCLS, seed=0,
+        reprofile_every=3,  # boundary (and re-funnel) inside the run
+    )
+    h_ref = _trainer(cfg).run()
+    h_fun = _trainer(dataclasses.replace(cfg, candidate_frac=1.0)).run()
+    assert h_ref["round"] == h_fun["round"]
+    for key in ("loss", "gemd", "acc"):
+        np.testing.assert_array_equal(
+            np.asarray(h_ref[key]), np.asarray(h_fun[key]), err_msg=key
+        )
+
+
+def test_trainer_refunnels_each_segment():
+    """frac<1: each reprofile segment re-runs stage 1 on the evolved losses;
+    the run stays finite and the final state is still candidate-space."""
+    cfg = engine.FLConfig(
+        num_clients=16, clients_per_round=3, local_epochs=1, lr=0.1,
+        rounds=6, eval_every=3, num_classes=NCLS, seed=0,
+        reprofile_every=3, candidate_frac=0.5,
+    )
+    tr = _trainer(cfg)
+    h = tr.run()
+    # history records the eval grid (t % eval_every == 0 plus the final
+    # round), not every round
+    assert len(h["loss"]) == len(h["round"]) >= 2
+    assert h["round"][-1] == cfg.rounds
+    assert np.isfinite(np.asarray(h["loss"])).all()
