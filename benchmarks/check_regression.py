@@ -91,6 +91,19 @@ def _funnel_metrics(payload: Dict):
     return out, payload.get("host_cores")
 
 
+def _fault_metrics(payload: Dict):
+    # fault-tolerance layer (DESIGN.md §11): scanned throughput of the clean
+    # arm (must stay the PR-5/6 engine cost — faults=None compiles the same
+    # program) and of the guarded trimmed_mean arm (the guard's norm screen +
+    # masked psum must not silently blow up the round)
+    out = {}
+    for name in ("clean", "trimmed_faulty"):
+        row = payload.get("arms", {}).get(name)
+        if row is not None:
+            out[f"fault_rounds_per_sec.{name}"] = float(row["rounds_per_sec"])
+    return out, payload.get("host_cores")
+
+
 def _cohort_metrics(payload: Dict):
     # steady-state run_many scan throughput of the slotted cohort sweep
     out = {}
@@ -108,6 +121,7 @@ MANIFEST: Dict[str, Callable] = {
     "BENCH_async_smoke.json": _async_metrics,
     "BENCH_cohort_smoke.json": _cohort_metrics,
     "BENCH_funnel_smoke.json": _funnel_metrics,
+    "BENCH_fault_smoke.json": _fault_metrics,
 }
 
 

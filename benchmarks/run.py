@@ -26,6 +26,7 @@ def main() -> None:
         dpp_bench,
         dpp_scaling,
         engine_bench,
+        fault_bench,
         fig1_convergence,
         fig2_gemd,
         fig3_profiling,
@@ -61,6 +62,7 @@ def main() -> None:
     gated("shard_bench", lambda: shard_bench.main(perf_args))
     gated("async_bench", lambda: async_bench.main(perf_args))
     gated("funnel_bench", lambda: funnel_bench.main(perf_args))
+    gated("fault_bench", lambda: fault_bench.main(perf_args))
     cohort_sweep.main(perf_args)
     fig45_init_invariance.main()
     fig1_convergence.main()

@@ -38,22 +38,59 @@ def save(ckpt_dir: str, step: int, tree: Any) -> str:
 
 
 def restore(ckpt_dir: str, template: Any, step: Optional[int] = None) -> Any:
+    """Load a snapshot and unflatten it against ``template``'s treedef.
+
+    The snapshot must MATCH the template: leaf count, per-leaf shape, and
+    per-leaf dtype are all validated (against both ``tree.json`` and the
+    loaded arrays) and any mismatch raises a descriptive ``ValueError`` —
+    a checkpoint from a different config must never silently
+    reshape/cast-unflatten into garbage state.
+    """
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "tree.json")) as f:
+        meta = json.load(f)
     with np.load(os.path.join(path, "arrays.npz")) as z:
         leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    if meta.get("num_leaves") != len(leaves):
+        raise ValueError(
+            f"corrupt checkpoint at {path}: tree.json records "
+            f"{meta.get('num_leaves')} leaves but arrays.npz holds "
+            f"{len(leaves)}"
+        )
     t_leaves, treedef = jax.tree_util.tree_flatten(template)
     if len(t_leaves) != len(leaves):
         raise ValueError(
-            f"checkpoint has {len(leaves)} leaves, template has {len(t_leaves)}"
+            f"checkpoint at {path} has {len(leaves)} leaves, template has "
+            f"{len(t_leaves)} — snapshot and restore config disagree"
         )
-    leaves = [
-        np.asarray(x).astype(np.asarray(t).dtype).reshape(np.shape(t))
-        for x, t in zip(leaves, t_leaves)
-    ]
+    meta_shapes = [tuple(s) for s in meta.get("shapes", [])]
+    meta_dtypes = list(meta.get("dtypes", []))
+    for i, (x, t) in enumerate(zip(leaves, t_leaves)):
+        if meta_shapes and (
+            tuple(x.shape) != meta_shapes[i] or str(x.dtype) != meta_dtypes[i]
+        ):
+            raise ValueError(
+                f"corrupt checkpoint at {path}: leaf {i} is "
+                f"{x.dtype}{tuple(x.shape)} but tree.json recorded "
+                f"{meta_dtypes[i]}{meta_shapes[i]}"
+            )
+        tt = np.asarray(t)
+        if tuple(x.shape) != tuple(tt.shape):
+            raise ValueError(
+                f"checkpoint leaf {i} at {path}: saved shape "
+                f"{tuple(x.shape)} does not match template shape "
+                f"{tuple(tt.shape)} — snapshot and restore config disagree"
+            )
+        if x.dtype != tt.dtype:
+            raise ValueError(
+                f"checkpoint leaf {i} at {path}: saved dtype {x.dtype} does "
+                f"not match template dtype {tt.dtype} — snapshot and "
+                "restore config disagree"
+            )
     return treedef.unflatten(leaves)
 
 

@@ -10,7 +10,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["safe_div", "gemd", "label_distribution", "cohort_label_distribution"]
+__all__ = [
+    "safe_div",
+    "finite_mean",
+    "gemd",
+    "label_distribution",
+    "cohort_label_distribution",
+]
 
 
 def safe_div(num: jax.Array, den: jax.Array, eps: float = 1e-30) -> jax.Array:
@@ -22,6 +28,26 @@ def safe_div(num: jax.Array, den: jax.Array, eps: float = 1e-30) -> jax.Array:
     (≥ 1 sample) is untouched.
     """
     return num / jnp.maximum(den, eps)
+
+
+def finite_mean(x: jax.Array, where: jax.Array = None) -> jax.Array:
+    """Mean over the finite (optionally ``where``-masked) entries of ``x``.
+
+    The NaN-aware round-mean helper (DESIGN.md §11): NaN is the documented
+    non-cohort loss mask and a NaN/Inf-corrupt client's loss report is
+    garbage, so round summaries reduce only over finite entries.  Returns
+    NaN (not 0) when nothing qualifies — a dead round must not read as
+    perfect convergence.  ``jnp.where`` (never ``mask·x``) keeps a masked
+    NaN from poisoning the sum, and the reduction order over the kept
+    entries matches a plain masked sum, so all-finite inputs are
+    bit-identical to the pre-guard mean.
+    """
+    ok = jnp.isfinite(x)
+    if where is not None:
+        ok = ok & where
+    tot = jnp.sum(jnp.where(ok, x, jnp.zeros((), x.dtype)))
+    cnt = jnp.sum(ok.astype(jnp.float32))
+    return jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1.0), jnp.nan)
 
 
 def label_distribution(ys: jax.Array, num_classes: int) -> jax.Array:

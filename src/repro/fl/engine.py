@@ -63,11 +63,13 @@ def _checked_shard_map(f, mesh, in_specs, out_specs):
     except TypeError:
         return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
+from repro import checkpoint as checkpoint_lib
 from repro.core import dpp as dpp_lib
 from repro.core import metrics as metrics_lib
 from repro.core import profiles as profiles_lib
 from repro.core import selection as selection_lib
 from repro.core import similarity as similarity_lib
+from repro.fl import faults as faults_lib
 from repro.fl import rounds as rounds_lib
 from repro.fl import scenarios as scenarios_lib
 from repro.fl import staleness as staleness_lib
@@ -80,6 +82,9 @@ __all__ = [
     "make_round_fn",
     "run_scanned",
     "run_many",
+    "run_checkpointed",
+    "save_server_state",
+    "restore_server_state",
     "stack_states",
     "unstack_outputs",
     "init_server_state",
@@ -143,6 +148,35 @@ class FLConfig:
     # (the million-client regime).  Candidates are fixed per reprofile
     # segment, so the spectral cache stays valid between boundaries.
     candidate_frac: Optional[float] = None
+    # Fault tolerance (DESIGN.md §11).  ``faults`` names a
+    # repro.fl.faults.FAULT_MODELS entry injecting per-round client failures
+    # (dropout / NaN / garbage / sign-flip / shard blackout) from a salted
+    # fold_in stream — faults=None never touches the key chain, so
+    # fault-free configs stay bit-identical to the pre-fault engine.
+    faults: Optional[str] = None
+    # Robust aggregation mode (repro.fl.faults.AGGREGATORS): "mean" is the
+    # plain eq.-(6) weighted sum (vulnerable control — a delivered NaN or
+    # norm-exploded update flows straight in); "clipped_mean" rescales
+    # over-norm deltas to robust_norm_mult × the cohort's median update
+    # norm; "trimmed_mean" rejects them (weight 0, safe_div renormalises).
+    # Both robust modes always reject non-finite updates and flag offenders
+    # for quarantine.  Any aggregator != "mean" (or any fault model) turns
+    # the update-validation guard on.
+    aggregator: str = "mean"
+    robust_norm_mult: float = 3.0  # clip/trim threshold × cohort median norm
+    # survivors floor: a guarded round whose weighted sum retains fewer
+    # clients becomes an identity round (params carried over, recorded in
+    # the scan metrics) instead of aggregating noise/zeros
+    min_survivors: int = 1
+    # rounds a flagged client is excluded from selection (via the
+    # select_avail_fn availability hook); 0 disables the cooldown
+    quarantine_rounds: int = 5
+    # run_checkpointed snapshot period (rounds); None = no snapshots
+    ckpt_every: Optional[int] = None
+
+    def guarded(self) -> bool:
+        """True when the update-validation / quarantine layer is active."""
+        return self.faults is not None or self.aggregator != "mean"
 
     def candidate_count(self) -> int:
         """Q — stage-1 survivors; ``round(C·frac)`` clamped to
@@ -189,6 +223,40 @@ class FLConfig:
                     f"candidate_frac={self.candidate_frac} must be in (0, 1] "
                     "(1.0 = degenerate funnel, bit-identical to no funnel)"
                 )
+        if self.aggregator not in faults_lib.AGGREGATORS:
+            raise ValueError(
+                f"unknown aggregator {self.aggregator!r}; "
+                f"known: {list(faults_lib.AGGREGATORS)}"
+            )
+        if self.faults is not None:
+            faults_lib.get_fault_model(self.faults)  # unknown name raises
+        if self.guarded():
+            if self.robust_norm_mult <= 0:
+                raise ValueError(
+                    f"robust_norm_mult={self.robust_norm_mult} must be > 0"
+                )
+            if self.min_survivors < 1:
+                raise ValueError(
+                    f"min_survivors={self.min_survivors} must be >= 1: with "
+                    "0 survivors the weighted sum is all-zero and the "
+                    "aggregate would silently zero the params — the floor "
+                    "exists so that round degrades to identity instead"
+                )
+            if self.min_survivors > self.clients_per_round:
+                raise ValueError(
+                    f"min_survivors={self.min_survivors} > clients_per_round"
+                    f"={self.clients_per_round}: every round would be an "
+                    "identity round"
+                )
+            if self.quarantine_rounds < 0:
+                raise ValueError(
+                    f"quarantine_rounds={self.quarantine_rounds} must be >= 0"
+                )
+        if self.ckpt_every is not None and self.ckpt_every < 1:
+            raise ValueError(
+                f"ckpt_every={self.ckpt_every} must be >= 1 (None disables "
+                "snapshots)"
+            )
 
 
 @jax.tree_util.register_dataclass
@@ -224,6 +292,12 @@ class ServerState:
     # kernel / eig_state / cluster_labels above live on the Q-block.  Fixed
     # per reprofile segment (rebuilt with the profiles), replicated.
     candidates: Optional[jax.Array] = None
+    # Quarantine cooldowns (DESIGN.md §11) — None unless the update-
+    # validation guard is on (cfg.guarded()).  (C,) int32 rounds remaining
+    # before a flagged client may be selected again; feeds selection through
+    # the select_avail_fn availability hook.  Replicated (selection is
+    # replicated trivia, like the staleness counters).
+    quarantine: Optional[jax.Array] = None
 
     @property
     def num_clients(self) -> int:
@@ -430,6 +504,31 @@ def make_round_fn(
         else None
     )
     avail_aware = scen is not None and scen.availability is not None
+    # Fault tolerance (DESIGN.md §11): the fault model's per-round draws and
+    # the update-validation guard.  guard_on also without a fault model —
+    # the robust aggregators screen honest-path updates too.  Quarantine
+    # feeds selection through the same availability hook as the scenario, so
+    # guarded configs route selection avail-aware even without a scenario.
+    fault_model = (
+        faults_lib.get_fault_model(cfg.faults) if cfg.faults is not None
+        else None
+    )
+    guard_on = cfg.guarded()
+    lemons = (
+        faults_lib.lemon_mask(fault_model, cfg.num_clients)
+        if fault_model is not None else None
+    )
+    guard = (
+        faults_lib.make_update_guard(
+            cfg.aggregator, cfg.robust_norm_mult,
+            garbage_scale=(
+                fault_model.garbage_scale if fault_model is not None else 1.0
+            ),
+            inject=fault_model is not None,
+        )
+        if guard_on else None
+    )
+    route_avail = avail_aware or guard_on
     batched_loss = lambda p, batch: loss_fn(p, batch[0], batch[1])
     loss_of = jax.vmap(loss_fn, in_axes=(None, 0, 0))
     # selection dispatches through select_global_fn — the funnel-aware entry
@@ -439,7 +538,7 @@ def make_round_fn(
     # picks come back as global ids, so everything downstream of ``sel`` —
     # batches, aggregation, loss refresh, GEMD, slots, staleness — is
     # untouched by funnelling.
-    if avail_aware:
+    if route_avail:
         branches = tuple(
             functools.partial(
                 lambda strat, key, sstate, avail: strat.select_global_fn(
@@ -459,24 +558,47 @@ def make_round_fn(
         )
     steps_of = lambda state: _steps_per_round(cfg, state.client_xs.shape[1])
 
-    def _single_device_body(state, k_batch, sel):
+    def _single_device_body(state, k_batch, sel, draws=None):
         """Cohort gather + vmapped/mapped local updates on one device."""
         batches = make_client_batches(cfg, k_batch, state.client_xs, state.client_ys, sel)
         weights = jnp.take(state.client_sizes, sel)
         round_step = rounds_lib.build_client_parallel_round(
             batched_loss, cfg.lr, steps_of(state), grad_clip=cfg.grad_clip,
-            sequential_clients=sequential_clients,
+            sequential_clients=sequential_clients, update_transform=guard,
         )
-        params, mean_loss = round_step(state.params, batches, weights)
-        # refresh last-known losses for the selected clients
-        sel_losses = loss_of(
-            params, jnp.take(state.client_xs, sel, 0), jnp.take(state.client_ys, sel, 0)
-        )
-        losses = state.losses.at[sel].set(sel_losses)
         g = metrics_lib.gemd(
             state.client_label_dists, state.client_sizes, sel, state.global_label_dist
         )
-        return params, mean_loss, losses, g
+        if guard is None:
+            params, mean_loss = round_step(state.params, batches, weights)
+            # refresh last-known losses for the selected clients
+            sel_losses = loss_of(
+                params, jnp.take(state.client_xs, sel, 0), jnp.take(state.client_ys, sel, 0)
+            )
+            losses = state.losses.at[sel].set(sel_losses)
+            return params, mean_loss, losses, g
+        # fault masks gathered to the cohort layout (draws are (C,) rows)
+        g_args = (
+            () if draws is None else tuple(jnp.take(m, sel) for m in draws)
+        )
+        params, mean_loss, flagged, survivors = round_step(
+            state.params, batches, weights, *g_args
+        )
+        c = state.losses.shape[0]
+        flagged_c = jnp.zeros((c,), jnp.bool_).at[sel].set(flagged)
+        delivered = (
+            jnp.take(draws.delivered, sel) if draws is not None
+            else jnp.ones(sel.shape, jnp.bool_)
+        )
+        # refresh only trusted participants, and only when the round's
+        # aggregate will actually be kept (survivors floor)
+        refresh = delivered & ~flagged & (survivors >= cfg.min_survivors)
+        sel_losses = loss_of(
+            params, jnp.take(state.client_xs, sel, 0), jnp.take(state.client_ys, sel, 0)
+        )
+        keep = jnp.take(state.losses, sel)
+        losses = state.losses.at[sel].set(jnp.where(refresh, sel_losses, keep))
+        return params, mean_loss, losses, g, flagged_c, survivors
 
     def _resident_batch_plans(state, k_batch, sel):
         """Jit-level per-resident batch *index plans*: every client adopts
@@ -495,21 +617,28 @@ def make_round_fn(
         client_keys = jax.random.wrap_key_data(key_data[slot_full])
         return batch_indices_from_keys(cfg, client_keys, n_c)  # (C, ...) | None
 
-    def _sharded_body(state, k_batch, sel):
+    def _sharded_body(state, k_batch, sel, draws=None):
         """shard_map core: in-place masked local updates + psum'd FedAvg.
 
         Random index plans come from :func:`_resident_batch_plans` (jit
         level); only data slicing, the local SGD scans, and the psum'd
-        aggregation live inside the shard_map.
+        aggregation live inside the shard_map.  With the guard on, the fault
+        masks (jit-level draws, resident layout) shard over the client axis
+        like the index plans; validation/rejection happens inside the
+        shard_map strictly before the single psum.
         """
         shard_round = rounds_lib.build_shard_cohort_round(
             batched_loss, cfg.lr, client_axis, grad_clip=cfg.grad_clip,
-            sequential_clients=sequential_clients,
+            sequential_clients=sequential_clients, update_transform=guard,
         )
         ids = _resident_batch_plans(state, k_batch, sel)
+        n_ids = 0 if ids is None else 1
+        mask_args = () if draws is None else tuple(draws)
 
         def local_body(sel, params, local_xs, local_ys, local_sizes,
-                       local_losses, local_dists, global_dist, *local_ids):
+                       local_losses, local_dists, global_dist, *rest):
+            local_ids = rest[:n_ids]
+            fmasks = rest[n_ids:]
             c_loc = local_xs.shape[0]
             gids = lax.axis_index(client_axis) * c_loc + jnp.arange(c_loc)
             mask = jnp.any(sel[None, :] == gids[:, None], axis=1)
@@ -521,30 +650,46 @@ def make_round_fn(
             # label-mix numerator/denominator over this shard's residents
             w = weights.astype(jnp.float32)
             gemd_parts = ((w[:, None] * local_dists).sum(0), jnp.sum(w))
-            params, _, mean_loss, (num, den) = shard_round(
-                params, batches, weights, extras=gemd_parts
+            if guard is None:
+                params, _, mean_loss, (num, den) = shard_round(
+                    params, batches, weights, extras=gemd_parts
+                )
+                g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
+                # loss refresh stays on the client's home shard (no scatter)
+                fresh = loss_of(params, local_xs, local_ys)
+                losses = jnp.where(mask, fresh, local_losses)
+                return params, mean_loss, losses, g
+            params, _, mean_loss, (num, den), flagged, survivors = shard_round(
+                params, batches, weights, extras=gemd_parts, guard_args=fmasks
             )
             g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
-            # loss refresh stays on the client's home shard (no scatter)
+            delivered = fmasks[0] if fmasks else jnp.ones_like(mask)
+            refresh = (
+                mask & delivered & ~flagged
+                & (survivors >= cfg.min_survivors)
+            )
             fresh = loss_of(params, local_xs, local_ys)
-            losses = jnp.where(mask, fresh, local_losses)
-            return params, mean_loss, losses, g
+            losses = jnp.where(refresh, fresh, local_losses)
+            return params, mean_loss, losses, g, flagged, survivors
 
         lead = P(client_axis)
         id_args = () if ids is None else (ids,)
+        out = (P(), P(), lead, P())
+        if guard is not None:
+            out = out + (lead, P())
         body = _checked_shard_map(
             local_body, mesh=mesh,
             in_specs=(P(), P(), lead, lead, lead, lead, lead, P())
-            + (lead,) * len(id_args),
-            out_specs=(P(), P(), lead, P()),
+            + (lead,) * (len(id_args) + len(mask_args)),
+            out_specs=out,
         )
         return body(
             sel, state.params, state.client_xs, state.client_ys,
             state.client_sizes, state.losses, state.client_label_dists,
-            state.global_label_dist, *id_args,
+            state.global_label_dist, *(id_args + mask_args),
         )
 
-    def _slot_sharded_body(state, k_batch, sel):
+    def _slot_sharded_body(state, k_batch, sel, draws=None):
         """Capacity-slot shard_map core: per-shard top-``cap`` slot gather.
 
         The slot table is computed at the jit level from the replicated
@@ -569,6 +714,7 @@ def make_round_fn(
         shard_round = rounds_lib.build_shard_cohort_round(
             batched_loss, cfg.lr, client_axis, grad_clip=cfg.grad_clip,
             sequential_clients=sequential_clients, cap=cap,
+            update_transform=guard,
         )
         in_cohort = jnp.any(
             sel[None, :] == jnp.arange(c)[:, None], axis=1
@@ -583,10 +729,19 @@ def make_round_fn(
         slot_keys = jax.random.wrap_key_data(key_data[slot_cohort.reshape(-1)])
         ids = batch_indices_from_keys(cfg, slot_keys, n_c)  # (D*cap, ...) | None
         flat_pos = slot_pos.reshape(-1)  # (D*cap,)
+        n_ids = 0 if ids is None else 1
+        # fault masks gathered to the slot layout at the jit level (the
+        # draws are (C,) resident rows; slots shard like the index plans)
+        mask_args = (
+            () if draws is None
+            else tuple(jnp.take(m, slot_gid.reshape(-1)) for m in draws)
+        )
 
         def local_body(sel, slot_index, params, local_xs, local_ys,
                        local_sizes, local_losses, local_dists, global_dist,
-                       *slot_ids):
+                       *rest):
+            slot_ids = rest[:n_ids]
+            fmasks = rest[n_ids:]
             c_loc_ = local_xs.shape[0]
             gids = lax.axis_index(client_axis) * c_loc_ + jnp.arange(c_loc_)
             mask = jnp.any(sel[None, :] == gids[:, None], axis=1)
@@ -601,36 +756,63 @@ def make_round_fn(
             # round's single psum
             w = weights.astype(jnp.float32)
             gemd_parts = ((w[:, None] * local_dists).sum(0), jnp.sum(w))
-            params, _, mean_loss, (num, den) = shard_round(
-                params, batches, weights, slot_index, extras=gemd_parts
+            if guard is None:
+                params, _, mean_loss, (num, den) = shard_round(
+                    params, batches, weights, slot_index, extras=gemd_parts
+                )
+                g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
+                # loss refresh over slots only — the cap-not-C_loc saving
+                # applies to the refresh pass too; unselected residents keep
+                # their last known loss (scatter of distinct local positions,
+                # no collisions)
+                fresh = loss_of(params, slot_xs, slot_ys)
+                keep = jnp.take(local_losses, slot_index)
+                slot_mask = jnp.take(mask, slot_index)
+                losses = local_losses.at[slot_index].set(
+                    jnp.where(slot_mask, fresh, keep)
+                )
+                return params, mean_loss, losses, g
+            params, _, mean_loss, (num, den), flagged, survivors = shard_round(
+                params, batches, weights, slot_index, extras=gemd_parts,
+                guard_args=fmasks,
             )
             g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
-            # loss refresh over slots only — the cap-not-C_loc saving applies
-            # to the refresh pass too; unselected residents keep their last
-            # known loss (scatter of distinct local positions, no collisions)
+            # fmasks are already slot-layout (gathered by slot_gid above)
+            slot_delivered = (
+                fmasks[0] if fmasks
+                else jnp.ones(slot_index.shape, jnp.bool_)
+            )
+            slot_flagged = jnp.take(flagged, slot_index)
+            slot_mask = jnp.take(mask, slot_index)
+            refresh = (
+                slot_mask & slot_delivered & ~slot_flagged
+                & (survivors >= cfg.min_survivors)
+            )
             fresh = loss_of(params, slot_xs, slot_ys)
             keep = jnp.take(local_losses, slot_index)
-            slot_mask = jnp.take(mask, slot_index)
             losses = local_losses.at[slot_index].set(
-                jnp.where(slot_mask, fresh, keep)
+                jnp.where(refresh, fresh, keep)
             )
-            return params, mean_loss, losses, g
+            return params, mean_loss, losses, g, flagged, survivors
 
         lead = P(client_axis)
         id_args = () if ids is None else (ids,)
+        out = (P(), P(), lead, P())
+        if guard is not None:
+            out = out + (lead, P())
         body = _checked_shard_map(
             local_body, mesh=mesh,
             in_specs=(P(), lead, P(), lead, lead, lead, lead, lead, P())
-            + (lead,) * len(id_args),
-            out_specs=(P(), P(), lead, P()),
+            + (lead,) * (len(id_args) + len(mask_args)),
+            out_specs=out,
         )
         return body(
             sel, flat_pos, state.params, state.client_xs, state.client_ys,
             state.client_sizes, state.losses, state.client_label_dists,
-            state.global_label_dist, *id_args,
+            state.global_label_dist, *(id_args + mask_args),
         )
 
-    def _stale_sharded_body(state, k_batch, sel, lat):
+    def _stale_sharded_body(state, k_batch, sel, lat, draws=None):
         """Bounded-staleness shard_map core (DESIGN.md §9).
 
         Same residents, masks, batch plans, and single psum as
@@ -652,7 +834,7 @@ def make_round_fn(
         t_prev = state.round  # rounds completed; ring slot t_prev holds θ_t
         shard_round = rounds_lib.build_stale_shard_cohort_round(
             batched_loss, cfg.lr, client_axis, grad_clip=cfg.grad_clip,
-            sequential_clients=sequential_clients,
+            sequential_clients=sequential_clients, update_transform=guard,
         )
         in_cohort = jnp.any(sel[None, :] == jnp.arange(c)[:, None], axis=1)
         # a shard's round latency is its slowest selected resident (shards
@@ -678,10 +860,14 @@ def make_round_fn(
             shard_lat, slow, forced, scen.deadline
         )
         ids = _resident_batch_plans(state, k_batch, sel)
+        n_ids = 0 if ids is None else 1
+        mask_args = () if draws is None else tuple(draws)
 
         def local_body(sel, lam_d, slot_d, hist, local_xs, local_ys,
                        local_sizes, local_losses, local_dists, global_dist,
-                       *local_ids):
+                       *rest):
+            local_ids = rest[:n_ids]
+            fmasks = rest[n_ids:]
             c_loc_ = local_xs.shape[0]
             gids = lax.axis_index(client_axis) * c_loc_ + jnp.arange(c_loc_)
             mask = jnp.any(sel[None, :] == gids[:, None], axis=1)
@@ -693,33 +879,68 @@ def make_round_fn(
             # label mix, not the staleness-decayed aggregation weights
             w = weights.astype(jnp.float32)
             gemd_parts = ((w[:, None] * local_dists).sum(0), jnp.sum(w))
-            params, _, mean_loss, (num, den) = shard_round(
-                hist, slot_d[0], lam_d[0], batches, weights, extras=gemd_parts
+            if guard is None:
+                params, _, mean_loss, (num, den) = shard_round(
+                    hist, slot_d[0], lam_d[0], batches, weights,
+                    extras=gemd_parts
+                )
+                g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
+                # the refresh measures the NEW aggregate on each home shard —
+                # fresh params, even when the contribution was stale
+                fresh = loss_of(params, local_xs, local_ys)
+                losses = jnp.where(mask, fresh, local_losses)
+                return params, mean_loss, losses, g
+            params, _, mean_loss, (num, den), flagged, survivors = shard_round(
+                hist, slot_d[0], lam_d[0], batches, weights,
+                extras=gemd_parts, guard_args=fmasks,
             )
             g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
-            # the refresh measures the NEW aggregate on each home shard —
-            # fresh params, even when the contribution was stale
+            delivered = fmasks[0] if fmasks else jnp.ones_like(mask)
+            refresh = (
+                mask & delivered & ~flagged
+                & (survivors >= cfg.min_survivors)
+            )
             fresh = loss_of(params, local_xs, local_ys)
-            losses = jnp.where(mask, fresh, local_losses)
-            return params, mean_loss, losses, g
+            losses = jnp.where(refresh, fresh, local_losses)
+            return params, mean_loss, losses, g, flagged, survivors
 
         lead = P(client_axis)
         id_args = () if ids is None else (ids,)
+        out = (P(), P(), lead, P())
+        if guard is not None:
+            out = out + (lead, P())
         body = _checked_shard_map(
             local_body, mesh=mesh,
             in_specs=(P(), lead, lead, P(), lead, lead, lead, lead, lead, P())
-            + (lead,) * len(id_args),
-            out_specs=(P(), P(), lead, P()),
+            + (lead,) * (len(id_args) + len(mask_args)),
+            out_specs=out,
         )
-        params, mean_loss, losses, g = body(
+        res = body(
             sel, lam, read_slot, state.param_hist, state.client_xs,
             state.client_ys, state.client_sizes, state.losses,
-            state.client_label_dists, state.global_label_dist, *id_args,
+            state.client_label_dists, state.global_label_dist,
+            *(id_args + mask_args),
         )
+        if guard is None:
+            params, mean_loss, losses, g = res
+            flagged = survivors = None
+        else:
+            params, mean_loss, losses, g, flagged, survivors = res
+            # apply the survivors floor BEFORE the ring write: the ring must
+            # record the params the round actually kept, or a resumed /
+            # stale read would replay a discarded aggregate
+            ok_round = survivors >= cfg.min_survivors
+            params = jax.tree_util.tree_map(
+                lambda a, o: jnp.where(ok_round, a, o).astype(o.dtype),
+                params, state.params,
+            )
         hist = staleness_lib.update_param_hist(
             state.param_hist, params, t_prev + 1, bound
         )
-        return params, mean_loss, losses, g, hist, new_s, sim_time
+        if guard is None:
+            return params, mean_loss, losses, g, hist, new_s, sim_time
+        return (params, mean_loss, losses, g, hist, new_s, sim_time,
+                flagged, survivors)
 
     def round_fn(state: ServerState, _=None):
         t = state.round + 1
@@ -735,24 +956,67 @@ def make_round_fn(
                 avail = scen.availability(
                     jax.random.fold_in(k_env, 1), t, state.num_clients
                 )
+        # fault draws branch off the carried key the same way (FAULT_SALT):
+        # jit-level tiny boolean rows, generated OUTSIDE the shard_map (the
+        # batch-plan rule) and sharded in — faults=None skips all of this,
+        # leaving every key stream bit-identical to the pre-fault engine
+        draws = None
+        if fault_model is not None:
+            n_sh = 1 if mesh is None else mesh.shape[client_axis]
+            draws = faults_lib.draw_round_faults(
+                jax.random.fold_in(state.key, faults_lib.FAULT_SALT),
+                fault_model, cfg.num_clients, n_sh, lemons,
+            )
         sel_args = (k_sel, state.selection_state())
-        if avail_aware:
-            sel_args = sel_args + (avail,)
+        if route_avail:
+            # quarantined clients are "unavailable" to selection — the same
+            # availability hook the scenario uses, masks AND-composed
+            sel_mask = avail
+            if guard_on:
+                q_ok = state.quarantine <= 0
+                sel_mask = q_ok if sel_mask is None else (sel_mask & q_ok)
+            sel_args = sel_args + (sel_mask,)
         if len(branches) == 1:
             sel = branches[0](*sel_args)
         else:
             sel = lax.switch(state.strategy_index, branches, *sel_args)
         hist = new_s = sim_time = None
+        flagged_c = survivors = None
         if mesh is None:
-            params, mean_loss, losses, g = _single_device_body(state, k_batch, sel)
+            res = _single_device_body(state, k_batch, sel, draws=draws)
+            if guard is None:
+                params, mean_loss, losses, g = res
+            else:
+                params, mean_loss, losses, g, flagged_c, survivors = res
         elif cfg.staleness_bound is not None:
-            params, mean_loss, losses, g, hist, new_s, sim_time = (
-                _stale_sharded_body(state, k_batch, sel, lat)
-            )
+            res = _stale_sharded_body(state, k_batch, sel, lat, draws=draws)
+            if guard is None:
+                params, mean_loss, losses, g, hist, new_s, sim_time = res
+            else:
+                (params, mean_loss, losses, g, hist, new_s, sim_time,
+                 flagged_c, survivors) = res
         elif cfg.cohort_cap is not None:
-            params, mean_loss, losses, g = _slot_sharded_body(state, k_batch, sel)
+            res = _slot_sharded_body(state, k_batch, sel, draws=draws)
+            if guard is None:
+                params, mean_loss, losses, g = res
+            else:
+                params, mean_loss, losses, g, flagged_c, survivors = res
         else:
-            params, mean_loss, losses, g = _sharded_body(state, k_batch, sel)
+            res = _sharded_body(state, k_batch, sel, draws=draws)
+            if guard is None:
+                params, mean_loss, losses, g = res
+            else:
+                params, mean_loss, losses, g, flagged_c, survivors = res
+        if guard is not None:
+            # graceful degradation: a round below the survivors floor keeps
+            # the old params (identity round, recorded in the metrics).  The
+            # stale body already floored before its ring write; re-applying
+            # here is an exact no-op for it.
+            ok_round = survivors >= cfg.min_survivors
+            params = jax.tree_util.tree_map(
+                lambda a, o: jnp.where(ok_round, a, o).astype(o.dtype),
+                params, state.params,
+            )
         if scen is not None and sim_time is None:
             # synchronous barrier under the scenario: the round closes at
             # the slowest selected client
@@ -778,6 +1042,14 @@ def make_round_fn(
         updates = dict(params=params, key=key, round=t, losses=losses)
         if hist is not None:
             updates.update(param_hist=hist, shard_staleness=new_s)
+        if guard_on:
+            # quarantine dynamics: freshly flagged clients (re)start the
+            # cooldown, everyone else's counter ticks down toward release
+            q = jnp.maximum(state.quarantine - 1, 0)
+            q = jnp.where(
+                flagged_c, jnp.int32(cfg.quarantine_rounds), q
+            ).astype(jnp.int32)
+            updates["quarantine"] = q
         new_state = dataclasses.replace(state, **updates)
         out = {
             "round": t,
@@ -793,6 +1065,13 @@ def make_round_fn(
         if cfg.staleness_bound is not None:
             # mean lag the round's contributions were computed at
             out["staleness"] = jnp.mean(new_s.astype(jnp.float32))
+        if guard_on:
+            out["survivors"] = jnp.asarray(survivors, jnp.int32)
+            out["identity_round"] = jnp.asarray(
+                survivors < cfg.min_survivors, jnp.int32
+            )
+            out["flagged"] = jnp.sum(flagged_c.astype(jnp.int32))
+            out["quarantined"] = jnp.sum((q > 0).astype(jnp.int32))
         return new_state, out
 
     return round_fn
@@ -900,6 +1179,85 @@ def run_many(
             stacked_state, mesh, client_axis, batch_dims=1
         )
     return _vmapped(round_fn, num_rounds)(stacked_state)
+
+
+# -------------------------------------------------------------- crash-resume
+
+
+def save_server_state(ckpt_dir: str, state: ServerState) -> str:
+    """Snapshot the FULL :class:`ServerState` (params, PRNG key, ring
+    buffer, staleness counters, spectral cache, candidate set, quarantine
+    state — every pytree leaf) under ``<ckpt_dir>/step_<round>/``.
+
+    The typed PRNG key is stored as its raw ``key_data`` (npz can't hold
+    extension dtypes); :func:`restore_server_state` re-wraps it.  Sharded
+    states gather transparently through ``np.asarray``.
+    """
+    step = int(jax.device_get(state.round))
+    host = dataclasses.replace(state, key=jax.random.key_data(state.key))
+    return checkpoint_lib.save(ckpt_dir, step, host)
+
+
+def restore_server_state(
+    ckpt_dir: str, template: ServerState, step: Optional[int] = None
+) -> ServerState:
+    """Load a :func:`save_server_state` snapshot against a template state
+    (e.g. the fresh ``init_server_state`` of the same config).
+
+    Validation (leaf count / shapes / dtypes vs ``tree.json``) happens in
+    ``repro.checkpoint.restore`` — a snapshot from a different config raises
+    instead of unflattening garbage.  The returned state continues
+    **bit-identically**: every carried array, including the PRNG key chain,
+    is exactly the value the snapshotting run held after round
+    ``state.round``.
+    """
+    t_host = dataclasses.replace(template, key=jax.random.key_data(template.key))
+    restored = checkpoint_lib.restore(ckpt_dir, t_host, step=step)
+    key = jax.random.wrap_key_data(jnp.asarray(restored.key))
+    return dataclasses.replace(restored, key=key)
+
+
+def run_checkpointed(
+    round_fn, state: ServerState, num_rounds: int,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: Optional[int] = None,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    client_axis: str = CLIENT_AXIS,
+) -> Tuple[ServerState, Dict[str, jax.Array]]:
+    """:func:`run_scanned` with periodic :class:`ServerState` snapshots.
+
+    Runs the scan in ``ckpt_every``-round segments, snapshotting the full
+    state after each (DESIGN.md §11) — the per-round computation inside each
+    segment is the same compiled ``round_fn`` body, so segmenting changes
+    nothing numerically, and a crashed run restored from the latest
+    ``step_*`` snapshot (:func:`restore_server_state`) continues
+    bit-identically (the resume-parity contract: run N ≡ run n → restore →
+    run N−n).  With ``ckpt_dir``/``ckpt_every`` unset this IS
+    :func:`run_scanned`.
+    """
+    if ckpt_dir is None or not ckpt_every:
+        return run_scanned(
+            round_fn, state, num_rounds, mesh=mesh, client_axis=client_axis
+        )
+    done = 0
+    outs: List[Dict[str, np.ndarray]] = []
+    while done < num_rounds:
+        n = min(ckpt_every, num_rounds - done)
+        state, seg = run_scanned(
+            round_fn, state, n, mesh=mesh, client_axis=client_axis
+        )
+        outs.append({k: np.asarray(v) for k, v in seg.items()})
+        save_server_state(ckpt_dir, state)
+        done += n
+    if not outs:
+        _, empty = run_scanned(
+            round_fn, state, 0, mesh=mesh, client_axis=client_axis
+        )
+        return state, empty
+    merged = {
+        k: np.concatenate([o[k] for o in outs], axis=0) for k in outs[0]
+    }
+    return state, merged
 
 
 def stack_states(states: Sequence[ServerState]) -> ServerState:
@@ -1189,6 +1547,9 @@ def init_server_state(
         param_hist, shard_staleness = staleness_lib.init_staleness_fields(
             params, cfg.staleness_bound, mesh, client_axis
         )
+    # quarantine counters only exist on guarded configs so the pytree (and
+    # every compiled program keyed on it) is unchanged for fault-free runs
+    quarantine = jnp.zeros((c,), jnp.int32) if cfg.guarded() else None
     state = ServerState(
         params=params,
         key=key if key is not None else jax.random.key(cfg.seed),
@@ -1207,6 +1568,7 @@ def init_server_state(
         param_hist=param_hist,
         shard_staleness=shard_staleness,
         candidates=candidates,
+        quarantine=quarantine,
     )
     if mesh is not None:
         state = shard_server_state(state, mesh, client_axis)

@@ -1,0 +1,339 @@
+"""Fault-injection registry + update-validation guard (DESIGN.md §11).
+
+The scenario simulator (``repro.fl.scenarios``) prices *slowness*; this module
+models the other deployment reality the client-selection surveys
+(arXiv:2211.01549, arXiv:2207.03681) call dominant: clients that **fail** —
+abort mid-round, deliver NaN/Inf or norm-exploded garbage, flip the sign of
+their update ("Byzantine"), or disappear with their whole shard for a round.
+Like scenarios, fault models are *static* config (named in
+``FLConfig.faults``) and all per-round randomness is drawn **at the jit
+level** off the carried server key via a salted ``fold_in`` — a fault-free
+config never touches the selection/batch key streams, so it stays
+bit-identical to the pre-fault engine.
+
+Two halves:
+
+* :func:`draw_round_faults` — one round's per-client fault masks
+  (``delivered`` / ``nan`` / ``garbage`` / ``sign_flip``) plus per-shard
+  blackout folded into ``delivered``, all pure functions of
+  ``fold_in(key, FAULT_SALT)``.  Persistent "lemon" clients (a fixed
+  fraction that corrupts *every* round — the quarantine workload) come from
+  :func:`lemon_mask`, a static draw independent of the round key.
+* :func:`make_update_guard` — the update-validation transform the round
+  builders (``repro.fl.rounds``) apply between the local updates and the
+  eq.-(6) weighted sum, **inside the shard_map, before the single psum**:
+  inject the drawn corruption, zero undelivered clients out of the weights,
+  then screen per-client update norms ``‖θ_c − base‖`` against the
+  aggregator's policy — ``mean`` admits everything (the vulnerable control),
+  ``clipped_mean`` rescales over-norm deltas to ``norm_mult × median`` and
+  flags them, ``trimmed_mean`` rejects them outright (weight → 0, the
+  ``safe_div`` denominator renormalises).  Non-finite updates are always
+  rejected under the robust aggregators, and every rejected/clipped cohort
+  member comes back in the ``flagged`` mask that feeds the engine's
+  quarantine counters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.metrics import safe_div
+
+__all__ = [
+    "FAULT_SALT",
+    "AGGREGATORS",
+    "FaultModel",
+    "FAULT_MODELS",
+    "FAULT_NAMES",
+    "get_fault_model",
+    "lemon_mask",
+    "FaultDraws",
+    "draw_round_faults",
+    "apply_faults",
+    "update_norms",
+    "masked_median",
+    "make_update_guard",
+]
+
+# fold_in salt branching the fault stream off the carried server key WITHOUT
+# consuming a split (the _ENV_SALT / _FUNNEL_SALT convention): configs with
+# faults=None never evaluate it, so their selection/batch streams are
+# untouched.
+FAULT_SALT = 0xFA017ED5
+
+# FLConfig.aggregator values — shared by engine validation and launch flags.
+AGGREGATORS = ("mean", "clipped_mean", "trimmed_mean")
+
+_LEMON_SEED = 0x1E303535  # static draw for the persistent-lemon set
+_LEMON_MODES = ("nan", "garbage", "sign_flip")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """One named fault-injection model; every rate is per-client-per-round
+    (``shard_blackout`` per-shard-per-round).
+
+    ``lemon_frac`` marks a fixed fraction of clients *persistently* faulty
+    (they emit ``lemon_mode`` corruption on every round they are selected) —
+    the workload quarantine must learn to stop re-selecting.
+    """
+
+    name: str
+    dropout: float = 0.0  # mid-round abort: the update never arrives
+    nan: float = 0.0  # NaN/Inf-corrupted update
+    garbage: float = 0.0  # norm-scaled garbage: delta × garbage_scale
+    sign_flip: float = 0.0  # Byzantine: delta → −delta (same norm!)
+    shard_blackout: float = 0.0  # whole shard misses the round
+    garbage_scale: float = 50.0
+    lemon_frac: float = 0.0  # persistently faulty fraction
+    lemon_mode: str = "garbage"
+
+    def __post_init__(self):
+        for f in ("dropout", "nan", "garbage", "sign_flip",
+                  "shard_blackout", "lemon_frac"):
+            v = getattr(self, f)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"FaultModel.{f}={v} must be in [0, 1]")
+        if self.garbage_scale <= 0:
+            raise ValueError(
+                f"FaultModel.garbage_scale={self.garbage_scale} must be > 0"
+            )
+        if self.lemon_mode not in _LEMON_MODES:
+            raise ValueError(
+                f"unknown lemon_mode {self.lemon_mode!r}; "
+                f"known: {list(_LEMON_MODES)}"
+            )
+
+
+FAULT_MODELS = {
+    # mid-round aborts only: plain FedAvg handles these via the delivered
+    # mask — the control showing dropout alone needs no robust aggregator
+    "dropout": FaultModel(name="dropout", dropout=0.15),
+    # the BENCH_fault workload: 10% corrupted-update rate (half NaN, half
+    # norm-exploded garbage) — plain mean degrades, robust aggregation holds
+    "corrupt": FaultModel(name="corrupt", nan=0.05, garbage=0.05),
+    # sign-flipped updates at honest norm: invisible to norm screening, the
+    # documented limitation of the per-shard validation layer
+    "byzantine": FaultModel(name="byzantine", sign_flip=0.10),
+    # whole-shard outages + light dropout: exercises the survivors floor
+    "blackout": FaultModel(name="blackout", shard_blackout=0.15, dropout=0.05),
+    # persistently faulty clients: the quarantine workload
+    "lemons": FaultModel(name="lemons", lemon_frac=0.10),
+    # everything at once (the dryrun compile case)
+    "chaos": FaultModel(
+        name="chaos", dropout=0.10, nan=0.03, garbage=0.03, sign_flip=0.04,
+        shard_blackout=0.05, lemon_frac=0.05,
+    ),
+}
+
+FAULT_NAMES = tuple(sorted(FAULT_MODELS))
+
+
+def get_fault_model(name: str) -> FaultModel:
+    """Resolve a registry name; raises ``ValueError`` listing known names."""
+    try:
+        return FAULT_MODELS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown fault model {name!r}; known: {list(FAULT_NAMES)}"
+        ) from None
+
+
+def lemon_mask(model: FaultModel, num_clients: int) -> jax.Array:
+    """(C,) bool mask of the persistently faulty clients.
+
+    A *static* draw (fixed seed, independent of the carried round key — the
+    lemon set is a property of the federation, not of a round) with exactly
+    ``max(1, round(C · lemon_frac))`` lemons when ``lemon_frac > 0``.
+    """
+    if model.lemon_frac <= 0.0:
+        return jnp.zeros((num_clients,), jnp.bool_)
+    n = max(1, int(round(num_clients * model.lemon_frac)))
+    u = jax.random.uniform(jax.random.key(_LEMON_SEED), (num_clients,))
+    order = jnp.argsort(u)
+    return jnp.zeros((num_clients,), jnp.bool_).at[order[:n]].set(True)
+
+
+class FaultDraws(NamedTuple):
+    """One round's fault masks, resident (global-id) layout, precedence
+    applied: corruption masks are mutually exclusive and only ever set for
+    delivered clients (an aborted client's update never arrives, so it can
+    poison nothing)."""
+
+    delivered: jax.Array  # (C,) bool — survived dropout AND shard blackout
+    nan: jax.Array  # (C,) bool
+    garbage: jax.Array  # (C,) bool
+    sign_flip: jax.Array  # (C,) bool
+
+
+def draw_round_faults(
+    key: jax.Array,
+    model: FaultModel,
+    num_clients: int,
+    num_shards: int = 1,
+    lemons: Optional[jax.Array] = None,
+) -> FaultDraws:
+    """Pure jit-level fault draws for one round.
+
+    ``key`` must already be the salted fault stream
+    (``fold_in(state.key, FAULT_SALT)``).  Each fault category draws from its
+    own ``fold_in`` lane so adding a category never shifts the others.
+    ``num_shards`` sizes the blackout draw; the per-shard mask is expanded to
+    clients in resident layout (shard d owns global ids
+    ``[d·C/D, (d+1)·C/D)`` — the engine's gid convention).
+    """
+
+    def bern(lane: int, p: float, n: int) -> jax.Array:
+        if p <= 0.0:
+            return jnp.zeros((n,), jnp.bool_)
+        u = jax.random.uniform(jax.random.fold_in(key, lane), (n,), jnp.float32)
+        return u < jnp.float32(p)
+
+    dropped = bern(1, model.dropout, num_clients)
+    nan_m = bern(2, model.nan, num_clients)
+    garb = bern(3, model.garbage, num_clients)
+    flip = bern(4, model.sign_flip, num_clients)
+    blackout = bern(5, model.shard_blackout, num_shards)
+    if model.lemon_frac > 0.0 and lemons is not None:
+        if model.lemon_mode == "nan":
+            nan_m = nan_m | lemons
+        elif model.lemon_mode == "garbage":
+            garb = garb | lemons
+        else:
+            flip = flip | lemons
+    delivered = ~dropped & ~jnp.repeat(blackout, num_clients // num_shards)
+    # precedence: nan > garbage > sign_flip; undelivered never corrupts
+    nan_m = nan_m & delivered
+    garb = garb & ~nan_m & delivered
+    flip = flip & ~nan_m & ~garb & delivered
+    return FaultDraws(delivered=delivered, nan=nan_m, garbage=garb,
+                      sign_flip=flip)
+
+
+# ------------------------------------------------------------ update guard
+
+
+def _bshape(mask: jax.Array, ndim: int):
+    return mask.reshape((-1,) + (1,) * (ndim - 1))
+
+
+def apply_faults(new_params, base_params, losses, nan_m, garb_m, flip_m,
+                 garbage_scale: float):
+    """Corrupt the delivered per-client updates (leading axis M) per the
+    drawn masks: ``sign_flip`` negates the delta, ``garbage`` scales it by
+    ``garbage_scale``, ``nan`` replaces the whole update with NaN — and a
+    NaN-faulty client's *loss report* is garbage too (the NaN non-cohort
+    masking convention then keeps it out of every round mean)."""
+
+    def leaf(n, b):
+        d = n.astype(jnp.float32) - b.astype(jnp.float32)
+        d = jnp.where(_bshape(flip_m, d.ndim), -d, d)
+        d = jnp.where(_bshape(garb_m, d.ndim), jnp.float32(garbage_scale) * d, d)
+        out = b.astype(jnp.float32) + d
+        out = jnp.where(_bshape(nan_m, d.ndim), jnp.nan, out)
+        return out.astype(n.dtype)
+
+    corrupted = jax.tree_util.tree_map(leaf, new_params, base_params)
+    losses = jnp.where(_bshape(nan_m, losses.ndim), jnp.nan, losses)
+    return corrupted, losses
+
+
+def update_norms(new_params, base_params) -> jax.Array:
+    """(M,) global L2 norms of the per-client deltas ``θ_c − base`` — any
+    non-finite leaf entry makes the whole norm non-finite (the finite
+    screen's one signal)."""
+    sq = None
+    for n, b in zip(jax.tree_util.tree_leaves(new_params),
+                    jax.tree_util.tree_leaves(base_params)):
+        d = n.astype(jnp.float32) - b.astype(jnp.float32)
+        s = jnp.sum(d * d, axis=tuple(range(1, d.ndim)))
+        sq = s if sq is None else sq + s
+    return jnp.sqrt(sq)
+
+
+def masked_median(x: jax.Array, mask: jax.Array) -> jax.Array:
+    """Lower median of ``x`` where ``mask`` — jittable, +inf when the mask is
+    empty (callers' thresholds then admit everything finite)."""
+    padded = jnp.where(mask, x, jnp.inf)
+    s = jnp.sort(padded)
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    idx = jnp.clip(jnp.maximum(cnt - 1, 0) // 2, 0, x.shape[0] - 1)
+    return jnp.take(s, idx)
+
+
+def make_update_guard(
+    aggregator: str,
+    norm_mult: float,
+    garbage_scale: float = 1.0,
+    inject: bool = False,
+):
+    """Build the update-validation transform the round builders apply
+    between the local updates and the eq.-(6) weighted sum.
+
+    ``guard(new_params, base_params, weights, losses, *masks) ->
+    (new_params, weights, losses, flagged)`` where every array leads with the
+    per-client axis M.  ``masks`` is the :class:`FaultDraws` 4-tuple sliced
+    to this shard/slot layout when ``inject`` (a fault model is attached),
+    else empty — the robust aggregators screen honest-path runs too.
+
+    The returned weights are the eq.-(6) weights with undelivered and
+    rejected clients zeroed; the existing ``safe_div`` denominator
+    renormalises, so rejection is exactly "masked out of the weighted sum".
+    Rejected clients' params are also zeroed (sanitised): a 0-weight NaN
+    update would otherwise poison the partial sums through ``0 · NaN``.
+    ``flagged`` marks the cohort members validation rejected (or, under
+    ``clipped_mean``, clipped) — the engine's quarantine signal.
+    """
+    if aggregator not in AGGREGATORS:
+        raise ValueError(
+            f"unknown aggregator {aggregator!r}; known: {list(AGGREGATORS)}"
+        )
+
+    def guard(new_params, base_params, weights, losses, *masks):
+        if inject:
+            delivered, nan_m, garb_m, flip_m = masks
+            new_params, losses = apply_faults(
+                new_params, base_params, losses, nan_m, garb_m, flip_m,
+                garbage_scale,
+            )
+            w = weights * delivered.astype(weights.dtype)
+        else:
+            w = weights
+        cohort = w > 0
+        if aggregator == "mean":
+            # the vulnerable control: delivered corruption flows straight
+            # into the weighted sum, nothing is flagged
+            return new_params, w, losses, jnp.zeros_like(cohort)
+        norms = update_norms(new_params, base_params)
+        finite = jnp.isfinite(norms)
+        med = masked_median(norms, cohort & finite)
+        tau = jnp.float32(norm_mult) * med
+        over = finite & (norms > tau)
+        if aggregator == "clipped_mean":
+            # rescale over-norm deltas to the threshold; they stay in the
+            # sum (clipped) but are flagged for quarantine
+            s = jnp.where(over, safe_div(tau, norms), 1.0)
+            new_params = jax.tree_util.tree_map(
+                lambda n, b: (
+                    b.astype(jnp.float32)
+                    + _bshape(s, n.ndim)
+                    * (n.astype(jnp.float32) - b.astype(jnp.float32))
+                ).astype(n.dtype),
+                new_params, base_params,
+            )
+            valid = cohort & finite
+        else:  # trimmed_mean: reject norm outliers outright
+            valid = cohort & finite & ~over
+        flagged = cohort & (~valid | over)
+        new_params = jax.tree_util.tree_map(
+            lambda n: jnp.where(_bshape(valid, n.ndim), n,
+                                jnp.zeros((), n.dtype)),
+            new_params,
+        )
+        return new_params, w * valid.astype(w.dtype), losses, flagged
+
+    return guard

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import optim as optim_lib
-from repro.core.metrics import safe_div
+from repro.core.metrics import finite_mean, safe_div
 
 __all__ = [
     "weighted_average",
@@ -120,6 +120,7 @@ def build_client_parallel_round(
     unroll=1,
     sequential_clients: bool = False,
     micro_batches: int = 1,
+    update_transform: Optional[Callable] = None,
 ) -> Callable[[PyTree, PyTree, jax.Array], Tuple[PyTree, jax.Array]]:
     """Mode A round step.
 
@@ -131,12 +132,21 @@ def build_client_parallel_round(
     ``client_constraint`` (used by the distributed launchers) applies a
     sharding constraint to the per-client broadcast params so the leading
     client axis lays out over the mesh ``data`` axis.
+
+    ``update_transform`` (DESIGN.md §11) is the fault-injection +
+    update-validation guard from ``repro.fl.faults.make_update_guard``,
+    applied between the local updates and the eq.-(6) weighted sum.  When
+    set, ``round_step(global_params, client_batches, client_weights,
+    *guard_args)`` returns ``(agg, mean_loss, flagged, survivors)`` — the
+    NaN-aware cohort mean, the per-client quarantine flags, and the count of
+    clients left in the weighted sum.  When ``None`` (the default) the
+    legacy signature, return, and compiled graph are untouched.
     """
     local_update = build_local_update(
         loss_fn, lr, grad_clip=grad_clip, unroll=unroll, micro_batches=micro_batches
     )
 
-    def round_step(global_params, client_batches, client_weights):
+    def round_step(global_params, client_batches, client_weights, *guard_args):
         n_clients = client_weights.shape[0]
         per_client = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (n_clients,) + x.shape), global_params
@@ -152,8 +162,17 @@ def build_client_parallel_round(
             )
         else:
             new_params, losses = jax.vmap(local_update)(per_client, client_batches)
-        agg = weighted_average(new_params, client_weights)
-        return agg, jnp.mean(losses)
+        if update_transform is None:
+            agg = weighted_average(new_params, client_weights)
+            return agg, jnp.mean(losses)
+        new_params, w, losses, flagged = update_transform(
+            new_params, global_params, client_weights, losses, *guard_args
+        )
+        agg = weighted_average(new_params, w)
+        entry = jnp.mean(losses, axis=tuple(range(1, losses.ndim)))
+        mean_loss = finite_mean(entry, where=w > 0)
+        survivors = jnp.sum((w > 0).astype(jnp.int32))
+        return agg, mean_loss, flagged, survivors
 
     return round_step
 
@@ -167,6 +186,7 @@ def build_shard_cohort_round(
     sequential_clients: bool = True,
     micro_batches: int = 1,
     cap: Optional[int] = None,
+    update_transform: Optional[Callable] = None,
 ) -> Callable[..., Tuple[PyTree, jax.Array, jax.Array, Any]]:
     """Mesh-sharded Mode-A round step for ONE client shard.
 
@@ -209,6 +229,17 @@ def build_shard_cohort_round(
     summed over the axis — callers fold their own per-shard partials (e.g.
     GEMD numerators) into the round's single psum rendezvous instead of
     paying a second one.
+
+    ``update_transform`` (DESIGN.md §11) is the fault-injection +
+    update-validation guard from ``repro.fl.faults.make_update_guard``.
+    When set, both modes accept ``guard_args=()`` — the per-shard (or
+    per-slot) fault-mask rows — apply the guard between the local updates
+    and the partial weighted sums (strictly *before* the single psum, so a
+    rejected update never crosses a device boundary), and the surviving-
+    client count rides that same psum: the return grows to ``(agg,
+    client_losses, mean_loss, extras, flagged, survivors)`` with ``flagged``
+    in resident layout.  When ``None`` the legacy signature, return, and
+    compiled graph are untouched.
     """
     local_update = build_local_update(
         loss_fn, lr, grad_clip=grad_clip, unroll=unroll, micro_batches=micro_batches
@@ -222,51 +253,80 @@ def build_shard_cohort_round(
             return jax.lax.map(lambda args: local_update(*args), (per_client, batches))
         return jax.vmap(local_update)(per_client, batches)
 
-    def _aggregate(new_params, losses, weights, extras):
+    def _aggregate(new_params, losses, weights, extras, survivors_local=None):
         # eq. (6) as partial weighted sums: Σ_c w_c·θ_c / Σ_c w_c.  ALL the
         # round's partial reductions ride ONE psum call so the per-round
         # cross-device rendezvous count stays constant in tree size.
         w = weights.astype(jnp.float32)
         mask = (w > 0).astype(jnp.float32)
         entry_losses = jnp.mean(losses, axis=tuple(range(1, losses.ndim)))
+        # NaN-aware cohort mean: only finite cohort entries enter tot/cnt
+        # (``where``, never ``mask·x`` — 0·NaN = NaN).  All-finite inputs
+        # keep the exact pre-guard values: same entries, same reduction
+        # order.  A round with no finite cohort entry reports NaN, not 0.
+        ok = (mask > 0) & jnp.isfinite(entry_losses)
 
         def part_leaf(x):
             wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
             return jnp.sum(wb * x.astype(jnp.float32), axis=0)
 
         partials = jax.tree_util.tree_map(part_leaf, new_params)
-        partials, wsum, tot, cnt, extras = lax.psum(
-            (
-                partials,
-                jnp.sum(w),
-                jnp.sum(mask * entry_losses),
-                jnp.sum(mask),
-                extras,
-            ),
-            axis,
+        reduced = (
+            partials,
+            jnp.sum(w),
+            jnp.sum(jnp.where(ok, entry_losses, jnp.zeros((), entry_losses.dtype))),
+            jnp.sum(ok.astype(jnp.float32)),
+            extras,
         )
+        if survivors_local is not None:
+            reduced = reduced + (survivors_local,)
+        reduced = lax.psum(reduced, axis)
+        partials, wsum, tot, cnt, extras = reduced[:5]
         inv = safe_div(jnp.float32(1.0), wsum)
         agg = jax.tree_util.tree_map(
             lambda part, x: (part * inv).astype(x.dtype), partials, new_params
         )
-        mean_loss = tot / jnp.maximum(cnt, 1.0)
+        mean_loss = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1.0), jnp.nan)
         masked_losses = jnp.where(mask > 0, entry_losses, jnp.nan)
-        return agg, masked_losses, mean_loss, extras
+        if survivors_local is None:
+            return agg, masked_losses, mean_loss, extras
+        return agg, masked_losses, mean_loss, extras, reduced[5]
 
-    def round_step(global_params, local_batches, local_weights, extras=None):
+    def round_step(
+        global_params, local_batches, local_weights, extras=None, guard_args=()
+    ):
         new_params, losses = _updates(
             global_params, local_batches, local_weights.shape[0]
         )
-        return _aggregate(new_params, losses, local_weights, extras)
+        if update_transform is None:
+            return _aggregate(new_params, losses, local_weights, extras)
+        new_params, w, losses, flagged = update_transform(
+            new_params, global_params, local_weights, losses, *guard_args
+        )
+        survivors_local = jnp.sum((w > 0).astype(jnp.int32))
+        agg, client_losses, mean_loss, extras, survivors = _aggregate(
+            new_params, losses, w, extras, survivors_local
+        )
+        return agg, client_losses, mean_loss, extras, flagged, survivors
 
     def slot_round_step(
-        global_params, slot_batches, local_weights, slot_index, extras=None
+        global_params, slot_batches, local_weights, slot_index, extras=None,
+        guard_args=(),
     ):
         new_params, losses = _updates(global_params, slot_batches, cap)
         slot_weights = jnp.take(local_weights, slot_index)
-        agg, slot_losses, mean_loss, extras = _aggregate(
-            new_params, losses, slot_weights, extras
-        )
+        if update_transform is not None:
+            new_params, slot_weights, losses, slot_flagged = update_transform(
+                new_params, global_params, slot_weights, losses, *guard_args
+            )
+            survivors_local = jnp.sum((slot_weights > 0).astype(jnp.int32))
+            agg, slot_losses, mean_loss, extras, survivors = _aggregate(
+                new_params, losses, slot_weights, extras, survivors_local
+            )
+        else:
+            agg, slot_losses, mean_loss, extras = _aggregate(
+                new_params, losses, slot_weights, extras
+            )
         # scatter slot losses back to resident layout; everything the slots
         # did not cover (and weight-0 padding slots) stays NaN by convention
         client_losses = (
@@ -274,7 +334,16 @@ def build_shard_cohort_round(
             .at[slot_index]
             .set(slot_losses)
         )
-        return agg, client_losses, mean_loss, extras
+        if update_transform is None:
+            return agg, client_losses, mean_loss, extras
+        # scatter flags the same way: padding slots carry weight 0, so they
+        # can never be flagged and the scatter stays collision-free
+        flagged = (
+            jnp.zeros(local_weights.shape, jnp.bool_)
+            .at[slot_index]
+            .set(slot_flagged)
+        )
+        return agg, client_losses, mean_loss, extras, flagged, survivors
 
     return round_step if cap is None else slot_round_step
 
@@ -287,6 +356,7 @@ def build_stale_shard_cohort_round(
     unroll=1,
     sequential_clients: bool = True,
     micro_batches: int = 1,
+    update_transform: Optional[Callable] = None,
 ) -> Callable[..., Tuple[PyTree, jax.Array, jax.Array, Any]]:
     """Bounded-staleness variant of :func:`build_shard_cohort_round`
     (DESIGN.md §9) — same residents, same local updates, same single psum,
@@ -315,18 +385,28 @@ def build_stale_shard_cohort_round(
     inner = build_shard_cohort_round(
         loss_fn, lr, axis, grad_clip=grad_clip, unroll=unroll,
         sequential_clients=sequential_clients, micro_batches=micro_batches,
+        update_transform=update_transform,
     )
 
     def round_step(
         param_hist, read_slot, stale_scale, local_batches, local_weights,
-        extras=None,
+        extras=None, guard_args=(),
     ):
+        # the guard's base params are the shard's *stale* ring read — update
+        # norms are measured against the params the clients actually trained
+        # from, and λ > 0 keeps the weight-0 ⟺ rejected/non-cohort
+        # convention intact under the staleness-decay scaling
         base = jax.tree_util.tree_map(
             lambda h: lax.dynamic_index_in_dim(h, read_slot, 0, keepdims=False),
             param_hist,
         )
+        if update_transform is None:
+            return inner(
+                base, local_batches, local_weights * stale_scale, extras=extras
+            )
         return inner(
-            base, local_batches, local_weights * stale_scale, extras=extras
+            base, local_batches, local_weights * stale_scale, extras=extras,
+            guard_args=guard_args,
         )
 
     return round_step

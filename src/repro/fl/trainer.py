@@ -92,6 +92,11 @@ def _cached_round_fn(cfg: FLConfig, loss_fn, accuracy_fn, strategy, mesh, client
         cfg.staleness_alpha,
         cfg.scenario,
         cfg.candidate_frac,
+        cfg.faults,
+        cfg.aggregator,
+        cfg.robust_norm_mult,
+        cfg.min_survivors,
+        cfg.quarantine_rounds,
         mesh,
         client_axis,
     )
@@ -311,6 +316,11 @@ class FLTrainer:
             param_hist=param_hist,
             shard_staleness=shard_staleness,
             candidates=candidates,
+            quarantine=(
+                jnp.zeros((cfg.num_clients,), jnp.int32)
+                if cfg.guarded()
+                else None
+            ),
         )
         if self.mesh is not None:
             state = engine_lib.shard_server_state(
@@ -369,6 +379,12 @@ class FLTrainer:
                     "candidate_frac requires a strategy with a pure "
                     "select_fn (the scanned engine path): the legacy host "
                     "loop is unfunneled"
+                )
+            if cfg.guarded():
+                raise ValueError(
+                    "faults / robust aggregation require a strategy with a "
+                    "pure select_fn (the scanned engine path): the legacy "
+                    "host loop has no fault-injection or quarantine layer"
                 )
             return self.run_legacy(rounds=rounds, progress=progress)
 

@@ -291,7 +291,9 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
                         cohort_cap: Optional[int] = None,
                         staleness_bound: Optional[int] = None,
                         scenario: Optional[str] = None,
-                        candidate_frac: Optional[float] = None) -> Dict:
+                        candidate_frac: Optional[float] = None,
+                        faults: Optional[str] = None,
+                        aggregator: str = "mean") -> Dict:
     """Prove the mesh-sharded federation engine (DESIGN.md §8) lowers and
     compiles at scale: C clients sharded over an N-device client mesh, the
     scanned round's local-update core as a shard_map with psum'd FedAvg.
@@ -318,6 +320,13 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
     spectral cache instead of C×C, selection draws in candidate space and
     gathers back to global ids — proving the funneled round (and its
     shard-local candidate-profile psum at init) lowers on the client mesh.
+
+    ``faults``/``aggregator`` compile the fault-tolerant variant (DESIGN.md
+    §11): jit-level fault draws sharded into the round, the update-validation
+    guard (finite screening + norm-outlier rejection against the shard-local
+    cohort median) inside the shard_map before the unchanged single psum,
+    quarantine counters carried in the scan, and the survivors-floor identity
+    round — the full robustness layer must lower on the client mesh.
     """
     import numpy as np
 
@@ -332,6 +341,8 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
         case = "fl_sharded_engine_stale"
     elif candidate_frac is not None:
         case = "fl_sharded_engine_funnel"
+    elif faults is not None or aggregator != "mean":
+        case = "fl_sharded_engine_faulty"
     rec: Dict = {
         "case": case,
         "mesh": f"{num_devices}x1({sh.CLIENT_AXIS})",
@@ -341,6 +352,8 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
         "staleness_bound": staleness_bound,
         "scenario": scenario,
         "candidate_frac": candidate_frac,
+        "faults": faults,
+        "aggregator": aggregator,
         "scan_rounds": rounds,
     }
     try:
@@ -363,7 +376,8 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
             local_epochs=2, lr=0.1, rounds=rounds, eval_every=rounds,
             num_classes=ncls, seed=0, cohort_cap=cohort_cap,
             staleness_bound=staleness_bound, scenario=scenario,
-            candidate_frac=candidate_frac,
+            candidate_frac=candidate_frac, faults=faults,
+            aggregator=aggregator,
         )
         strat = selection_lib.DPPSelection()
         state = engine_lib.init_server_state(
@@ -598,9 +612,10 @@ def main():
     if args.fl_sharded:
         # resident-mode round, the capacity-slot variant on a k ≪ C_loc
         # cohort (cap = min(C/N, k)), the bounded-staleness variant (ring
-        # buffer + counters under heavy-tail latency, DESIGN.md §9), and the
-        # two-stage funnel variant (Q×Q candidate kernel, DESIGN.md §10)
-        # — all four must lower and compile
+        # buffer + counters under heavy-tail latency, DESIGN.md §9), the
+        # two-stage funnel variant (Q×Q candidate kernel, DESIGN.md §10),
+        # and the fault-tolerant variant (chaos faults + trimmed_mean guard,
+        # DESIGN.md §11) — all five must lower and compile
         recs = [
             run_fl_sharded_case(num_devices=args.fl_devices),
             run_fl_sharded_case(
@@ -617,6 +632,11 @@ def main():
                 num_devices=args.fl_devices,
                 candidate_frac=args.fl_candidate_frac,
             ),
+            run_fl_sharded_case(
+                num_devices=args.fl_devices,
+                faults="chaos",
+                aggregator="trimmed_mean",
+            ),
         ]
         any_fail = False
         for rec in recs:
@@ -632,6 +652,8 @@ def main():
                    if stale is not None else "")
                 + (f" Q={rec.get('candidates')}({frac})"
                    if frac is not None else "")
+                + (f" faults={rec['faults']}/{rec['aggregator']}"
+                   if rec.get("faults") is not None else "")
                 + f" {rec['total_s']:7.1f}s"
                 + ("" if rec["ok"] else f"  {rec['error'][:120]}")
             )

@@ -20,12 +20,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim as optim_lib
-from repro.checkpoint import save
+from repro.checkpoint import latest_step, save
 from repro.configs import ARCH_NAMES, get_arch
 from repro.core import make_strategy
 from repro.data import make_token_dataset
 from repro.fl import engine as engine_lib
 from repro.fl import rounds as rounds_lib
+from repro.fl.faults import AGGREGATORS, FAULT_NAMES
 from repro.fl.scenarios import SCENARIO_NAMES
 from repro.fl.staleness import DECAY_FAMILIES
 from repro.launch.mesh import make_client_mesh
@@ -83,6 +84,14 @@ def run_fl(args):
     candidates, and the eq.-(14) kernel + k-DPP spectral cache live on the
     Q×Q block — the O(C³) eigh and the C×C Gram never happen (the
     million-client regime).  Composes with every flag above.
+
+    ``--faults NAME`` injects the named fault model (DESIGN.md §11):
+    per-client dropout, NaN/garbage/sign-flip corruption, shard blackout.
+    ``--aggregator {mean,clipped_mean,trimmed_mean}`` picks the robust
+    aggregation mode that screens/clips the faulty updates.  With
+    ``--ckpt-every N`` and ``--ckpt DIR`` the full ``ServerState`` snapshots
+    every N rounds and a re-launch resumes bit-identically from the latest
+    snapshot.
     """
     mesh = None
     shard_clients = getattr(args, "shard_clients", 0)
@@ -99,6 +108,8 @@ def run_fl(args):
         raise SystemExit("--cohort-cap requires --shard-clients")
     elif staleness_bound is not None:
         raise SystemExit("--staleness-bound requires --shard-clients")
+    if getattr(args, "ckpt_every", None) is not None and not args.ckpt:
+        raise SystemExit("--ckpt-every requires --ckpt DIR")
     spec = get_arch(args.arch)
     cfg = spec.model.reduced(param_dtype="float32", dtype="float32", remat=False)
     params = T.init_params(jax.random.key(args.seed), cfg)
@@ -137,6 +148,9 @@ def run_fl(args):
         staleness_alpha=getattr(args, "staleness_alpha", 0.5),
         scenario=getattr(args, "scenario", None),
         candidate_frac=getattr(args, "candidate_frac", None),
+        faults=getattr(args, "faults", None),
+        aggregator=getattr(args, "aggregator", "mean"),
+        ckpt_every=getattr(args, "ckpt_every", None),
     )
     state = engine_lib.init_server_state(
         flcfg, params, loss_fn, None, clients, topics,
@@ -148,14 +162,48 @@ def run_fl(args):
               f"Q={flcfg.candidate_count()} candidates "
               f"(kernel {state.kernel.shape})")
     round_fn = engine_lib.make_round_fn(flcfg, loss_fn, (strategy,), mesh=mesh)
-    state, outs = engine_lib.run_scanned(round_fn, state, args.rounds, mesh=mesh)
-    sels = np.asarray(outs["selected"])
-    losses = np.asarray(outs["loss"])
-    gemds = np.asarray(outs["gemd"])
-    for t in range(1, args.rounds + 1):
+    # crash-resume (DESIGN.md §11): with --ckpt-every the checkpoint dir
+    # holds full ServerState snapshots, so a re-launch picks up from the
+    # latest one and runs only the remaining rounds — bit-identical to an
+    # uninterrupted run
+    start = 0
+    if flcfg.ckpt_every is not None and args.ckpt:
+        step = latest_step(args.ckpt)
+        if step is not None:
+            state = engine_lib.restore_server_state(args.ckpt, state, step=step)
+            if mesh is not None:
+                state = engine_lib.shard_server_state(state, mesh)
+            start = int(jax.device_get(state.round))
+            print(f"[fl:{args.selection}] resumed round {start} from "
+                  f"{args.ckpt}/step_{step:08d}")
+    remaining = max(args.rounds - start, 0)
+    if flcfg.ckpt_every is not None and args.ckpt:
+        state, outs = engine_lib.run_checkpointed(
+            round_fn, state, remaining, ckpt_dir=args.ckpt,
+            ckpt_every=flcfg.ckpt_every, mesh=mesh,
+        )
+    else:
+        state, outs = engine_lib.run_scanned(round_fn, state, remaining, mesh=mesh)
+    sels = np.asarray(outs["selected"]) if remaining else np.zeros((0, 0), int)
+    losses = np.asarray(outs["loss"]) if remaining else np.zeros((0,))
+    gemds = np.asarray(outs["gemd"]) if remaining else np.zeros((0,))
+    rnds = np.asarray(outs["round"]).astype(int) if remaining else np.zeros((0,), int)
+    for i, t in enumerate(rnds):
         if t % args.log_every == 0 or t == args.rounds:
-            print(f"[fl:{args.selection}] round {t:4d} sel={sels[t - 1].tolist()} "
-                  f"loss={losses[t - 1]:.4f} gemd={gemds[t - 1]:.3f}")
+            print(f"[fl:{args.selection}] round {t:4d} sel={sels[i].tolist()} "
+                  f"loss={losses[i]:.4f} gemd={gemds[i]:.3f}")
+    if flcfg.guarded() and remaining:
+        # NaN-aware summary: identity rounds and corrupt cohorts report NaN
+        # round means by convention — they must not poison the run summary
+        surv = np.asarray(outs["survivors"])
+        best = (f"{np.nanmin(losses):.4f}" if np.isfinite(losses).any()
+                else "n/a (no finite round losses)")
+        print(f"[fl:{args.selection}] faults={flcfg.faults or 'none'} "
+              f"aggregator={flcfg.aggregator}: "
+              f"mean survivors {surv.mean():.1f}/{args.per_round}, "
+              f"flagged {int(np.asarray(outs['flagged']).sum())}, "
+              f"identity rounds {int(np.asarray(outs['identity_round']).sum())}, "
+              f"best finite loss {best}")
     if "sim_time" in outs:
         sim = np.asarray(outs["sim_time"])
         mode = ("bounded-staleness" if staleness_bound is not None
@@ -164,7 +212,9 @@ def run_fl(args):
               f"simulated wall clock {sim.sum():.2f} "
               f"(mean round {sim.mean():.2f})")
     params = state.params
-    if args.ckpt:
+    if args.ckpt and flcfg.ckpt_every is None:
+        # legacy raw-params snapshot; with --ckpt-every the dir already holds
+        # full ServerState snapshots (run_checkpointed) at these steps
         save(args.ckpt, args.rounds, params)
         print(f"checkpoint -> {args.ckpt}")
     return params
@@ -239,6 +289,18 @@ def main():
                          "Q = F*C prefilter candidates and run the DPP on "
                          "the QxQ block only (F in (0, 1]; 1.0 is "
                          "bit-identical to no funnel)")
+    ap.add_argument("--faults", choices=FAULT_NAMES, default=None,
+                    help="fault-injection model (DESIGN.md §11): per-client "
+                         "dropout, NaN/garbage/sign-flip corruption, shard "
+                         "blackout — drawn jit-level off the carried key")
+    ap.add_argument("--aggregator", choices=AGGREGATORS, default="mean",
+                    help="aggregation mode: mean (eq. 6), clipped_mean "
+                         "(norm-clip outliers to the cohort-median "
+                         "threshold), trimmed_mean (reject outliers)")
+    ap.add_argument("--ckpt-every", type=int, default=None,
+                    help="snapshot the full ServerState to --ckpt every N "
+                         "rounds; a re-launch resumes from the latest "
+                         "snapshot bit-identically (requires --ckpt)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     (run_fl if args.mode == "fl" else run_pretrain)(args)

@@ -1,0 +1,95 @@
+"""Checkpoint save/restore contracts.
+
+The regression this pins: ``checkpoint.restore`` used to unflatten whatever
+arrays it found against the template's treedef — a snapshot from a different
+config (different leaf count / shapes / dtypes) silently became garbage
+state.  Now every mismatch raises a descriptive ``ValueError``.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+
+
+def _tree():
+    return {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": jnp.ones((4,), jnp.float32),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    path = checkpoint.save(str(tmp_path), 3, tree)
+    assert os.path.isdir(path)
+    out = checkpoint.restore(str(tmp_path), tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_latest_step(tmp_path):
+    assert checkpoint.latest_step(str(tmp_path)) is None
+    tree = _tree()
+    checkpoint.save(str(tmp_path), 2, tree)
+    checkpoint.save(str(tmp_path), 10, tree)
+    assert checkpoint.latest_step(str(tmp_path)) == 10
+    with pytest.raises(FileNotFoundError):
+        checkpoint.restore(str(tmp_path / "empty"), tree)
+
+
+def test_restore_rejects_leaf_count_mismatch(tmp_path):
+    checkpoint.save(str(tmp_path), 1, _tree())
+    smaller = {"w": jnp.zeros((3, 4), jnp.float32)}
+    with pytest.raises(ValueError, match="leaves"):
+        checkpoint.restore(str(tmp_path), smaller)
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    checkpoint.save(str(tmp_path), 1, _tree())
+    other = dict(_tree(), w=jnp.zeros((4, 3), jnp.float32))  # same size!
+    with pytest.raises(ValueError, match="shape"):
+        checkpoint.restore(str(tmp_path), other)
+
+
+def test_restore_rejects_dtype_mismatch(tmp_path):
+    checkpoint.save(str(tmp_path), 1, _tree())
+    other = dict(_tree(), b=jnp.ones((4,), jnp.int32))
+    with pytest.raises(ValueError, match="dtype"):
+        checkpoint.restore(str(tmp_path), other)
+
+
+def test_restore_rejects_corrupt_meta(tmp_path):
+    tree = _tree()
+    path = checkpoint.save(str(tmp_path), 1, tree)
+    meta_path = os.path.join(path, "tree.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["num_leaves"] = 99
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="corrupt checkpoint"):
+        checkpoint.restore(str(tmp_path), tree)
+
+
+def test_restore_rejects_meta_shape_drift(tmp_path):
+    # tree.json disagreeing with arrays.npz is corruption even when the
+    # arrays happen to match the template
+    tree = _tree()
+    path = checkpoint.save(str(tmp_path), 1, tree)
+    meta_path = os.path.join(path, "tree.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["shapes"][0] = [999]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="corrupt checkpoint"):
+        checkpoint.restore(str(tmp_path), tree)

@@ -1,0 +1,477 @@
+"""Fault-injection + robust-aggregation engine (DESIGN.md §11).
+
+Pure pieces (the fault registry, draw determinism/precedence, config
+validation, checkpoint-resume parity, quarantine feedback) are tier-1: they
+run on one device.  The sharded variants (guard inside the shard_map,
+blackout, slot/stale composition) run under the CI ``multidevice`` job
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import selection as selection_lib
+from repro.fl import engine, faults
+from repro.launch.mesh import make_client_mesh
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+FEAT, N_C, NCLS = 8, 6, 4
+
+
+def linear_loss(params, x, y):
+    logp = jax.nn.log_softmax(x @ params["w"] + params["b"])
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+
+def _federation(c, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(c, N_C, FEAT)).astype(np.float32))
+    ys = jnp.asarray(rng.integers(0, NCLS, size=(c, N_C)), jnp.int32)
+    params = {
+        "w": jnp.asarray(0.01 * rng.normal(size=(FEAT, NCLS)).astype(np.float32)),
+        "b": jnp.zeros((NCLS,), jnp.float32),
+    }
+    return xs, ys, params
+
+
+def _state_and_cfg(c, k, strategy, mesh=None, rounds=8, **cfg_kw):
+    xs, ys, params = _federation(c)
+    cfg = engine.FLConfig(
+        num_clients=c, clients_per_round=k, local_epochs=2, lr=0.1,
+        rounds=rounds, eval_every=2, num_classes=NCLS, seed=0, **cfg_kw,
+    )
+    state = engine.init_server_state(
+        cfg, params, linear_loss, None, xs, ys,
+        strategy=strategy, profiles=xs.mean(axis=1), mesh=mesh,
+    )
+    return cfg, state
+
+
+def _run(cfg, state, rounds, mesh=None):
+    rf = engine.make_round_fn(cfg, linear_loss, (selection_lib.UniformSelection(),),
+                              mesh=mesh)
+    fin, outs = engine.run_scanned(rf, state, rounds)
+    return fin, jax.tree_util.tree_map(np.asarray, outs)
+
+
+def _max_param_diff(a, b):
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+# ------------------------------------------------------------ registry
+
+
+def test_unknown_fault_model_lists_known():
+    with pytest.raises(ValueError) as e:
+        faults.get_fault_model("nope")
+    msg = str(e.value)
+    for name in faults.FAULT_NAMES:
+        assert name in msg
+
+
+def test_all_registry_names_resolve():
+    assert faults.FAULT_NAMES == tuple(sorted(faults.FAULT_MODELS))
+    for name in faults.FAULT_NAMES:
+        m = faults.get_fault_model(name)
+        assert m.name == name
+
+
+@pytest.mark.parametrize("bad", [
+    dict(dropout=1.5), dict(nan=-0.1), dict(garbage_scale=0.0),
+    dict(lemon_frac=2.0), dict(lemon_mode="weird"),
+])
+def test_fault_model_validation(bad):
+    with pytest.raises(ValueError):
+        faults.FaultModel(name="x", **bad)
+
+
+def test_lemon_mask_deterministic_count():
+    m = faults.FaultModel(name="x", lemon_frac=0.25)
+    mask = faults.lemon_mask(m, 16)
+    assert mask.shape == (16,)
+    assert mask.dtype == jnp.bool_
+    assert int(mask.sum()) == 4
+    assert bool(jnp.array_equal(mask, faults.lemon_mask(m, 16)))
+    # at least one lemon even when the fraction rounds to zero
+    tiny = faults.FaultModel(name="y", lemon_frac=0.01)
+    assert int(faults.lemon_mask(tiny, 8).sum()) == 1
+
+
+def test_draw_round_faults_determinism_and_precedence():
+    m = faults.get_fault_model("chaos")
+    key = jax.random.key(0)
+    d1 = faults.draw_round_faults(key, m, 32, num_shards=4)
+    d2 = faults.draw_round_faults(key, m, 32, num_shards=4)
+    for a, b in zip(d1, d2):
+        assert a.shape == (32,) and a.dtype == jnp.bool_
+        assert bool(jnp.array_equal(a, b))
+    delivered, nan_m, garb_m, flip_m = (np.asarray(x) for x in d1)
+    # corruption categories are disjoint and only hit delivered clients
+    assert not np.any(nan_m & garb_m)
+    assert not np.any(nan_m & flip_m)
+    assert not np.any(garb_m & flip_m)
+    for mask in (nan_m, garb_m, flip_m):
+        assert not np.any(mask & ~delivered)
+    other = faults.draw_round_faults(jax.random.key(1), m, 32, num_shards=4)
+    assert any(not bool(jnp.array_equal(a, b)) for a, b in zip(d1, other))
+
+
+def test_fault_free_model_draws_nothing():
+    m = faults.FaultModel(name="calm")
+    d = faults.draw_round_faults(jax.random.key(0), m, 16)
+    assert bool(d.delivered.all())
+    assert not bool(d.nan.any() | d.garbage.any() | d.sign_flip.any())
+
+
+# ------------------------------------------------------- config contract
+
+
+@pytest.mark.parametrize("bad", [
+    dict(aggregator="median"),
+    dict(faults="nope"),
+    dict(faults="corrupt", robust_norm_mult=0.0),
+    dict(faults="corrupt", min_survivors=0),
+    dict(faults="corrupt", min_survivors=99),
+    dict(faults="corrupt", quarantine_rounds=-1),
+    dict(ckpt_every=0),
+])
+def test_flconfig_rejects_bad_fault_config(bad):
+    with pytest.raises(ValueError):
+        engine.FLConfig(
+            num_clients=8, clients_per_round=4, local_epochs=1, lr=0.1,
+            rounds=4, eval_every=2, num_classes=NCLS, seed=0, **bad,
+        )
+
+
+def test_zero_fault_state_has_no_quarantine_field():
+    cfg, state = _state_and_cfg(8, 4, selection_lib.UniformSelection())
+    assert state.quarantine is None
+    _, outs = _run(cfg, state, 4)
+    assert "survivors" not in outs and "flagged" not in outs
+
+
+def test_guarded_state_carries_quarantine():
+    cfg, state = _state_and_cfg(
+        8, 4, selection_lib.UniformSelection(), faults="corrupt",
+        aggregator="trimmed_mean",
+    )
+    assert state.quarantine is not None
+    assert state.quarantine.shape == (8,)
+    assert state.quarantine.dtype == jnp.int32
+
+
+# --------------------------------------------------- engine fault behavior
+
+
+def test_total_dropout_is_identity_rounds(monkeypatch):
+    monkeypatch.setitem(
+        faults.FAULT_MODELS, "all_drop",
+        faults.FaultModel(name="all_drop", dropout=1.0),
+    )
+    cfg, state = _state_and_cfg(
+        8, 4, selection_lib.UniformSelection(), faults="all_drop",
+    )
+    fin, outs = _run(cfg, state, 4)
+    assert np.all(outs["survivors"] == 0)
+    assert np.all(outs["identity_round"] == 1)
+    assert np.all(np.isnan(outs["loss"]))  # no cohort, no round mean
+    assert _max_param_diff(fin.params, state.params) == 0.0
+
+
+def test_total_nan_trimmed_floors_to_identity(monkeypatch):
+    monkeypatch.setitem(
+        faults.FAULT_MODELS, "all_nan",
+        faults.FaultModel(name="all_nan", nan=1.0),
+    )
+    cfg, state = _state_and_cfg(
+        8, 4, selection_lib.UniformSelection(), faults="all_nan",
+        aggregator="trimmed_mean", quarantine_rounds=0,
+    )
+    fin, outs = _run(cfg, state, 4)
+    assert np.all(outs["survivors"] == 0)
+    assert np.all(outs["identity_round"] == 1)
+    assert np.all(outs["flagged"] == 4)  # whole cohort screened out
+    assert _max_param_diff(fin.params, state.params) == 0.0
+
+
+def test_total_nan_plain_mean_poisons_params(monkeypatch):
+    # the unprotected control: with aggregator="mean" the guard screens
+    # nothing, so one NaN cohort destroys the params — exactly the failure
+    # mode the robust modes exist for
+    monkeypatch.setitem(
+        faults.FAULT_MODELS, "all_nan",
+        faults.FaultModel(name="all_nan", nan=1.0),
+    )
+    cfg, state = _state_and_cfg(
+        8, 4, selection_lib.UniformSelection(), faults="all_nan",
+        aggregator="mean",
+    )
+    fin, outs = _run(cfg, state, 2)
+    assert not np.isfinite(
+        np.asarray(jax.tree_util.tree_leaves(fin.params)[0])
+    ).all()
+    assert np.all(np.isnan(outs["loss"]))  # NaN-aware mean: no finite entry
+
+
+def test_corrupt_trimmed_stays_finite_and_quarantines():
+    cfg, state = _state_and_cfg(
+        12, 6, selection_lib.UniformSelection(), faults="corrupt",
+        aggregator="trimmed_mean", rounds=12,
+    )
+    fin, outs = _run(cfg, state, 12)
+    for leaf in jax.tree_util.tree_leaves(fin.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert np.isfinite(outs["loss"]).any()
+    assert np.all(outs["survivors"] <= 6)
+    # flagged clients entered quarantine at some point
+    if outs["flagged"].sum() > 0:
+        assert outs["quarantined"].max() > 0
+
+
+def test_quarantine_prevents_lemon_reselection():
+    c, k, rounds = 12, 4, 16
+    model = faults.get_fault_model("lemons")
+    lemons = np.nonzero(np.asarray(faults.lemon_mask(model, c)))[0]
+    cfg, state = _state_and_cfg(
+        c, k, selection_lib.UniformSelection(), faults="lemons",
+        aggregator="trimmed_mean", quarantine_rounds=10 * rounds,
+        rounds=rounds,
+    )
+    _, outs = _run(cfg, state, rounds)
+    sel = outs["selected"].reshape(-1)
+    for lem in lemons:
+        assert int(np.sum(sel == lem)) <= 1
+    # the contrast: cooldown 0 clears the counter the same round it is set,
+    # so lemons keep getting drawn
+    cfg0, state0 = _state_and_cfg(
+        c, k, selection_lib.UniformSelection(), faults="lemons",
+        aggregator="trimmed_mean", quarantine_rounds=0, rounds=rounds,
+    )
+    _, outs0 = _run(cfg0, state0, rounds)
+    sel0 = outs0["selected"].reshape(-1)
+    assert max(int(np.sum(sel0 == lem)) for lem in lemons) > 1
+
+
+def test_quarantine_counter_decays():
+    cfg, state = _state_and_cfg(
+        12, 6, selection_lib.UniformSelection(), faults="lemons",
+        aggregator="trimmed_mean", quarantine_rounds=3, rounds=16,
+    )
+    fin, outs = _run(cfg, state, 16)
+    q = outs["quarantined"]
+    # a lemon gets flagged (counter 3), then the count decays back to zero
+    # within the cooldown unless re-flagged; by the end every counter is
+    # bounded by the cooldown
+    assert int(np.asarray(fin.quarantine).max()) <= 3
+
+
+def test_guard_without_faults_keeps_clean_cohorts():
+    # robust aggregation on a fault-free federation: nothing to screen, all
+    # survivors, loss finite every round
+    cfg, state = _state_and_cfg(
+        8, 4, selection_lib.UniformSelection(), aggregator="clipped_mean",
+    )
+    fin, outs = _run(cfg, state, 6)
+    assert np.all(outs["survivors"] == 4)
+    assert np.isfinite(outs["loss"]).all()
+    assert np.all(outs["identity_round"] == 0)
+
+
+def test_engine_run_is_deterministic_under_faults():
+    cfg, s1 = _state_and_cfg(
+        10, 4, selection_lib.UniformSelection(), faults="chaos",
+        aggregator="trimmed_mean",
+    )
+    _, s2 = _state_and_cfg(
+        10, 4, selection_lib.UniformSelection(), faults="chaos",
+        aggregator="trimmed_mean",
+    )
+    f1, o1 = _run(cfg, s1, 6)
+    f2, o2 = _run(cfg, s2, 6)
+    assert np.array_equal(o1["selected"], o2["selected"])
+    assert _max_param_diff(f1.params, f2.params) == 0.0
+
+
+# --------------------------------------------------- checkpoint / resume
+
+
+def test_checkpoint_resume_bit_parity(tmp_path):
+    cfg, state = _state_and_cfg(
+        10, 4, selection_lib.UniformSelection(), faults="corrupt",
+        aggregator="trimmed_mean",
+    )
+    rf = engine.make_round_fn(cfg, linear_loss, (selection_lib.UniformSelection(),))
+    full, outs_full = engine.run_scanned(rf, state, 6)
+
+    half, _ = engine.run_scanned(rf, state, 3)
+    engine.save_server_state(str(tmp_path), half)
+    restored = engine.restore_server_state(str(tmp_path), half)
+    resumed, outs_tail = engine.run_scanned(rf, restored, 3)
+
+    assert _max_param_diff(full.params, resumed.params) == 0.0
+    assert bool(jnp.array_equal(full.quarantine, resumed.quarantine))
+    assert bool(jnp.array_equal(full.losses, resumed.losses))
+    assert int(resumed.round) == 6
+    tail = np.asarray(outs_full["selected"])[3:]
+    assert np.array_equal(tail, np.asarray(outs_tail["selected"]))
+
+
+def test_checkpoint_resume_clean_config(tmp_path):
+    # resume parity is not a faults-only property: the plain engine state
+    # (typed PRNG key included) must round-trip bit-identically too
+    cfg, state = _state_and_cfg(8, 4, selection_lib.UniformSelection())
+    rf = engine.make_round_fn(cfg, linear_loss, (selection_lib.UniformSelection(),))
+    full, _ = engine.run_scanned(rf, state, 4)
+    half, _ = engine.run_scanned(rf, state, 2)
+    engine.save_server_state(str(tmp_path), half)
+    restored = engine.restore_server_state(str(tmp_path), half)
+    resumed, _ = engine.run_scanned(rf, restored, 2)
+    assert _max_param_diff(full.params, resumed.params) == 0.0
+
+
+def test_restore_server_state_rejects_other_config(tmp_path):
+    cfg, state = _state_and_cfg(8, 4, selection_lib.UniformSelection())
+    engine.save_server_state(str(tmp_path), state)
+    _, other = _state_and_cfg(12, 4, selection_lib.UniformSelection())
+    with pytest.raises(ValueError):
+        engine.restore_server_state(str(tmp_path), other)
+
+
+def test_run_checkpointed_matches_run_scanned(tmp_path):
+    cfg, state = _state_and_cfg(
+        10, 4, selection_lib.UniformSelection(), faults="corrupt",
+        aggregator="clipped_mean",
+    )
+    rf = engine.make_round_fn(cfg, linear_loss, (selection_lib.UniformSelection(),))
+    ref_state, ref_outs = engine.run_scanned(rf, state, 7)
+    ck_state, ck_outs = engine.run_checkpointed(
+        rf, state, 7, ckpt_dir=str(tmp_path), ckpt_every=3,
+    )
+    assert _max_param_diff(ref_state.params, ck_state.params) == 0.0
+    for k in ref_outs:
+        a, b = np.asarray(ref_outs[k]), np.asarray(ck_outs[k])
+        eq_nan = np.issubdtype(a.dtype, np.floating)
+        assert np.array_equal(a, b, equal_nan=eq_nan), k
+    # snapshots at the segment boundaries: rounds 3, 6, 7
+    import os
+
+    steps = sorted(os.listdir(str(tmp_path)))
+    assert steps == ["step_00000003", "step_00000006", "step_00000007"]
+
+
+def test_run_checkpointed_without_dir_is_run_scanned():
+    cfg, state = _state_and_cfg(8, 4, selection_lib.UniformSelection())
+    rf = engine.make_round_fn(cfg, linear_loss, (selection_lib.UniformSelection(),))
+    a, outs_a = engine.run_scanned(rf, state, 3)
+    b, outs_b = engine.run_checkpointed(rf, state, 3)
+    assert _max_param_diff(a.params, b.params) == 0.0
+    assert np.array_equal(np.asarray(outs_a["selected"]),
+                          np.asarray(outs_b["selected"]))
+
+
+# ------------------------------------------------------------- sharded
+
+
+@multidevice
+def test_sharded_zero_fault_parity():
+    # the acceptance contract: a zero-fault mean config through the new
+    # engine build is the SAME program as before — sharded and single-device
+    # runs still agree (bit-identical cohorts, fp32-close params)
+    c = jax.device_count() * 2
+    mesh = make_client_mesh(jax.device_count())
+    cfg, st1 = _state_and_cfg(c, 4, selection_lib.UniformSelection())
+    f1, o1 = _run(cfg, st1, 6)
+    _, stm = _state_and_cfg(c, 4, selection_lib.UniformSelection(), mesh=mesh)
+    fm, om = _run(cfg, stm, 6, mesh=mesh)
+    assert np.array_equal(o1["selected"], om["selected"])
+    assert _max_param_diff(f1.params, fm.params) < 1e-5
+
+
+@multidevice
+def test_sharded_faulty_run_stays_finite():
+    c = jax.device_count() * 2
+    mesh = make_client_mesh(jax.device_count())
+    cfg, state = _state_and_cfg(
+        c, 4, selection_lib.UniformSelection(), mesh=mesh, faults="corrupt",
+        aggregator="trimmed_mean",
+    )
+    fin, outs = _run(cfg, state, 8, mesh=mesh)
+    for leaf in jax.tree_util.tree_leaves(fin.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert np.all(outs["survivors"] <= 4)
+
+
+@multidevice
+def test_sharded_total_blackout_is_identity(monkeypatch):
+    monkeypatch.setitem(
+        faults.FAULT_MODELS, "dark",
+        faults.FaultModel(name="dark", shard_blackout=1.0),
+    )
+    c = jax.device_count() * 2
+    mesh = make_client_mesh(jax.device_count())
+    cfg, state = _state_and_cfg(
+        c, 4, selection_lib.UniformSelection(), mesh=mesh, faults="dark",
+    )
+    fin, outs = _run(cfg, state, 4, mesh=mesh)
+    assert np.all(outs["survivors"] == 0)
+    assert np.all(outs["identity_round"] == 1)
+    assert _max_param_diff(fin.params, state.params) == 0.0
+
+
+@multidevice
+def test_slot_mode_faulty_run():
+    c = jax.device_count() * 4
+    mesh = make_client_mesh(jax.device_count())
+    cfg, state = _state_and_cfg(
+        c, 4, selection_lib.UniformSelection(), mesh=mesh, faults="corrupt",
+        aggregator="clipped_mean", cohort_cap=4,
+    )
+    fin, outs = _run(cfg, state, 6, mesh=mesh)
+    for leaf in jax.tree_util.tree_leaves(fin.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert np.all(outs["survivors"] <= 4)
+
+
+@multidevice
+def test_stale_mode_faulty_run():
+    c = jax.device_count() * 2
+    mesh = make_client_mesh(jax.device_count())
+    cfg, state = _state_and_cfg(
+        c, 4, selection_lib.UniformSelection(), mesh=mesh, faults="corrupt",
+        aggregator="trimmed_mean", scenario="heavy_tail", staleness_bound=2,
+    )
+    fin, outs = _run(cfg, state, 8, mesh=mesh)
+    for leaf in jax.tree_util.tree_leaves(fin.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert "sim_time" in outs and "survivors" in outs
+
+
+@multidevice
+def test_sharded_checkpoint_resume_parity(tmp_path):
+    c = jax.device_count() * 2
+    mesh = make_client_mesh(jax.device_count())
+    cfg, state = _state_and_cfg(
+        c, 4, selection_lib.UniformSelection(), mesh=mesh, faults="chaos",
+        aggregator="trimmed_mean",
+    )
+    rf = engine.make_round_fn(cfg, linear_loss, (selection_lib.UniformSelection(),),
+                              mesh=mesh)
+    full, _ = engine.run_scanned(rf, state, 6)
+    half, _ = engine.run_scanned(rf, state, 3)
+    engine.save_server_state(str(tmp_path), half)
+    restored = engine.restore_server_state(str(tmp_path), half)
+    restored = engine.shard_server_state(restored, mesh)
+    resumed, _ = engine.run_scanned(rf, restored, 3)
+    assert _max_param_diff(full.params, resumed.params) == 0.0
+    assert bool(jnp.array_equal(full.quarantine, resumed.quarantine))

@@ -28,6 +28,33 @@ def test_fl_driver_selects_and_learns():
     assert all(np.isfinite(np.asarray(l, np.float32)).all() for l in leaves)
 
 
+def test_fl_driver_faults_and_crash_resume(tmp_path, capsys):
+    """--faults/--aggregator drive the guarded engine, and --ckpt-every +
+    --ckpt give crash-resume: a second launch picks up from the latest
+    ServerState snapshot and finishes the remaining rounds."""
+    import os
+
+    kw = dict(
+        arch="smollm-360m", selection="fedavg", clients=6,
+        per_round=3, docs_per_client=6, local_steps=1, local_batch=2,
+        seq=32, seed=0, log_every=100, ckpt=str(tmp_path),
+        faults="corrupt", aggregator="trimmed_mean", ckpt_every=2,
+    )
+    train_mod.run_fl(_Args(rounds=4, **kw))
+    first = capsys.readouterr().out
+    assert "faults=corrupt" in first and "aggregator=trimmed_mean" in first
+    assert sorted(os.listdir(str(tmp_path))) == [
+        "step_00000002", "step_00000004",
+    ]
+
+    params = train_mod.run_fl(_Args(rounds=6, **kw))
+    out = capsys.readouterr().out
+    assert "resumed round 4" in out
+    assert "step_00000006" in sorted(os.listdir(str(tmp_path)))
+    leaves = jax.tree_util.tree_leaves(params)
+    assert all(np.isfinite(np.asarray(l, np.float32)).all() for l in leaves)
+
+
 def test_pretrain_driver_loss_decreases(capsys):
     args = _Args(
         arch="smollm-360m", steps=30, local_batch=4, seq=32, seed=0,

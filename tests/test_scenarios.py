@@ -1,0 +1,78 @@
+"""Direct contracts of the scenario registry (DESIGN.md §9).
+
+Until now ``repro.fl.scenarios`` was only exercised through the staleness
+engine; these tests pin its own API: registry error paths, PRNG determinism
+(same key, same draw), and the shape/dtype contracts the jit-level engine
+call sites rely on (``latency(key, n) -> (n,) float32 > 0``,
+``availability(key, t, n) -> (n,) bool``).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl import scenarios
+
+
+def test_get_scenario_unknown_name_lists_known():
+    with pytest.raises(ValueError) as e:
+        scenarios.get_scenario("nope")
+    msg = str(e.value)
+    assert "nope" in msg
+    for name in scenarios.SCENARIO_NAMES:
+        assert name in msg
+
+
+def test_all_registry_names_resolve():
+    assert scenarios.SCENARIO_NAMES == tuple(sorted(scenarios.SCENARIOS))
+    for name in scenarios.SCENARIO_NAMES:
+        s = scenarios.get_scenario(name)
+        assert s.name == name
+        assert s.deadline > 0
+        assert callable(s.latency)
+
+
+@pytest.mark.parametrize("name", scenarios.SCENARIO_NAMES)
+def test_latency_contract(name):
+    s = scenarios.get_scenario(name)
+    key = jax.random.key(7)
+    lat = s.latency(key, 33)
+    assert lat.shape == (33,)
+    assert lat.dtype == jnp.float32
+    assert bool(jnp.all(lat > 0))
+    assert bool(jnp.all(jnp.isfinite(lat)))
+    # same key -> same draw (the scanned engine's reproducibility contract)
+    again = s.latency(key, 33)
+    assert bool(jnp.array_equal(lat, again))
+    # different key -> different draw (not a constant function)
+    other = s.latency(jax.random.key(8), 33)
+    assert not bool(jnp.array_equal(lat, other))
+
+
+def test_latency_jit_compatible():
+    s = scenarios.get_scenario("heavy_tail")
+    fn = jax.jit(lambda k: s.latency(k, 16))
+    assert bool(jnp.array_equal(fn(jax.random.key(3)), s.latency(jax.random.key(3), 16)))
+
+
+def test_availability_contract():
+    s = scenarios.get_scenario("flaky")
+    assert s.availability is not None
+    key = jax.random.key(11)
+    m = s.availability(key, jnp.asarray(4, jnp.int32), 40)
+    assert m.shape == (40,)
+    assert m.dtype == jnp.bool_
+    assert bool(jnp.array_equal(m, s.availability(key, jnp.asarray(4, jnp.int32), 40)))
+    # the diurnal model is time-varying: the same key at different rounds
+    # must not produce one frozen mask
+    masks = [
+        np.asarray(s.availability(key, jnp.asarray(t, jnp.int32), 40))
+        for t in range(8)
+    ]
+    assert any(not np.array_equal(masks[0], m) for m in masks[1:])
+
+
+def test_latency_only_scenarios_have_no_availability():
+    for name in ("uniform", "lognormal", "heavy_tail"):
+        assert scenarios.get_scenario(name).availability is None
