@@ -112,6 +112,16 @@ def _cohort_metrics(payload: Dict):
     return out, payload.get("host_cores")
 
 
+def _algo_metrics(payload: Dict):
+    # local-algorithm axis (DESIGN.md §12): scan throughput per algorithm
+    # row — the registry indirection must stay free for fedavg, and the
+    # stateful feddyn rows must not silently blow up the round program
+    out = {}
+    for row, rps in payload.get("throughput_rounds_per_sec", {}).items():
+        out[f"algo_rounds_per_sec.{row}"] = float(rps)
+    return out, payload.get("host_cores")
+
+
 # every smoke bench JSON the gate knows how to read; a file listed here that
 # exists in baselines/ but was not produced by the current run is itself a
 # failure (the harness rotted)
@@ -120,6 +130,7 @@ MANIFEST: Dict[str, Callable] = {
     "BENCH_shard_smoke.json": _shard_metrics,
     "BENCH_async_smoke.json": _async_metrics,
     "BENCH_cohort_smoke.json": _cohort_metrics,
+    "BENCH_algo_smoke.json": _algo_metrics,
     "BENCH_funnel_smoke.json": _funnel_metrics,
     "BENCH_fault_smoke.json": _fault_metrics,
 }

@@ -64,6 +64,8 @@ def main() -> None:
     gated("funnel_bench", lambda: funnel_bench.main(perf_args))
     gated("fault_bench", lambda: fault_bench.main(perf_args))
     cohort_sweep.main(perf_args)
+    gated("cohort_sweep_algos",
+          lambda: cohort_sweep.main(["--algos"] + perf_args))
     fig45_init_invariance.main()
     fig1_convergence.main()
     fig2_gemd.main()

@@ -7,6 +7,11 @@ and execute as a single ``run_many`` grid — one compiled XLA program for the
 whole comparison, zero per-round host round-trips.
 
     PYTHONPATH=src python examples/quickstart.py [--rounds 40] [--xi 1.0]
+
+Local updates are pluggable (DESIGN.md §12): swap FedAvg SGD for a
+drift-corrected algorithm without touching the selection comparison, e.g.
+
+    PYTHONPATH=src python examples/quickstart.py --local-algo fedprox --prox-mu 0.01
 """
 
 import argparse
@@ -16,7 +21,7 @@ import numpy as np
 
 from repro.core import make_strategy
 from repro.data import make_image_dataset, skewness_partition
-from repro.fl import engine
+from repro.fl import engine, local_algos
 from repro.fl.engine import FLConfig
 from repro.models import cnn
 
@@ -57,6 +62,10 @@ def main():
     ap.add_argument("--per-round", type=int, default=5)
     ap.add_argument("--xi", default="1.0")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--local-algo", default="fedavg",
+                    choices=sorted(local_algos.ALGO_NAMES))
+    ap.add_argument("--prox-mu", type=float, default=None)
+    ap.add_argument("--feddyn-alpha", type=float, default=None)
     args = ap.parse_args()
     xi = args.xi if args.xi in ("H", "h") else float(args.xi)
 
@@ -68,6 +77,9 @@ def main():
         lr=0.1,
         eval_every=5,
         seed=args.seed,
+        local_algo=args.local_algo,
+        prox_mu=args.prox_mu,
+        feddyn_alpha=args.feddyn_alpha,
     )
     strategies = tuple(make_strategy(m) for m in METHODS)
     states = build_states(cfg, xi, strategies)

@@ -10,20 +10,27 @@
 * :class:`PowerOfChoiceSelection` — beyond-paper extra baseline (Cho et al.):
   d uniform candidates, keep the C_p with the highest loss.
 
-Two layers of API (DESIGN.md §7):
+Two layers of API (DESIGN.md §7, §12):
 
-* ``select_fn(key, SelectionState, k) -> (k,) int32`` — **pure and
-  jit/vmap/scan-compatible**.  :class:`SelectionState` is a registered pytree
+* ``draw_fn(key, SelectionState, k, avail=None) -> (k,) int32`` — THE
+  canonical overridable: one **pure, jit/vmap/scan-compatible** entry point
+  per strategy, availability-aware via the optional ``avail`` mask (a
+  static ``avail is None`` branch, so the mask-free program is bit-identical
+  to the old ``select_fn``).  :class:`SelectionState` is a registered pytree
   of concrete arrays (kernel, losses, sizes, precomputed cluster labels), so
   the whole federation round — selection included — compiles into a single
   ``lax.scan`` with zero host round-trips (see ``repro.fl.engine``).
   Anything that genuinely needs the host (agglomerative clustering) happens
-  once in ``fit()``, not per round.
+  once in ``fit()``, not per round.  The legacy ``select_fn`` /
+  ``select_avail_fn`` pair survives as base-class adapters over ``draw_fn``
+  (and pre-registry strategies that still override the pair keep working —
+  the base ``draw_fn`` dispatches to their overrides).  The engine calls
+  ``select_global_fn``, the funnel-aware wrapper around ``draw_fn``.
 * ``select(key, RoundState, k)`` — the legacy convenience wrapper.
   ``RoundState`` carries whatever the server legitimately knows: the one-shot
   profiles/kernel, last-known local losses, and client sizes — never raw
   data.  It builds a :class:`SelectionState` (running ``fit()`` if needed)
-  and delegates to ``select_fn``.
+  and delegates to the draw.
 """
 
 from __future__ import annotations
@@ -223,24 +230,49 @@ class SelectionStrategy:
     uses_spectral_cache = False
 
     # -- pure path (engine) -------------------------------------------------
+    def draw_fn(
+        self,
+        key: jax.Array,
+        state: SelectionState,
+        k: int,
+        avail: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """THE canonical pure draw: ``(key, SelectionState, static k,
+        avail=None) -> (k,) int32`` — what every strategy overrides.
+
+        ``avail`` (a (C,) bool mask from a scenario's availability model,
+        DESIGN.md §9) restricts the draw when given; ``avail is None`` is a
+        *static* branch, so the mask-free program is exactly the strategy's
+        plain draw.  All built-ins share one fallback convention
+        (:func:`availability_logits`): with fewer than ``k`` available
+        clients the unmasked draw is used.
+
+        The base implementation is the backward-compat adapter for
+        pre-registry strategies that still override the legacy
+        ``select_fn`` / ``select_avail_fn`` pair: it dispatches to whichever
+        of the two the subclass actually overrode (an un-overridden
+        ``select_avail_fn`` falls through to ``select_fn`` — the old
+        availability-*blind* base default)."""
+        base = SelectionStrategy
+        if avail is not None and type(self).select_avail_fn is not base.select_avail_fn:
+            return self.select_avail_fn(key, state, k, avail)
+        if type(self).select_fn is not base.select_fn:
+            return self.select_fn(key, state, k)
+        raise NotImplementedError(
+            f"{type(self).__name__} must override draw_fn (or the legacy "
+            "select_fn)"
+        )
+
     def select_fn(self, key: jax.Array, state: SelectionState, k: int) -> jax.Array:
-        """Pure, jittable selection: (key, SelectionState, static k) -> (k,)."""
-        raise NotImplementedError
+        """Legacy adapter: the mask-free draw.  Override :meth:`draw_fn`."""
+        return self.draw_fn(key, state, k)
 
     def select_avail_fn(
         self, key: jax.Array, state: SelectionState, k: int, avail: jax.Array
     ) -> jax.Array:
-        """Availability-aware selection: restrict the draw to ``avail`` (a
-        (C,) bool mask from a scenario's availability model, DESIGN.md §9).
-
-        Every built-in strategy overrides this (DPP folds the mask into the
-        kernel before sampling; the samplers mask their logits).  The base
-        default is availability-*blind* — custom strategies that don't
-        override simply ignore the mask.  All overrides share one fallback
-        convention (:func:`availability_logits`): with fewer than ``k``
-        available clients the unmasked draw is used.
-        """
-        return self.select_fn(key, state, k)
+        """Legacy adapter: the availability-masked draw.  Override
+        :meth:`draw_fn`."""
+        return self.draw_fn(key, state, k, avail)
 
     def select_global_fn(
         self,
@@ -252,23 +284,19 @@ class SelectionStrategy:
         """Selection in **global** client ids, funnel-aware (DESIGN.md §10).
 
         Without a funnel (``state.candidates is None``) this is exactly
-        ``select_fn`` / ``select_avail_fn``.  With one, ``state`` is
-        candidate-space: the draw happens over the Q candidates (``avail``,
-        a *global* (C,) mask, is first gathered through
-        :func:`candidate_availability` — the shared guard) and the local
-        picks are mapped back through ``candidates.ids``.  Pure/jittable;
-        this is the one entry point the engine's round dispatch calls."""
+        :meth:`draw_fn`.  With one, ``state`` is candidate-space: the draw
+        happens over the Q candidates (``avail``, a *global* (C,) mask, is
+        first gathered through :func:`candidate_availability` — the shared
+        guard) and the local picks are mapped back through
+        ``candidates.ids``.  Pure/jittable; this is the one entry point the
+        engine's round dispatch calls."""
         cand = state.candidates
         if cand is None:
-            if avail is None:
-                return self.select_fn(key, state, k)
-            return self.select_avail_fn(key, state, k, avail)
-        if avail is None:
-            local = self.select_fn(key, state, k)
-        else:
-            local = self.select_avail_fn(
-                key, state, k, candidate_availability(avail, cand)
-            )
+            return self.draw_fn(key, state, k, avail)
+        local = self.draw_fn(
+            key, state, k,
+            None if avail is None else candidate_availability(avail, cand),
+        )
         return jnp.take(cand.ids, local).astype(jnp.int32)
 
     def prepare(self, state: RoundState, k: int) -> SelectionState:
@@ -291,12 +319,11 @@ class UniformSelection(SelectionStrategy):
 
     name = "fedavg"
 
-    def select_fn(self, key, state, k):
-        return jax.random.choice(
-            key, state.num_clients, shape=(k,), replace=False
-        ).astype(jnp.int32)
-
-    def select_avail_fn(self, key, state, k, avail):
+    def draw_fn(self, key, state, k, avail=None):
+        if avail is None:
+            return jax.random.choice(
+                key, state.num_clients, shape=(k,), replace=False
+            ).astype(jnp.int32)
         logits = availability_logits(
             avail, k, jnp.zeros((state.num_clients,), jnp.float32)
         )
@@ -325,14 +352,13 @@ class DPPSelection(SelectionStrategy):
         if mode == "map":
             self.name = "fl-dp3s-map"
 
-    def select_fn(self, key, state, k):
-        if self.mode == "map":
-            return dpp_mod.greedy_map_kdpp(state.kernel, k)
-        if self.use_cache:
-            return dpp_mod.sample_kdpp_from_eigh(key, state.eig_state, k)
-        return dpp_mod.sample_kdpp(key, state.kernel, k)
-
-    def select_avail_fn(self, key, state, k, avail):
+    def draw_fn(self, key, state, k, avail=None):
+        if avail is None:
+            if self.mode == "map":
+                return dpp_mod.greedy_map_kdpp(state.kernel, k)
+            if self.use_cache:
+                return dpp_mod.sample_kdpp_from_eigh(key, state.eig_state, k)
+            return dpp_mod.sample_kdpp(key, state.kernel, k)
         # Fold the availability mask into the kernel before sampling
         # (DESIGN.md §9): L' = m mᵀ ⊙ L keeps PSD-ness with its spectrum
         # supported on the available block, so the draw can only return
@@ -370,15 +396,11 @@ class FedSAESelection(SelectionStrategy):
 
     name = "fedsae"
 
-    def select_fn(self, key, state, k):
-        w = jnp.maximum(state.losses, 1e-8)
-        return _gumbel_topk_without_replacement(key, jnp.log(w), k)
-
-    def select_avail_fn(self, key, state, k, avail):
-        w = jnp.maximum(state.losses, 1e-8)
-        return _gumbel_topk_without_replacement(
-            key, availability_logits(avail, k, jnp.log(w)), k
-        )
+    def draw_fn(self, key, state, k, avail=None):
+        logits = jnp.log(jnp.maximum(state.losses, 1e-8))
+        if avail is not None:
+            logits = availability_logits(avail, k, logits)
+        return _gumbel_topk_without_replacement(key, logits, k)
 
 
 class PowerOfChoiceSelection(SelectionStrategy):
@@ -389,22 +411,21 @@ class PowerOfChoiceSelection(SelectionStrategy):
     def __init__(self, d: int = 30):
         self.d = d
 
-    def select_fn(self, key, state, k):
+    def draw_fn(self, key, state, k, avail=None):
         d = min(self.d, state.num_clients)
         k1, _ = jax.random.split(key)
-        cand = jax.random.choice(k1, state.num_clients, shape=(d,), replace=False)
-        order = jnp.argsort(-state.losses[cand])
-        return cand[order[:k]].astype(jnp.int32)
-
-    def select_avail_fn(self, key, state, k, avail):
+        if avail is None:
+            cand = jax.random.choice(
+                k1, state.num_clients, shape=(d,), replace=False
+            )
+            order = jnp.argsort(-state.losses[cand])
+            return cand[order[:k]].astype(jnp.int32)
         # candidates drawn uniformly among available clients, then the usual
         # loss top-k.  Gumbel over -inf-masked logits ranks every available
         # client ahead of the unavailable padding, so with ≥ k available the
         # d candidates contain ≥ k available entries; masking the candidate
         # losses then keeps unavailable padding out of the final top-k.  The
         # shared fallback (fewer than k available ⇒ unmasked draw) applies.
-        d = min(self.d, state.num_clients)
-        k1, _ = jax.random.split(key)
         enough = jnp.sum(avail) >= k
         logits = availability_logits(
             avail, k, jnp.zeros((state.num_clients,), jnp.float32)
@@ -500,33 +521,27 @@ class ClusterSelection(SelectionStrategy):
         ok = jnp.any(member & jnp.isfinite(base)[None, :], axis=1, keepdims=True)
         return jnp.where(ok, logits, base[None, :])
 
-    def select_fn(self, key, state, k):
+    def draw_fn(self, key, state, k, avail=None):
         # One vmapped masked-categorical draw over all k clusters (the
         # unrolled Python loop emitted k separate categorical ops into every
         # scanned round).  Row l masks the size-logits to cluster l's
         # members; an empty/degenerate cluster falls back to size-weighted
-        # sampling over all clients.
+        # sampling over all clients.  With an availability mask, row l
+        # samples cluster l's *available* members ∝ n_c; a cluster with no
+        # available member falls back to size-weighted sampling over all
+        # available clients, and fewer than k available clients drops the
+        # mask entirely (the shared availability_logits convention).
         labels = state.cluster_labels
         log_sizes = jnp.log(jnp.maximum(state.client_sizes, 1e-30))
         member = labels[None, :] == jnp.arange(k, dtype=labels.dtype)[:, None]
-        logits = self._cluster_logits(member, log_sizes)
-        picks = jax.vmap(jax.random.categorical)(jax.random.split(key, k), logits)
-        return picks.astype(jnp.int32)
-
-    def select_avail_fn(self, key, state, k, avail):
-        # availability-masked per-cluster draw: row l samples cluster l's
-        # *available* members ∝ n_c; a cluster with no available member
-        # falls back to size-weighted sampling over all available clients,
-        # and fewer than k available clients drops the mask entirely (the
-        # shared availability_logits convention).
-        labels = state.cluster_labels
-        log_sizes = jnp.log(jnp.maximum(state.client_sizes, 1e-30))
-        member = labels[None, :] == jnp.arange(k, dtype=labels.dtype)[:, None]
-        logits = jnp.where(
-            jnp.sum(avail) >= k,
-            self._cluster_logits(member, jnp.where(avail, log_sizes, -jnp.inf)),
-            self._cluster_logits(member, log_sizes),
-        )
+        if avail is None:
+            logits = self._cluster_logits(member, log_sizes)
+        else:
+            logits = jnp.where(
+                jnp.sum(avail) >= k,
+                self._cluster_logits(member, jnp.where(avail, log_sizes, -jnp.inf)),
+                self._cluster_logits(member, log_sizes),
+            )
         picks = jax.vmap(jax.random.categorical)(jax.random.split(key, k), logits)
         return picks.astype(jnp.int32)
 
@@ -567,7 +582,7 @@ def make_strategy(name: str, **kw) -> SelectionStrategy:
     try:
         factory = _REGISTRY[name]
     except KeyError:
-        raise KeyError(
+        raise ValueError(
             f"unknown selection strategy {name!r}; known: {list(STRATEGY_NAMES)}"
         ) from None
     return factory(**kw)

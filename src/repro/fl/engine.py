@@ -70,6 +70,7 @@ from repro.core import profiles as profiles_lib
 from repro.core import selection as selection_lib
 from repro.core import similarity as similarity_lib
 from repro.fl import faults as faults_lib
+from repro.fl import local_algos as local_algos_lib
 from repro.fl import rounds as rounds_lib
 from repro.fl import scenarios as scenarios_lib
 from repro.fl import staleness as staleness_lib
@@ -173,6 +174,24 @@ class FLConfig:
     quarantine_rounds: int = 5
     # run_checkpointed snapshot period (rounds); None = no snapshots
     ckpt_every: Optional[int] = None
+    # Local-update algorithm (DESIGN.md §12, repro.fl.local_algos registry):
+    # what each selected client computes.  "fedavg" is plain local SGD —
+    # bit-identical to the pre-registry engine in every mode; "fedprox"
+    # folds the proximal pull mu·(w − w_global) into each per-step grad;
+    # "feddyn" carries a per-client linear-penalty state (a client-sharded
+    # ServerState field) correcting historical drift.  Orthogonal to every
+    # other flag: sharding, slots, staleness, faults, and the funnel accept
+    # any registered algorithm without forking round bodies.
+    local_algo: str = "fedavg"
+    prox_mu: Optional[float] = None  # fedprox proximal strength (>= 0)
+    feddyn_alpha: Optional[float] = None  # feddyn penalty strength (> 0)
+
+    def local_algo_obj(self) -> "local_algos_lib.LocalAlgo":
+        """The configured :class:`repro.fl.local_algos.LocalAlgo` instance
+        (combos already validated by ``__post_init__``)."""
+        return local_algos_lib.algo_from_config(
+            self.local_algo, self.prox_mu, self.feddyn_alpha
+        )
 
     def guarded(self) -> bool:
         """True when the update-validation / quarantine layer is active."""
@@ -257,6 +276,29 @@ class FLConfig:
                 f"ckpt_every={self.ckpt_every} must be >= 1 (None disables "
                 "snapshots)"
             )
+        if self.local_algo not in local_algos_lib.LOCAL_ALGOS:
+            raise ValueError(
+                f"unknown local algorithm {self.local_algo!r}; "
+                f"known: {list(local_algos_lib.ALGO_NAMES)}"
+            )
+        if self.prox_mu is not None:
+            if self.local_algo != "fedprox":
+                raise ValueError(
+                    f"prox_mu={self.prox_mu} only applies to "
+                    f"local_algo='fedprox' (got {self.local_algo!r})"
+                )
+            if self.prox_mu < 0:
+                raise ValueError(f"prox_mu={self.prox_mu} must be >= 0")
+        if self.feddyn_alpha is not None:
+            if self.local_algo != "feddyn":
+                raise ValueError(
+                    f"feddyn_alpha={self.feddyn_alpha} only applies to "
+                    f"local_algo='feddyn' (got {self.local_algo!r})"
+                )
+            if self.feddyn_alpha <= 0:
+                raise ValueError(
+                    f"feddyn_alpha={self.feddyn_alpha} must be > 0"
+                )
 
 
 @jax.tree_util.register_dataclass
@@ -298,6 +340,12 @@ class ServerState:
     # the select_avail_fn availability hook.  Replicated (selection is
     # replicated trivia, like the staleness counters).
     quarantine: Optional[jax.Array] = None
+    # Per-client local-algorithm state (DESIGN.md §12) — None unless the
+    # configured algorithm is stateful (FedDyn's linear-penalty h_k).  A
+    # pytree whose leaves lead with (C, ...), client-sharded like the data
+    # fields (CLIENT_SHARDED_FIELDS), gathered through the slot machinery,
+    # and snapshotted by checkpointing like every other leaf.
+    algo_state: Optional[PyTree] = None
 
     @property
     def num_clients(self) -> int:
@@ -531,32 +579,60 @@ def make_round_fn(
     route_avail = avail_aware or guard_on
     batched_loss = lambda p, batch: loss_fn(p, batch[0], batch[1])
     loss_of = jax.vmap(loss_fn, in_axes=(None, 0, 0))
-    # selection dispatches through select_global_fn — the funnel-aware entry
-    # point (DESIGN.md §10): without candidates it is exactly select_fn /
-    # select_avail_fn; with them the draw runs in candidate space (the avail
-    # mask gathered through the shared candidate_availability guard) and the
-    # picks come back as global ids, so everything downstream of ``sel`` —
-    # batches, aggregation, loss refresh, GEMD, slots, staleness — is
-    # untouched by funnelling.
-    if route_avail:
-        branches = tuple(
-            functools.partial(
-                lambda strat, key, sstate, avail: strat.select_global_fn(
-                    key, sstate, k, avail
-                ),
-                strat,
-            )
-            for strat in strategies
+    # the local-update algorithm is a static trace constant (DESIGN.md §12):
+    # every round body hands it to the rounds builders; a stateful one
+    # threads ServerState.algo_state through gather → update → masked
+    # write-back without forking any body
+    algo = cfg.local_algo_obj()
+    stateful = algo.stateful
+    # selection dispatches through select_global_fn — the ONE canonical
+    # entry point ``(key, state, k, avail=None)``: without candidates it is
+    # exactly the legacy draw; with them the draw runs in candidate space
+    # (the avail mask gathered through the shared candidate_availability
+    # guard) and the picks come back as global ids, so everything downstream
+    # of ``sel`` — batches, aggregation, loss refresh, GEMD, slots,
+    # staleness — is untouched by funnelling.  ``avail`` defaulting to None
+    # makes the same branch tuple serve both call arities, so avail-routed
+    # and plain configs share one construction.
+    branches = tuple(
+        functools.partial(
+            lambda strat, key, sstate, avail=None: strat.select_global_fn(
+                key, sstate, k, avail
+            ),
+            strat,
         )
-    else:
-        branches = tuple(
-            functools.partial(
-                lambda strat, key, sstate: strat.select_global_fn(key, sstate, k),
-                strat,
-            )
-            for strat in strategies
-        )
+        for strat in strategies
+    )
     steps_of = lambda state: _steps_per_round(cfg, state.client_xs.shape[1])
+
+    def _algo_writeback(full_states, sel_or_mask, cand_states, refresh, scatter):
+        """Masked per-client algorithm-state refresh (DESIGN.md §12): a
+        client's state advances iff its update was kept (cohort member,
+        delivered, unflagged, round above the survivors floor).
+
+        ``scatter=True`` — cohort layout: ``cand_states`` lead with (k, ...)
+        and land at ``sel_or_mask`` (the cohort ids); ``scatter=False`` —
+        resident layout: ``cand_states`` match ``full_states`` and
+        ``refresh`` selects rows in place."""
+
+        def bmask(m, x):
+            return m.reshape(m.shape + (1,) * (x.ndim - m.ndim))
+
+        if scatter:
+            sel = sel_or_mask
+            old = jax.tree_util.tree_map(
+                lambda s: jnp.take(s, sel, axis=0), full_states
+            )
+            kept = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(bmask(refresh, n), n, o), cand_states, old
+            )
+            return jax.tree_util.tree_map(
+                lambda full, new: full.at[sel].set(new), full_states, kept
+            )
+        return jax.tree_util.tree_map(
+            lambda n, o: jnp.where(bmask(refresh, n), n, o),
+            cand_states, full_states,
+        )
 
     def _single_device_body(state, k_batch, sel, draws=None):
         """Cohort gather + vmapped/mapped local updates on one device."""
@@ -565,25 +641,43 @@ def make_round_fn(
         round_step = rounds_lib.build_client_parallel_round(
             batched_loss, cfg.lr, steps_of(state), grad_clip=cfg.grad_clip,
             sequential_clients=sequential_clients, update_transform=guard,
+            algo=algo,
         )
         g = metrics_lib.gemd(
             state.client_label_dists, state.client_sizes, sel, state.global_label_dist
         )
+        state_kw = {}
+        if stateful:
+            state_kw["client_states"] = jax.tree_util.tree_map(
+                lambda s: jnp.take(s, sel, axis=0), state.algo_state
+            )
         if guard is None:
-            params, mean_loss = round_step(state.params, batches, weights)
+            res = round_step(state.params, batches, weights, **state_kw)
+            if stateful:
+                params, mean_loss, cand_states = res
+                refresh = jnp.ones(sel.shape, jnp.bool_)
+                algo_state = _algo_writeback(
+                    state.algo_state, sel, cand_states, refresh, scatter=True
+                )
+            else:
+                params, mean_loss = res
+                algo_state = None
             # refresh last-known losses for the selected clients
             sel_losses = loss_of(
                 params, jnp.take(state.client_xs, sel, 0), jnp.take(state.client_ys, sel, 0)
             )
             losses = state.losses.at[sel].set(sel_losses)
-            return params, mean_loss, losses, g
+            out = (params, mean_loss, losses, g)
+            return out + (algo_state,) if stateful else out
         # fault masks gathered to the cohort layout (draws are (C,) rows)
         g_args = (
             () if draws is None else tuple(jnp.take(m, sel) for m in draws)
         )
-        params, mean_loss, flagged, survivors = round_step(
-            state.params, batches, weights, *g_args
-        )
+        res = round_step(state.params, batches, weights, *g_args, **state_kw)
+        if stateful:
+            params, mean_loss, flagged, survivors, cand_states = res
+        else:
+            params, mean_loss, flagged, survivors = res
         c = state.losses.shape[0]
         flagged_c = jnp.zeros((c,), jnp.bool_).at[sel].set(flagged)
         delivered = (
@@ -598,7 +692,13 @@ def make_round_fn(
         )
         keep = jnp.take(state.losses, sel)
         losses = state.losses.at[sel].set(jnp.where(refresh, sel_losses, keep))
-        return params, mean_loss, losses, g, flagged_c, survivors
+        out = (params, mean_loss, losses, g, flagged_c, survivors)
+        if stateful:
+            algo_state = _algo_writeback(
+                state.algo_state, sel, cand_states, refresh, scatter=True
+            )
+            return out + (algo_state,)
+        return out
 
     def _resident_batch_plans(state, k_batch, sel):
         """Jit-level per-resident batch *index plans*: every client adopts
@@ -630,13 +730,22 @@ def make_round_fn(
         shard_round = rounds_lib.build_shard_cohort_round(
             batched_loss, cfg.lr, client_axis, grad_clip=cfg.grad_clip,
             sequential_clients=sequential_clients, update_transform=guard,
+            algo=algo,
         )
         ids = _resident_batch_plans(state, k_batch, sel)
         n_ids = 0 if ids is None else 1
         mask_args = () if draws is None else tuple(draws)
+        # algo_state shards like the data fields (resident layout); the
+        # masked write-back happens inside the shard body — per-device
+        # state, never psum'd
+        state_args = (state.algo_state,) if stateful else ()
 
         def local_body(sel, params, local_xs, local_ys, local_sizes,
                        local_losses, local_dists, global_dist, *rest):
+            if stateful:
+                local_states, rest = rest[0], rest[1:]
+            else:
+                local_states = None
             local_ids = rest[:n_ids]
             fmasks = rest[n_ids:]
             c_loc = local_xs.shape[0]
@@ -651,17 +760,33 @@ def make_round_fn(
             w = weights.astype(jnp.float32)
             gemd_parts = ((w[:, None] * local_dists).sum(0), jnp.sum(w))
             if guard is None:
-                params, _, mean_loss, (num, den) = shard_round(
-                    params, batches, weights, extras=gemd_parts
+                res = shard_round(
+                    params, batches, weights, extras=gemd_parts,
+                    local_states=local_states,
                 )
+                if stateful:
+                    params, _, mean_loss, (num, den), cand_states = res
+                else:
+                    params, _, mean_loss, (num, den) = res
                 g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
                 # loss refresh stays on the client's home shard (no scatter)
                 fresh = loss_of(params, local_xs, local_ys)
                 losses = jnp.where(mask, fresh, local_losses)
+                if stateful:
+                    new_states = _algo_writeback(
+                        local_states, None, cand_states, mask, scatter=False
+                    )
+                    return params, mean_loss, losses, g, new_states
                 return params, mean_loss, losses, g
-            params, _, mean_loss, (num, den), flagged, survivors = shard_round(
-                params, batches, weights, extras=gemd_parts, guard_args=fmasks
+            res = shard_round(
+                params, batches, weights, extras=gemd_parts, guard_args=fmasks,
+                local_states=local_states,
             )
+            if stateful:
+                (params, _, mean_loss, (num, den), flagged, survivors,
+                 cand_states) = res
+            else:
+                params, _, mean_loss, (num, den), flagged, survivors = res
             g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
             delivered = fmasks[0] if fmasks else jnp.ones_like(mask)
             refresh = (
@@ -670,6 +795,11 @@ def make_round_fn(
             )
             fresh = loss_of(params, local_xs, local_ys)
             losses = jnp.where(refresh, fresh, local_losses)
+            if stateful:
+                new_states = _algo_writeback(
+                    local_states, None, cand_states, refresh, scatter=False
+                )
+                return params, mean_loss, losses, g, flagged, survivors, new_states
             return params, mean_loss, losses, g, flagged, survivors
 
         lead = P(client_axis)
@@ -677,16 +807,19 @@ def make_round_fn(
         out = (P(), P(), lead, P())
         if guard is not None:
             out = out + (lead, P())
+        if stateful:
+            out = out + (lead,)
         body = _checked_shard_map(
             local_body, mesh=mesh,
             in_specs=(P(), P(), lead, lead, lead, lead, lead, P())
+            + (lead,) * len(state_args)
             + (lead,) * (len(id_args) + len(mask_args)),
             out_specs=out,
         )
         return body(
             sel, state.params, state.client_xs, state.client_ys,
             state.client_sizes, state.losses, state.client_label_dists,
-            state.global_label_dist, *(id_args + mask_args),
+            state.global_label_dist, *(state_args + id_args + mask_args),
         )
 
     def _slot_sharded_body(state, k_batch, sel, draws=None):
@@ -714,7 +847,7 @@ def make_round_fn(
         shard_round = rounds_lib.build_shard_cohort_round(
             batched_loss, cfg.lr, client_axis, grad_clip=cfg.grad_clip,
             sequential_clients=sequential_clients, cap=cap,
-            update_transform=guard,
+            update_transform=guard, algo=algo,
         )
         in_cohort = jnp.any(
             sel[None, :] == jnp.arange(c)[:, None], axis=1
@@ -736,10 +869,17 @@ def make_round_fn(
             () if draws is None
             else tuple(jnp.take(m, slot_gid.reshape(-1)) for m in draws)
         )
+        # resident-layout state rides into the shard body; the slot round
+        # gathers it by slot_index and scatters the trained slots back
+        state_args = (state.algo_state,) if stateful else ()
 
         def local_body(sel, slot_index, params, local_xs, local_ys,
                        local_sizes, local_losses, local_dists, global_dist,
                        *rest):
+            if stateful:
+                local_states, rest = rest[0], rest[1:]
+            else:
+                local_states = None
             slot_ids = rest[:n_ids]
             fmasks = rest[n_ids:]
             c_loc_ = local_xs.shape[0]
@@ -757,9 +897,14 @@ def make_round_fn(
             w = weights.astype(jnp.float32)
             gemd_parts = ((w[:, None] * local_dists).sum(0), jnp.sum(w))
             if guard is None:
-                params, _, mean_loss, (num, den) = shard_round(
-                    params, batches, weights, slot_index, extras=gemd_parts
+                res = shard_round(
+                    params, batches, weights, slot_index, extras=gemd_parts,
+                    local_states=local_states,
                 )
+                if stateful:
+                    params, _, mean_loss, (num, den), cand_states = res
+                else:
+                    params, _, mean_loss, (num, den) = res
                 g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
                 # loss refresh over slots only — the cap-not-C_loc saving
                 # applies to the refresh pass too; unselected residents keep
@@ -771,11 +916,21 @@ def make_round_fn(
                 losses = local_losses.at[slot_index].set(
                     jnp.where(slot_mask, fresh, keep)
                 )
+                if stateful:
+                    new_states = _algo_writeback(
+                        local_states, None, cand_states, mask, scatter=False
+                    )
+                    return params, mean_loss, losses, g, new_states
                 return params, mean_loss, losses, g
-            params, _, mean_loss, (num, den), flagged, survivors = shard_round(
+            res = shard_round(
                 params, batches, weights, slot_index, extras=gemd_parts,
-                guard_args=fmasks,
+                guard_args=fmasks, local_states=local_states,
             )
+            if stateful:
+                (params, _, mean_loss, (num, den), flagged, survivors,
+                 cand_states) = res
+            else:
+                params, _, mean_loss, (num, den), flagged, survivors = res
             g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
             # fmasks are already slot-layout (gathered by slot_gid above)
             slot_delivered = (
@@ -793,6 +948,18 @@ def make_round_fn(
             losses = local_losses.at[slot_index].set(
                 jnp.where(refresh, fresh, keep)
             )
+            if stateful:
+                # refresh scattered home to resident layout: residents no
+                # slot covered stay un-refreshed by construction
+                r_res = (
+                    jnp.zeros(mask.shape, jnp.bool_)
+                    .at[slot_index]
+                    .set(refresh)
+                )
+                new_states = _algo_writeback(
+                    local_states, None, cand_states, r_res, scatter=False
+                )
+                return params, mean_loss, losses, g, flagged, survivors, new_states
             return params, mean_loss, losses, g, flagged, survivors
 
         lead = P(client_axis)
@@ -800,16 +967,19 @@ def make_round_fn(
         out = (P(), P(), lead, P())
         if guard is not None:
             out = out + (lead, P())
+        if stateful:
+            out = out + (lead,)
         body = _checked_shard_map(
             local_body, mesh=mesh,
             in_specs=(P(), lead, P(), lead, lead, lead, lead, lead, P())
+            + (lead,) * len(state_args)
             + (lead,) * (len(id_args) + len(mask_args)),
             out_specs=out,
         )
         return body(
             sel, flat_pos, state.params, state.client_xs, state.client_ys,
             state.client_sizes, state.losses, state.client_label_dists,
-            state.global_label_dist, *(id_args + mask_args),
+            state.global_label_dist, *(state_args + id_args + mask_args),
         )
 
     def _stale_sharded_body(state, k_batch, sel, lat, draws=None):
@@ -835,6 +1005,7 @@ def make_round_fn(
         shard_round = rounds_lib.build_stale_shard_cohort_round(
             batched_loss, cfg.lr, client_axis, grad_clip=cfg.grad_clip,
             sequential_clients=sequential_clients, update_transform=guard,
+            algo=algo,
         )
         in_cohort = jnp.any(sel[None, :] == jnp.arange(c)[:, None], axis=1)
         # a shard's round latency is its slowest selected resident (shards
@@ -862,10 +1033,18 @@ def make_round_fn(
         ids = _resident_batch_plans(state, k_batch, sel)
         n_ids = 0 if ids is None else 1
         mask_args = () if draws is None else tuple(draws)
+        # algo_state shards like the data fields; the drift-correction
+        # anchor is automatically the shard's stale ring read (the inner
+        # round anchors to its entry base params)
+        state_args = (state.algo_state,) if stateful else ()
 
         def local_body(sel, lam_d, slot_d, hist, local_xs, local_ys,
                        local_sizes, local_losses, local_dists, global_dist,
                        *rest):
+            if stateful:
+                local_states, rest = rest[0], rest[1:]
+            else:
+                local_states = None
             local_ids = rest[:n_ids]
             fmasks = rest[n_ids:]
             c_loc_ = local_xs.shape[0]
@@ -880,20 +1059,35 @@ def make_round_fn(
             w = weights.astype(jnp.float32)
             gemd_parts = ((w[:, None] * local_dists).sum(0), jnp.sum(w))
             if guard is None:
-                params, _, mean_loss, (num, den) = shard_round(
+                res = shard_round(
                     hist, slot_d[0], lam_d[0], batches, weights,
-                    extras=gemd_parts
+                    extras=gemd_parts, local_states=local_states,
                 )
+                if stateful:
+                    params, _, mean_loss, (num, den), cand_states = res
+                else:
+                    params, _, mean_loss, (num, den) = res
                 g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
                 # the refresh measures the NEW aggregate on each home shard —
                 # fresh params, even when the contribution was stale
                 fresh = loss_of(params, local_xs, local_ys)
                 losses = jnp.where(mask, fresh, local_losses)
+                if stateful:
+                    new_states = _algo_writeback(
+                        local_states, None, cand_states, mask, scatter=False
+                    )
+                    return params, mean_loss, losses, g, new_states
                 return params, mean_loss, losses, g
-            params, _, mean_loss, (num, den), flagged, survivors = shard_round(
+            res = shard_round(
                 hist, slot_d[0], lam_d[0], batches, weights,
                 extras=gemd_parts, guard_args=fmasks,
+                local_states=local_states,
             )
+            if stateful:
+                (params, _, mean_loss, (num, den), flagged, survivors,
+                 cand_states) = res
+            else:
+                params, _, mean_loss, (num, den), flagged, survivors = res
             g = jnp.sum(jnp.abs(metrics_lib.safe_div(num, den) - global_dist))
             delivered = fmasks[0] if fmasks else jnp.ones_like(mask)
             refresh = (
@@ -902,6 +1096,11 @@ def make_round_fn(
             )
             fresh = loss_of(params, local_xs, local_ys)
             losses = jnp.where(refresh, fresh, local_losses)
+            if stateful:
+                new_states = _algo_writeback(
+                    local_states, None, cand_states, refresh, scatter=False
+                )
+                return params, mean_loss, losses, g, flagged, survivors, new_states
             return params, mean_loss, losses, g, flagged, survivors
 
         lead = P(client_axis)
@@ -909,9 +1108,12 @@ def make_round_fn(
         out = (P(), P(), lead, P())
         if guard is not None:
             out = out + (lead, P())
+        if stateful:
+            out = out + (lead,)
         body = _checked_shard_map(
             local_body, mesh=mesh,
             in_specs=(P(), lead, lead, P(), lead, lead, lead, lead, lead, P())
+            + (lead,) * len(state_args)
             + (lead,) * (len(id_args) + len(mask_args)),
             out_specs=out,
         )
@@ -919,8 +1121,11 @@ def make_round_fn(
             sel, lam, read_slot, state.param_hist, state.client_xs,
             state.client_ys, state.client_sizes, state.losses,
             state.client_label_dists, state.global_label_dist,
-            *(id_args + mask_args),
+            *(state_args + id_args + mask_args),
         )
+        new_algo_state = None
+        if stateful:
+            res, new_algo_state = res[:-1], res[-1]
         if guard is None:
             params, mean_loss, losses, g = res
             flagged = survivors = None
@@ -938,9 +1143,11 @@ def make_round_fn(
             state.param_hist, params, t_prev + 1, bound
         )
         if guard is None:
-            return params, mean_loss, losses, g, hist, new_s, sim_time
-        return (params, mean_loss, losses, g, hist, new_s, sim_time,
-                flagged, survivors)
+            out = (params, mean_loss, losses, g, hist, new_s, sim_time)
+        else:
+            out = (params, mean_loss, losses, g, hist, new_s, sim_time,
+                   flagged, survivors)
+        return out + (new_algo_state,) if stateful else out
 
     def round_fn(state: ServerState, _=None):
         t = state.round + 1
@@ -982,31 +1189,28 @@ def make_round_fn(
             sel = lax.switch(state.strategy_index, branches, *sel_args)
         hist = new_s = sim_time = None
         flagged_c = survivors = None
+        new_algo = None
         if mesh is None:
             res = _single_device_body(state, k_batch, sel, draws=draws)
-            if guard is None:
-                params, mean_loss, losses, g = res
-            else:
-                params, mean_loss, losses, g, flagged_c, survivors = res
         elif cfg.staleness_bound is not None:
             res = _stale_sharded_body(state, k_batch, sel, lat, draws=draws)
+        elif cfg.cohort_cap is not None:
+            res = _slot_sharded_body(state, k_batch, sel, draws=draws)
+        else:
+            res = _sharded_body(state, k_batch, sel, draws=draws)
+        if stateful:
+            # every body appends the already-written-back algo state last
+            res, new_algo = res[:-1], res[-1]
+        if mesh is not None and cfg.staleness_bound is not None:
             if guard is None:
                 params, mean_loss, losses, g, hist, new_s, sim_time = res
             else:
                 (params, mean_loss, losses, g, hist, new_s, sim_time,
                  flagged_c, survivors) = res
-        elif cfg.cohort_cap is not None:
-            res = _slot_sharded_body(state, k_batch, sel, draws=draws)
-            if guard is None:
-                params, mean_loss, losses, g = res
-            else:
-                params, mean_loss, losses, g, flagged_c, survivors = res
+        elif guard is None:
+            params, mean_loss, losses, g = res
         else:
-            res = _sharded_body(state, k_batch, sel, draws=draws)
-            if guard is None:
-                params, mean_loss, losses, g = res
-            else:
-                params, mean_loss, losses, g, flagged_c, survivors = res
+            params, mean_loss, losses, g, flagged_c, survivors = res
         if guard is not None:
             # graceful degradation: a round below the survivors floor keeps
             # the old params (identity round, recorded in the metrics).  The
@@ -1042,6 +1246,8 @@ def make_round_fn(
         updates = dict(params=params, key=key, round=t, losses=losses)
         if hist is not None:
             updates.update(param_hist=hist, shard_staleness=new_s)
+        if stateful:
+            updates["algo_state"] = new_algo
         if guard_on:
             # quarantine dynamics: freshly flagged clients (re)start the
             # cooldown, everyone else's counter ticks down toward release
@@ -1288,6 +1494,7 @@ CLIENT_SHARDED_FIELDS = (
     "client_ys",
     "client_sizes",
     "client_label_dists",
+    "algo_state",
 )
 
 
@@ -1323,7 +1530,11 @@ def shard_server_state(
         spec = client_axis_spec(x.ndim, client_axis, batch_dims=batch_dims)
         return jax.device_put(x, NamedSharding(mesh, spec))
 
-    updates = {f: lead(getattr(state, f)) for f in CLIENT_SHARDED_FIELDS}
+    # tree_map handles pytree-valued fields (algo_state) and Nones alike
+    updates = {
+        f: jax.tree_util.tree_map(lead, getattr(state, f))
+        for f in CLIENT_SHARDED_FIELDS
+    }
     for f in dataclasses.fields(state):
         if f.name not in updates:
             updates[f.name] = rep(getattr(state, f.name))
@@ -1550,6 +1761,11 @@ def init_server_state(
     # quarantine counters only exist on guarded configs so the pytree (and
     # every compiled program keyed on it) is unchanged for fault-free runs
     quarantine = jnp.zeros((c,), jnp.int32) if cfg.guarded() else None
+    # per-client algorithm state only exists for stateful algorithms
+    # (DESIGN.md §12) — None keeps the pytree unchanged for fedavg/fedprox
+    algo_state = local_algos_lib.init_client_states(
+        cfg.local_algo_obj(), params, c
+    )
     state = ServerState(
         params=params,
         key=key if key is not None else jax.random.key(cfg.seed),
@@ -1569,6 +1785,7 @@ def init_server_state(
         shard_staleness=shard_staleness,
         candidates=candidates,
         quarantine=quarantine,
+        algo_state=algo_state,
     )
     if mesh is not None:
         state = shard_server_state(state, mesh, client_axis)

@@ -1,0 +1,282 @@
+"""Pluggable local-update algorithms (DESIGN.md §12).
+
+The engine decides *who* trains (selection, funnel, availability) and *how
+updates are aggregated* (sharding, slots, staleness, robust aggregation);
+this registry decides *what each client computes*.  Every algorithm is a
+pure recipe with one canonical signature:
+
+* ``algo.init(params) -> client_state`` — the per-client state carried
+  across rounds (``()`` for stateless algorithms, so the pytree adds zero
+  leaves to any carry);
+* ``step(params, client_state, global_params, batch) -> (params,
+  client_state, loss)`` — one local SGD step, obtained by *binding* the
+  algorithm to the round's training hyperparameters with
+  :meth:`LocalAlgo.bind` (the algorithm itself stays a pure recipe that a
+  registry can hand out without knowing the model).
+
+Algorithms customise two hooks on top of plain SGD:
+
+* :meth:`LocalAlgo.transform_grad` — fold a per-step term into the raw
+  gradient (FedProx's proximal pull ``mu·(w − w_global)``; FedDyn's linear
+  penalty ``−h + alpha·(w − w_global)``).  The FedAvg identity hook keeps
+  the compiled graph bit-identical to the pre-registry engine.
+* :meth:`LocalAlgo.finalize` — evolve the per-client state once per round
+  after the local scan (FedDyn's ``h ← h − alpha·(w_final − w_global)``).
+
+``global_params`` is the round's *base* params — whatever the client
+actually trained from.  Under bounded staleness that is the shard's stale
+ring read (DESIGN.md §9): the proximal/penalty anchors follow the stale
+base on purpose, so a drift-corrected stale shard pulls toward the params
+it trained from, not toward a future snapshot it never saw.
+
+FedDyn here is the **client-side** variant: the per-client linear-penalty
+state ``h_k`` corrects local drift, while the server keeps the plain
+eq.-(6) weighted average (no server-side ``−h/alpha`` shift).  That keeps
+every aggregation path — single psum, slots, staleness decay, robust
+guards — byte-for-byte untouched; the drift correction lives entirely in
+the per-step gradient.
+
+The registry raises the same ``ValueError`` shape as the scenario / fault /
+selection registries: ``unknown local algorithm 'x'; known: [...]``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "LocalAlgo",
+    "BoundLocalAlgo",
+    "FedAvg",
+    "FedProx",
+    "FedDyn",
+    "LOCAL_ALGOS",
+    "ALGO_NAMES",
+    "get_local_algo",
+    "algo_from_config",
+    "init_client_states",
+]
+
+PyTree = Any
+
+
+class LocalAlgo:
+    """Base local-update algorithm: plain SGD (eq. 3-5), stateless.
+
+    Subclasses override :meth:`transform_grad` (per-step) and — for
+    algorithms with per-client state — ``stateful = True`` plus
+    :meth:`init` / :meth:`finalize`.  ``name`` is the registry key.
+    """
+
+    name = "base"
+    # True when init() returns real per-client state that must be carried
+    # across rounds (a client-sharded ServerState field); stateless
+    # algorithms return () so no carry/pytree changes anywhere.
+    stateful = False
+
+    def init(self, params: PyTree) -> PyTree:
+        """Fresh per-client state for one client (stateless: ``()``)."""
+        return ()
+
+    def transform_grad(
+        self, grad: PyTree, params: PyTree, client_state: PyTree,
+        global_params: PyTree,
+    ) -> PyTree:
+        """Fold the algorithm's per-step term into the raw gradient.
+
+        The base (FedAvg) hook returns ``grad`` unchanged — the SAME
+        object, so the compiled program is bit-identical to plain SGD."""
+        return grad
+
+    def finalize(
+        self, params: PyTree, client_state: PyTree, global_params: PyTree
+    ) -> PyTree:
+        """Evolve the per-client state once after the round's local scan."""
+        return client_state
+
+    def bind(
+        self,
+        loss_fn: Callable[[PyTree, PyTree], jax.Array],
+        lr: float,
+        grad_clip: Optional[float] = None,
+        micro_batches: int = 1,
+    ) -> "BoundLocalAlgo":
+        """Bind the recipe to training hyperparameters, yielding the
+        canonical ``step(params, client_state, global_params, batch)``."""
+        return BoundLocalAlgo(self, loss_fn, lr, grad_clip, micro_batches)
+
+
+class BoundLocalAlgo:
+    """A :class:`LocalAlgo` bound to (loss_fn, lr, grad_clip, micro_batches)
+    — the object exposing the canonical per-step signature."""
+
+    def __init__(self, algo, loss_fn, lr, grad_clip, micro_batches):
+        from repro.fl.rounds import make_grad_fn  # local import: no cycle at module load
+
+        self.algo = algo
+        self.lr = lr
+        self.grad_clip = grad_clip
+        self._grad_fn = make_grad_fn(loss_fn, micro_batches)
+
+    @property
+    def name(self) -> str:
+        return self.algo.name
+
+    @property
+    def stateful(self) -> bool:
+        return self.algo.stateful
+
+    def init(self, params: PyTree) -> PyTree:
+        return self.algo.init(params)
+
+    def step(self, params, client_state, global_params, batch):
+        """One local SGD step: ``(params, client_state, global_params,
+        batch) -> (params, client_state, loss)`` (eq. 3-5 plus the
+        algorithm's per-step gradient term)."""
+        from repro import optim as optim_lib
+
+        loss, g = self._grad_fn(params, batch)
+        g = self.algo.transform_grad(g, params, client_state, global_params)
+        if self.grad_clip is not None:
+            g = optim_lib.clip_by_global_norm(g, self.grad_clip)
+        params = jax.tree_util.tree_map(
+            lambda w, gw: (w - self.lr * gw).astype(w.dtype), params, g
+        )
+        return params, client_state, loss
+
+    def finalize(self, params, client_state, global_params):
+        return self.algo.finalize(params, client_state, global_params)
+
+
+class FedAvg(LocalAlgo):
+    """Plain local SGD (McMahan et al.) — every hook is the base identity,
+    so the compiled round is bit-identical to the pre-registry engine."""
+
+    name = "fedavg"
+
+
+class FedProx(LocalAlgo):
+    """FedProx (Li et al., arXiv:1812.06127): the proximal term
+    ``mu/2·||w − w_global||²`` folded into every per-step gradient as
+    ``g + mu·(w − w_global)``, taming client drift under non-IID data.
+
+    ``prox_mu == 0`` short-circuits to the identity hook at trace time, so
+    a zero-mu FedProx compiles to exactly the FedAvg program (the
+    hypothesis-tested reduction property)."""
+
+    name = "fedprox"
+
+    def __init__(self, prox_mu: float = 0.01):
+        if prox_mu < 0:
+            raise ValueError(f"prox_mu={prox_mu} must be >= 0")
+        self.prox_mu = float(prox_mu)
+
+    def transform_grad(self, grad, params, client_state, global_params):
+        if self.prox_mu == 0.0:
+            return grad  # static shortcut: mu=0 IS fedavg, same program
+        mu = self.prox_mu
+        return jax.tree_util.tree_map(
+            lambda g, w, wg: g
+            + mu * (w.astype(g.dtype) - wg.astype(g.dtype)),
+            grad, params, global_params,
+        )
+
+
+class FedDyn(LocalAlgo):
+    """FedDyn (Acar et al., ICLR'21), client-side variant: each client
+    carries a linear-penalty state ``h_k`` (params-shaped, fp32) making the
+    local objective ``L_k(w) − ⟨h_k, w⟩ + alpha/2·||w − w_global||²``:
+
+    * per step: ``g ← g − h_k + alpha·(w − w_global)``
+    * per round: ``h_k ← h_k − alpha·(w_final − w_global)``
+
+    ``h_k`` accumulates each client's historical drift so repeated local
+    training is pulled toward the *federation's* stationary point, not the
+    client's — the strongest known local correction at high non-IID skew.
+    The server keeps the plain eq.-(6) average (see the module docstring
+    for why the server-side shift is deliberately omitted)."""
+
+    name = "feddyn"
+    stateful = True
+
+    def __init__(self, feddyn_alpha: float = 0.01):
+        if feddyn_alpha <= 0:
+            raise ValueError(
+                f"feddyn_alpha={feddyn_alpha} must be > 0 (alpha=0 is "
+                "fedavg with dead state — use local_algo='fedavg')"
+            )
+        self.feddyn_alpha = float(feddyn_alpha)
+
+    def init(self, params):
+        return jax.tree_util.tree_map(
+            lambda w: jnp.zeros(w.shape, jnp.float32), params
+        )
+
+    def transform_grad(self, grad, params, client_state, global_params):
+        a = self.feddyn_alpha
+        return jax.tree_util.tree_map(
+            lambda g, h, w, wg: g
+            - h.astype(g.dtype)
+            + a * (w.astype(g.dtype) - wg.astype(g.dtype)),
+            grad, client_state, params, global_params,
+        )
+
+    def finalize(self, params, client_state, global_params):
+        a = self.feddyn_alpha
+        return jax.tree_util.tree_map(
+            lambda h, w, wg: h - a * (w.astype(h.dtype) - wg.astype(h.dtype)),
+            client_state, params, global_params,
+        )
+
+
+LOCAL_ALGOS = {
+    "fedavg": FedAvg,
+    "fedprox": FedProx,
+    "feddyn": FedDyn,
+}
+
+ALGO_NAMES = tuple(sorted(LOCAL_ALGOS))
+
+
+def get_local_algo(name: str, **kw) -> LocalAlgo:
+    """Build a local-update algorithm by registry name; ``**kw`` forwards to
+    the constructor (e.g. ``get_local_algo('fedprox', prox_mu=0.01)``)."""
+    if name not in LOCAL_ALGOS:
+        raise ValueError(
+            f"unknown local algorithm {name!r}; known: {list(ALGO_NAMES)}"
+        )
+    return LOCAL_ALGOS[name](**kw)
+
+
+def algo_from_config(
+    name: str,
+    prox_mu: Optional[float] = None,
+    feddyn_alpha: Optional[float] = None,
+) -> LocalAlgo:
+    """The FLConfig -> algorithm mapping (one definition for engine,
+    trainer, and launchers).  Hyperparameter/algorithm combos are validated
+    by ``FLConfig.__post_init__``; here unset values fall back to each
+    constructor's default."""
+    kw = {}
+    if name == "fedprox" and prox_mu is not None:
+        kw["prox_mu"] = prox_mu
+    if name == "feddyn" and feddyn_alpha is not None:
+        kw["feddyn_alpha"] = feddyn_alpha
+    return get_local_algo(name, **kw)
+
+
+def init_client_states(algo: LocalAlgo, params: PyTree, num_clients: int):
+    """Stacked per-client algorithm state: every leaf of ``algo.init``
+    broadcast to a leading ``(C,)`` client axis — the layout
+    ``CLIENT_SHARDED_FIELDS`` lays over the mesh.  ``None`` for stateless
+    algorithms so the ServerState pytree (and every compiled program keyed
+    on it) is unchanged."""
+    if not algo.stateful:
+        return None
+    proto = algo.init(params)
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros((num_clients,) + s.shape, s.dtype), proto
+    )

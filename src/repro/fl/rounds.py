@@ -22,10 +22,21 @@ the candidate set was.  That is why slot-capped (``cohort_cap``) and
 bounded-staleness execution compose with ``candidate_frac`` with no code
 here changing: a funneled cohort is just a cohort by the time it reaches a
 round step.
+
+*What* each client computes is pluggable (DESIGN.md §12): every builder
+takes an ``algo`` — a :class:`repro.fl.local_algos.LocalAlgo` — whose
+per-step gradient hook and per-round state evolution are folded into the
+client scan by :func:`build_local_algo_update`.  ``algo=None`` means
+FedAvg and keeps every legacy signature, return shape, and compiled graph
+untouched; a *stateful* algorithm (FedDyn) extends the signatures with a
+per-client state pytree in and a *candidate* new state out — masked
+write-back (cohort membership, guard verdicts, survivor floors) is the
+engine's job, since only it knows the round's refresh mask.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Optional, Tuple
 
 import jax
@@ -37,7 +48,9 @@ from repro.core.metrics import finite_mean, safe_div
 
 __all__ = [
     "weighted_average",
+    "make_grad_fn",
     "build_local_update",
+    "build_local_algo_update",
     "build_client_parallel_round",
     "build_shard_cohort_round",
     "build_stale_shard_cohort_round",
@@ -61,27 +74,18 @@ def weighted_average(trees: PyTree, weights: jax.Array) -> PyTree:
     return jax.tree_util.tree_map(avg, trees)
 
 
-def build_local_update(
-    loss_fn: LossFn,
-    lr: float,
-    grad_clip: Optional[float] = None,
-    unroll=1,
-    micro_batches: int = 1,
-) -> Callable[[PyTree, PyTree], Tuple[PyTree, jax.Array]]:
-    """One client's E local SGD passes (eq. 3-5) as a pure function.
-
-    ``local_update(params, steps_batch) -> (params, losses)`` where every leaf
-    of ``steps_batch`` has leading shape ``(local_steps, ...)``.  Shared by
-    the vmapped/mapped single-device round (:func:`build_client_parallel_round`)
-    and the mesh-sharded round (:func:`build_shard_cohort_round`) so both
-    execute bit-identical per-client math.
-    """
+def make_grad_fn(
+    loss_fn: LossFn, micro_batches: int = 1
+) -> Callable[[PyTree, PyTree], Tuple[jax.Array, PyTree]]:
+    """``grad_fn(params, batch) -> (loss, grad)``, optionally accumulated
+    over ``micro_batches`` slices of the batch's leading sample axis —
+    identical full-batch gradient, 1/micro_batches the live activations
+    (§Perf memory lever).  The one gradient definition shared by every
+    local-update algorithm and the Mode-B FedSGD step."""
 
     def _full_grad(p, batch):
         if micro_batches == 1:
             return jax.value_and_grad(loss_fn)(p, batch)
-        # gradient accumulation over micro-batches: identical full-batch
-        # gradient, 1/micro_batches the live activations (§Perf memory lever)
         micro = jax.tree_util.tree_map(
             lambda x: x.reshape((micro_batches, x.shape[0] // micro_batches) + x.shape[1:]),
             batch,
@@ -97,10 +101,44 @@ def build_local_update(
         inv = 1.0 / micro_batches
         return loss * inv, jax.tree_util.tree_map(lambda x: x * inv, g)
 
-    def local_update(params: PyTree, steps_batch: PyTree) -> Tuple[PyTree, jax.Array]:
-        # eq. (3)-(5): E plain-SGD passes; steps_batch leaves: (local_steps, ...)
+    return _full_grad
+
+
+def build_local_algo_update(
+    algo,
+    loss_fn: LossFn,
+    lr: float,
+    grad_clip: Optional[float] = None,
+    unroll=1,
+    micro_batches: int = 1,
+) -> Callable:
+    """One client's E local passes of a registered algorithm (DESIGN.md §12).
+
+    The entry ``params`` are the round's base — the anchor every
+    drift-correcting term measures against (under bounded staleness that is
+    the shard's stale ring read, exactly the params the client trained
+    from).  Two signatures, chosen by ``algo.stateful``:
+
+    * stateless — ``local_update(params, steps_batch) -> (params, losses)``,
+      the legacy :func:`build_local_update` contract.  The FedAvg identity
+      hook makes this trace to the *same* program as the pre-registry SGD
+      scan, so ``local_algo="fedavg"`` is bit-identical everywhere.
+    * stateful — ``local_update(params, client_state, steps_batch) ->
+      (params, new_client_state, losses)``; the state is constant during
+      the scan (a per-*round* quantity) and evolved once by
+      ``algo.finalize`` after the final step.
+    """
+    if algo is None:
+        from repro.fl.local_algos import FedAvg
+
+        algo = FedAvg()
+    _full_grad = make_grad_fn(loss_fn, micro_batches)
+
+    def _scan_steps(params, client_state, anchor, steps_batch):
+        # eq. (3)-(5): E SGD passes with the algorithm's per-step grad term
         def one_step(p, batch):
             loss, g = _full_grad(p, batch)
+            g = algo.transform_grad(g, p, client_state, anchor)
             if grad_clip is not None:
                 g = optim_lib.clip_by_global_norm(g, grad_clip)
             p = jax.tree_util.tree_map(lambda w, gw: (w - lr * gw).astype(w.dtype), p, g)
@@ -108,7 +146,49 @@ def build_local_update(
 
         return lax.scan(one_step, params, steps_batch, unroll=unroll)
 
-    return local_update
+    if not algo.stateful:
+
+        def local_update(params: PyTree, steps_batch: PyTree):
+            return _scan_steps(params, (), params, steps_batch)
+
+        return local_update
+
+    def stateful_local_update(params: PyTree, client_state: PyTree, steps_batch: PyTree):
+        anchor = params
+        new_params, losses = _scan_steps(params, client_state, anchor, steps_batch)
+        new_state = algo.finalize(new_params, client_state, anchor)
+        return new_params, new_state, losses
+
+    return stateful_local_update
+
+
+def build_local_update(
+    loss_fn: LossFn,
+    lr: float,
+    grad_clip: Optional[float] = None,
+    unroll=1,
+    micro_batches: int = 1,
+) -> Callable[[PyTree, PyTree], Tuple[PyTree, jax.Array]]:
+    """Deprecated alias for the registry's FedAvg (DESIGN.md §12).
+
+    ``local_update(params, steps_batch) -> (params, losses)`` — the exact
+    pre-registry plain-SGD scan, now produced by
+    ``build_local_algo_update(get_local_algo("fedavg"), ...)``.  Kept so
+    existing imports and the legacy parity oracle keep working; new code
+    should go through the registry.
+    """
+    warnings.warn(
+        "build_local_update is deprecated; use "
+        "build_local_algo_update(get_local_algo('fedavg'), ...) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.fl.local_algos import get_local_algo
+
+    return build_local_algo_update(
+        get_local_algo("fedavg"), loss_fn, lr, grad_clip=grad_clip,
+        unroll=unroll, micro_batches=micro_batches,
+    )
 
 
 def build_client_parallel_round(
@@ -121,6 +201,7 @@ def build_client_parallel_round(
     sequential_clients: bool = False,
     micro_batches: int = 1,
     update_transform: Optional[Callable] = None,
+    algo=None,
 ) -> Callable[[PyTree, PyTree, jax.Array], Tuple[PyTree, jax.Array]]:
     """Mode A round step.
 
@@ -141,29 +222,49 @@ def build_client_parallel_round(
     NaN-aware cohort mean, the per-client quarantine flags, and the count of
     clients left in the weighted sum.  When ``None`` (the default) the
     legacy signature, return, and compiled graph are untouched.
-    """
-    local_update = build_local_update(
-        loss_fn, lr, grad_clip=grad_clip, unroll=unroll, micro_batches=micro_batches
-    )
 
-    def round_step(global_params, client_batches, client_weights, *guard_args):
+    ``algo`` (DESIGN.md §12) selects the local-update algorithm (``None`` =
+    FedAvg, legacy-identical graph).  A *stateful* algorithm adds a required
+    keyword ``client_states`` (leaves leading ``(C_p, ...)``) and appends
+    the candidate new states as the final return element — the caller owns
+    the masked write-back, since only it knows the round's refresh mask.
+    """
+    local_update = build_local_algo_update(
+        algo, loss_fn, lr, grad_clip=grad_clip, unroll=unroll,
+        micro_batches=micro_batches,
+    )
+    stateful = algo is not None and algo.stateful
+
+    def round_step(
+        global_params, client_batches, client_weights, *guard_args,
+        client_states=None,
+    ):
         n_clients = client_weights.shape[0]
         per_client = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (n_clients,) + x.shape), global_params
         )
         if client_constraint is not None:
             per_client = client_constraint(per_client)
+        operands = (
+            (per_client, client_states, client_batches)
+            if stateful
+            else (per_client, client_batches)
+        )
         if sequential_clients:
             # CPU-simulation path: vmapped convs lower to grouped convolutions
             # (XLA-CPU pathology, ~10x slow); on the mesh each device owns one
             # client so vmap is right there, lax.map is right here.
-            new_params, losses = jax.lax.map(
-                lambda args: local_update(*args), (per_client, client_batches)
-            )
+            out = jax.lax.map(lambda args: local_update(*args), operands)
         else:
-            new_params, losses = jax.vmap(local_update)(per_client, client_batches)
+            out = jax.vmap(local_update)(*operands)
+        if stateful:
+            new_params, new_states, losses = out
+        else:
+            new_params, losses = out
         if update_transform is None:
             agg = weighted_average(new_params, client_weights)
+            if stateful:
+                return agg, jnp.mean(losses), new_states
             return agg, jnp.mean(losses)
         new_params, w, losses, flagged = update_transform(
             new_params, global_params, client_weights, losses, *guard_args
@@ -172,6 +273,8 @@ def build_client_parallel_round(
         entry = jnp.mean(losses, axis=tuple(range(1, losses.ndim)))
         mean_loss = finite_mean(entry, where=w > 0)
         survivors = jnp.sum((w > 0).astype(jnp.int32))
+        if stateful:
+            return agg, mean_loss, flagged, survivors, new_states
         return agg, mean_loss, flagged, survivors
 
     return round_step
@@ -187,6 +290,7 @@ def build_shard_cohort_round(
     micro_batches: int = 1,
     cap: Optional[int] = None,
     update_transform: Optional[Callable] = None,
+    algo=None,
 ) -> Callable[..., Tuple[PyTree, jax.Array, jax.Array, Any]]:
     """Mesh-sharded Mode-A round step for ONE client shard.
 
@@ -240,18 +344,38 @@ def build_shard_cohort_round(
     client_losses, mean_loss, extras, flagged, survivors)`` with ``flagged``
     in resident layout.  When ``None`` the legacy signature, return, and
     compiled graph are untouched.
-    """
-    local_update = build_local_update(
-        loss_fn, lr, grad_clip=grad_clip, unroll=unroll, micro_batches=micro_batches
-    )
 
-    def _updates(global_params, batches, n):
+    ``algo`` (DESIGN.md §12) selects the local-update algorithm (``None`` =
+    FedAvg, legacy-identical graph).  A *stateful* algorithm adds a
+    required keyword ``local_states`` — this shard's resident-layout state
+    slice, leaves leading ``(C_loc, ...)`` — and appends the candidate new
+    states (same layout; slot mode gathers states by ``slot_index`` and
+    scatters the trained slots back, untouched residents keep their old
+    state) as the final return element.  Per-device state, never psum'd:
+    the caller owns the masked write-back.
+    """
+    local_update = build_local_algo_update(
+        algo, loss_fn, lr, grad_clip=grad_clip, unroll=unroll,
+        micro_batches=micro_batches,
+    )
+    stateful = algo is not None and algo.stateful
+
+    def _updates(global_params, batches, n, states=None):
         per_client = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (n,) + x.shape), global_params
         )
+        operands = (
+            (per_client, states, batches) if stateful else (per_client, batches)
+        )
         if sequential_clients:
-            return jax.lax.map(lambda args: local_update(*args), (per_client, batches))
-        return jax.vmap(local_update)(per_client, batches)
+            out = jax.lax.map(lambda args: local_update(*args), operands)
+        else:
+            out = jax.vmap(local_update)(*operands)
+        if stateful:
+            new_params, new_states, losses = out
+            return new_params, losses, new_states
+        new_params, losses = out
+        return new_params, losses, None
 
     def _aggregate(new_params, losses, weights, extras, survivors_local=None):
         # eq. (6) as partial weighted sums: Σ_c w_c·θ_c / Σ_c w_c.  ALL the
@@ -293,13 +417,15 @@ def build_shard_cohort_round(
         return agg, masked_losses, mean_loss, extras, reduced[5]
 
     def round_step(
-        global_params, local_batches, local_weights, extras=None, guard_args=()
+        global_params, local_batches, local_weights, extras=None, guard_args=(),
+        local_states=None,
     ):
-        new_params, losses = _updates(
-            global_params, local_batches, local_weights.shape[0]
+        new_params, losses, new_states = _updates(
+            global_params, local_batches, local_weights.shape[0], local_states
         )
         if update_transform is None:
-            return _aggregate(new_params, losses, local_weights, extras)
+            out = _aggregate(new_params, losses, local_weights, extras)
+            return out + (new_states,) if stateful else out
         new_params, w, losses, flagged = update_transform(
             new_params, global_params, local_weights, losses, *guard_args
         )
@@ -307,13 +433,33 @@ def build_shard_cohort_round(
         agg, client_losses, mean_loss, extras, survivors = _aggregate(
             new_params, losses, w, extras, survivors_local
         )
-        return agg, client_losses, mean_loss, extras, flagged, survivors
+        out = (agg, client_losses, mean_loss, extras, flagged, survivors)
+        return out + (new_states,) if stateful else out
 
     def slot_round_step(
         global_params, slot_batches, local_weights, slot_index, extras=None,
-        guard_args=(),
+        guard_args=(), local_states=None,
     ):
-        new_params, losses = _updates(global_params, slot_batches, cap)
+        slot_states = (
+            jax.tree_util.tree_map(
+                lambda s: jnp.take(s, slot_index, axis=0), local_states
+            )
+            if stateful
+            else None
+        )
+        new_params, losses, new_slot_states = _updates(
+            global_params, slot_batches, cap, slot_states
+        )
+        if stateful:
+            # scatter trained slot states back to resident layout; residents
+            # no slot covered keep their old state (their refresh mask is
+            # False anyway — weight-0 padding slots never pass write-back)
+            new_states = jax.tree_util.tree_map(
+                lambda full, slot_new: full.at[slot_index].set(slot_new),
+                local_states, new_slot_states,
+            )
+        else:
+            new_states = None
         slot_weights = jnp.take(local_weights, slot_index)
         if update_transform is not None:
             new_params, slot_weights, losses, slot_flagged = update_transform(
@@ -335,7 +481,8 @@ def build_shard_cohort_round(
             .set(slot_losses)
         )
         if update_transform is None:
-            return agg, client_losses, mean_loss, extras
+            out = (agg, client_losses, mean_loss, extras)
+            return out + (new_states,) if stateful else out
         # scatter flags the same way: padding slots carry weight 0, so they
         # can never be flagged and the scatter stays collision-free
         flagged = (
@@ -343,7 +490,8 @@ def build_shard_cohort_round(
             .at[slot_index]
             .set(slot_flagged)
         )
-        return agg, client_losses, mean_loss, extras, flagged, survivors
+        out = (agg, client_losses, mean_loss, extras, flagged, survivors)
+        return out + (new_states,) if stateful else out
 
     return round_step if cap is None else slot_round_step
 
@@ -357,6 +505,7 @@ def build_stale_shard_cohort_round(
     sequential_clients: bool = True,
     micro_batches: int = 1,
     update_transform: Optional[Callable] = None,
+    algo=None,
 ) -> Callable[..., Tuple[PyTree, jax.Array, jax.Array, Any]]:
     """Bounded-staleness variant of :func:`build_shard_cohort_round`
     (DESIGN.md §9) — same residents, same local updates, same single psum,
@@ -371,7 +520,7 @@ def build_stale_shard_cohort_round(
     staleness-decay weight λ(s_d).
 
     The shard reads its base params from the ring, runs the standard
-    resident-mode local updates (:func:`build_local_update` via the
+    resident-mode local updates (:func:`build_local_algo_update` via the
     synchronous round — bit-identical per-client math), and contributes
     eq.-(6) partial weighted sums with weights ``λ(s_d)·w_c`` to the SAME
     single psum rendezvous; the psum'd ``Σ λw`` denominator normalises the
@@ -381,16 +530,22 @@ def build_stale_shard_cohort_round(
     weight-0 ⟺ non-cohort NaN loss-masking convention unchanged; with
     ``read_slot`` pointing at the current round and ``stale_scale = 1`` the
     step is bit-identical to the synchronous round.
+
+    ``algo`` (DESIGN.md §12) passes through to the inner resident round;
+    a stateful algorithm adds the ``local_states`` keyword / trailing
+    candidate-state return.  The drift-correction anchor is the shard's
+    *stale* ring read — the params the clients actually trained from —
+    because the inner round anchors to its entry base params.
     """
     inner = build_shard_cohort_round(
         loss_fn, lr, axis, grad_clip=grad_clip, unroll=unroll,
         sequential_clients=sequential_clients, micro_batches=micro_batches,
-        update_transform=update_transform,
+        update_transform=update_transform, algo=algo,
     )
 
     def round_step(
         param_hist, read_slot, stale_scale, local_batches, local_weights,
-        extras=None, guard_args=(),
+        extras=None, guard_args=(), local_states=None,
     ):
         # the guard's base params are the shard's *stale* ring read — update
         # norms are measured against the params the clients actually trained
@@ -402,11 +557,12 @@ def build_stale_shard_cohort_round(
         )
         if update_transform is None:
             return inner(
-                base, local_batches, local_weights * stale_scale, extras=extras
+                base, local_batches, local_weights * stale_scale, extras=extras,
+                local_states=local_states,
             )
         return inner(
             base, local_batches, local_weights * stale_scale, extras=extras,
-            guard_args=guard_args,
+            guard_args=guard_args, local_states=local_states,
         )
 
     return round_step

@@ -33,6 +33,7 @@ from repro.core import profiles as profiles_lib
 from repro.core import selection as selection_lib
 from repro.core import similarity as similarity_lib
 from repro.fl import engine as engine_lib
+from repro.fl import local_algos as local_algos_lib
 from repro.fl import rounds as rounds_lib
 from repro.fl import staleness as staleness_lib
 from repro.fl.engine import FLConfig
@@ -97,6 +98,9 @@ def _cached_round_fn(cfg: FLConfig, loss_fn, accuracy_fn, strategy, mesh, client
         cfg.robust_norm_mult,
         cfg.min_survivors,
         cfg.quarantine_rounds,
+        cfg.local_algo,
+        cfg.prox_mu,
+        cfg.feddyn_alpha,
         mesh,
         client_axis,
     )
@@ -222,10 +226,15 @@ class FLTrainer:
 
     # ------------------------------------------------------------------
     def _supports_engine(self) -> bool:
-        """Pure-selection strategies run scanned; host-only customs fall back."""
+        """Pure-selection strategies run scanned; host-only customs fall back.
+
+        A strategy is engine-capable when it overrides the canonical
+        ``draw_fn`` — or, pre-registry style, the legacy ``select_fn``
+        (which the base ``draw_fn`` dispatches to)."""
+        base = selection_lib.SelectionStrategy
         return (
-            type(self.strategy).select_fn
-            is not selection_lib.SelectionStrategy.select_fn
+            type(self.strategy).draw_fn is not base.draw_fn
+            or type(self.strategy).select_fn is not base.select_fn
         )
 
     def _cluster_labels(self, candidates=None) -> jax.Array:
@@ -321,6 +330,9 @@ class FLTrainer:
                 if cfg.guarded()
                 else None
             ),
+            algo_state=local_algos_lib.init_client_states(
+                cfg.local_algo_obj(), self.params, cfg.num_clients
+            ),
         )
         if self.mesh is not None:
             state = engine_lib.shard_server_state(
@@ -385,6 +397,12 @@ class FLTrainer:
                     "faults / robust aggregation require a strategy with a "
                     "pure select_fn (the scanned engine path): the legacy "
                     "host loop has no fault-injection or quarantine layer"
+                )
+            if cfg.local_algo != "fedavg":
+                raise ValueError(
+                    f"local_algo={cfg.local_algo!r} requires a strategy with "
+                    "a pure draw_fn (the scanned engine path): the legacy "
+                    "host loop is hardwired to plain SGD (fedavg)"
                 )
             return self.run_legacy(rounds=rounds, progress=progress)
 

@@ -293,7 +293,10 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
                         scenario: Optional[str] = None,
                         candidate_frac: Optional[float] = None,
                         faults: Optional[str] = None,
-                        aggregator: str = "mean") -> Dict:
+                        aggregator: str = "mean",
+                        local_algo: str = "fedavg",
+                        prox_mu: Optional[float] = None,
+                        feddyn_alpha: Optional[float] = None) -> Dict:
     """Prove the mesh-sharded federation engine (DESIGN.md §8) lowers and
     compiles at scale: C clients sharded over an N-device client mesh, the
     scanned round's local-update core as a shard_map with psum'd FedAvg.
@@ -327,6 +330,12 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
     cohort median) inside the shard_map before the unchanged single psum,
     quarantine counters carried in the scan, and the survivors-floor identity
     round — the full robustness layer must lower on the client mesh.
+
+    ``local_algo`` compiles the pluggable local-update variant (DESIGN.md
+    §12): ``feddyn`` carries the client-sharded per-client penalty state
+    through the scan (gathered/scattered by the same slot machinery),
+    proving a stateful local algorithm lowers on the client mesh with the
+    aggregation path untouched.
     """
     import numpy as np
 
@@ -343,6 +352,8 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
         case = "fl_sharded_engine_funnel"
     elif faults is not None or aggregator != "mean":
         case = "fl_sharded_engine_faulty"
+    elif local_algo != "fedavg":
+        case = f"fl_sharded_engine_{local_algo}"
     rec: Dict = {
         "case": case,
         "mesh": f"{num_devices}x1({sh.CLIENT_AXIS})",
@@ -354,6 +365,7 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
         "candidate_frac": candidate_frac,
         "faults": faults,
         "aggregator": aggregator,
+        "local_algo": local_algo,
         "scan_rounds": rounds,
     }
     try:
@@ -377,7 +389,8 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
             num_classes=ncls, seed=0, cohort_cap=cohort_cap,
             staleness_bound=staleness_bound, scenario=scenario,
             candidate_frac=candidate_frac, faults=faults,
-            aggregator=aggregator,
+            aggregator=aggregator, local_algo=local_algo,
+            prox_mu=prox_mu, feddyn_alpha=feddyn_alpha,
         )
         strat = selection_lib.DPPSelection()
         state = engine_lib.init_server_state(
@@ -614,8 +627,10 @@ def main():
         # cohort (cap = min(C/N, k)), the bounded-staleness variant (ring
         # buffer + counters under heavy-tail latency, DESIGN.md §9), the
         # two-stage funnel variant (Q×Q candidate kernel, DESIGN.md §10),
-        # and the fault-tolerant variant (chaos faults + trimmed_mean guard,
-        # DESIGN.md §11) — all five must lower and compile
+        # the fault-tolerant variant (chaos faults + trimmed_mean guard,
+        # DESIGN.md §11), and the stateful local-algorithm variant (feddyn's
+        # client-sharded penalty state, DESIGN.md §12) — all six must lower
+        # and compile
         recs = [
             run_fl_sharded_case(num_devices=args.fl_devices),
             run_fl_sharded_case(
@@ -637,6 +652,11 @@ def main():
                 faults="chaos",
                 aggregator="trimmed_mean",
             ),
+            run_fl_sharded_case(
+                num_devices=args.fl_devices,
+                local_algo="feddyn",
+                feddyn_alpha=0.01,
+            ),
         ]
         any_fail = False
         for rec in recs:
@@ -654,6 +674,8 @@ def main():
                    if frac is not None else "")
                 + (f" faults={rec['faults']}/{rec['aggregator']}"
                    if rec.get("faults") is not None else "")
+                + (f" algo={rec['local_algo']}"
+                   if rec.get("local_algo", "fedavg") != "fedavg" else "")
                 + f" {rec['total_s']:7.1f}s"
                 + ("" if rec["ok"] else f"  {rec['error'][:120]}")
             )

@@ -27,6 +27,7 @@ from repro.data import make_token_dataset
 from repro.fl import engine as engine_lib
 from repro.fl import rounds as rounds_lib
 from repro.fl.faults import AGGREGATORS, FAULT_NAMES
+from repro.fl.local_algos import ALGO_NAMES
 from repro.fl.scenarios import SCENARIO_NAMES
 from repro.fl.staleness import DECAY_FAMILIES
 from repro.launch.mesh import make_client_mesh
@@ -92,6 +93,13 @@ def run_fl(args):
     ``--ckpt-every N`` and ``--ckpt DIR`` the full ``ServerState`` snapshots
     every N rounds and a re-launch resumes bit-identically from the latest
     snapshot.
+
+    ``--local-algo {fedavg,fedprox,feddyn}`` (DESIGN.md §12) swaps the
+    client-side objective without touching any of the above: e.g.
+    ``--local-algo fedprox --prox-mu 0.01`` adds the proximal drift
+    penalty, ``--local-algo feddyn --feddyn-alpha 0.01`` carries a
+    per-client linear-penalty state across rounds (client-sharded,
+    checkpointed with the ServerState).  Composes with every flag above.
     """
     mesh = None
     shard_clients = getattr(args, "shard_clients", 0)
@@ -151,6 +159,9 @@ def run_fl(args):
         faults=getattr(args, "faults", None),
         aggregator=getattr(args, "aggregator", "mean"),
         ckpt_every=getattr(args, "ckpt_every", None),
+        local_algo=getattr(args, "local_algo", "fedavg"),
+        prox_mu=getattr(args, "prox_mu", None),
+        feddyn_alpha=getattr(args, "feddyn_alpha", None),
     )
     state = engine_lib.init_server_state(
         flcfg, params, loss_fn, None, clients, topics,
@@ -297,6 +308,16 @@ def main():
                     help="aggregation mode: mean (eq. 6), clipped_mean "
                          "(norm-clip outliers to the cohort-median "
                          "threshold), trimmed_mean (reject outliers)")
+    ap.add_argument("--local-algo", choices=ALGO_NAMES, default="fedavg",
+                    help="local-update algorithm (DESIGN.md §12): fedavg "
+                         "(plain SGD), fedprox (proximal drift penalty), "
+                         "feddyn (per-client linear-penalty state)")
+    ap.add_argument("--prox-mu", type=float, default=None,
+                    help="fedprox proximal coefficient mu (requires "
+                         "--local-algo fedprox)")
+    ap.add_argument("--feddyn-alpha", type=float, default=None,
+                    help="feddyn penalty coefficient alpha (requires "
+                         "--local-algo feddyn)")
     ap.add_argument("--ckpt-every", type=int, default=None,
                     help="snapshot the full ServerState to --ckpt every N "
                          "rounds; a re-launch resumes from the latest "

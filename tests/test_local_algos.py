@@ -1,0 +1,450 @@
+"""Pluggable local-update algorithm registry (DESIGN.md §12).
+
+Tier-1 (single device): registry ergonomics + FLConfig validation, the
+deprecated ``build_local_update`` wrapper, the ``prox_mu=0 ⇒ fedavg``
+reduction (hypothesis property when available, deterministic fallback
+always), FedDyn state evolution, and feddyn checkpoint round-trip parity.
+The sharded variants (resident, slot-capped, stale, fault-guarded) run
+under the CI ``multidevice`` job
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import selection as selection_lib
+from repro.fl import engine, faults, local_algos, scenarios
+from repro.fl import rounds as rounds_lib
+from repro.launch.mesh import make_client_mesh
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+FEAT, N_C, NCLS = 8, 6, 4
+
+
+def linear_loss(params, x, y):
+    logp = jax.nn.log_softmax(x @ params["w"] + params["b"])
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+
+def _federation(c, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(c, N_C, FEAT)).astype(np.float32))
+    ys = jnp.asarray(rng.integers(0, NCLS, size=(c, N_C)), jnp.int32)
+    params = {
+        "w": jnp.asarray(0.01 * rng.normal(size=(FEAT, NCLS)).astype(np.float32)),
+        "b": jnp.zeros((NCLS,), jnp.float32),
+    }
+    return xs, ys, params
+
+
+def _state_and_cfg(c, k, strategy, mesh=None, rounds=8, **cfg_kw):
+    xs, ys, params = _federation(c)
+    cfg = engine.FLConfig(
+        num_clients=c, clients_per_round=k, local_epochs=2, lr=0.1,
+        rounds=rounds, eval_every=2, num_classes=NCLS, seed=0, **cfg_kw,
+    )
+    state = engine.init_server_state(
+        cfg, params, linear_loss, None, xs, ys,
+        strategy=strategy, profiles=xs.mean(axis=1), mesh=mesh,
+    )
+    return cfg, state
+
+
+def _run(cfg, state, rounds, mesh=None):
+    rf = engine.make_round_fn(cfg, linear_loss, (selection_lib.UniformSelection(),),
+                              mesh=mesh)
+    fin, outs = engine.run_scanned(rf, state, rounds)
+    return fin, jax.tree_util.tree_map(np.asarray, outs)
+
+
+def _max_param_diff(a, b):
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+# ------------------------------------------------------------ registry
+
+
+def test_unknown_local_algo_lists_known():
+    with pytest.raises(ValueError) as e:
+        local_algos.get_local_algo("nope")
+    msg = str(e.value)
+    for name in local_algos.ALGO_NAMES:
+        assert name in msg
+
+
+def test_registry_error_shape_uniform():
+    """make_strategy / scenario / fault / local-algo registries raise the
+    SAME ValueError shape: ``unknown <what> '<name>'; known: [...]``."""
+    raisers = [
+        lambda: selection_lib.make_strategy("nope"),
+        lambda: scenarios.get_scenario("nope"),
+        lambda: faults.get_fault_model("nope"),
+        lambda: local_algos.get_local_algo("nope"),
+    ]
+    for fn in raisers:
+        with pytest.raises(ValueError, match=r"unknown .*'nope'; known: \["):
+            fn()
+
+
+def test_all_algo_names_resolve():
+    assert local_algos.ALGO_NAMES == tuple(sorted(local_algos.LOCAL_ALGOS))
+    for name in local_algos.ALGO_NAMES:
+        a = local_algos.get_local_algo(name)
+        assert a.name == name
+    assert not local_algos.get_local_algo("fedavg").stateful
+    assert not local_algos.get_local_algo("fedprox").stateful
+    assert local_algos.get_local_algo("feddyn").stateful
+
+
+@pytest.mark.parametrize("bad", [
+    lambda: local_algos.FedProx(prox_mu=-0.1),
+    lambda: local_algos.FedDyn(feddyn_alpha=0.0),
+    lambda: local_algos.FedDyn(feddyn_alpha=-1.0),
+])
+def test_algo_hyperparam_validation(bad):
+    with pytest.raises(ValueError):
+        bad()
+
+
+@pytest.mark.parametrize("bad_kw", [
+    dict(local_algo="nope"),
+    dict(local_algo="fedavg", prox_mu=0.01),
+    dict(local_algo="fedavg", feddyn_alpha=0.01),
+    dict(local_algo="fedprox", feddyn_alpha=0.01),
+    dict(local_algo="fedprox", prox_mu=-0.5),
+    dict(local_algo="feddyn", prox_mu=0.01),
+    dict(local_algo="feddyn", feddyn_alpha=0.0),
+])
+def test_flconfig_validates_algo_combos(bad_kw):
+    with pytest.raises(ValueError):
+        engine.FLConfig(
+            num_clients=8, clients_per_round=4, local_epochs=1, lr=0.1,
+            rounds=2, eval_every=1, num_classes=NCLS, seed=0, **bad_kw,
+        )
+
+
+# ------------------------------------------------- deprecated wrapper
+
+
+def test_build_local_update_deprecated_but_identical():
+    xs, ys, params = _federation(4)
+    batched = lambda p, b: linear_loss(p, b[0], b[1])
+    steps = (xs[0].reshape(2, 3, FEAT), ys[0].reshape(2, 3))  # (steps=2, B=3)
+    with pytest.warns(DeprecationWarning, match="build_local_algo_update"):
+        legacy = rounds_lib.build_local_update(batched, 0.1)
+    fresh = rounds_lib.build_local_algo_update(
+        local_algos.get_local_algo("fedavg"), batched, 0.1
+    )
+    p1, l1 = legacy(params, steps)
+    p2, l2 = fresh(params, steps)
+    assert _max_param_diff(p1, p2) == 0.0
+    assert bool(jnp.array_equal(l1, l2))
+
+
+# ------------------------------------------------- mu=0 reduction
+
+
+def _local_update_outputs(algo, seed):
+    rng = np.random.default_rng(seed)
+    params = {
+        "w": jnp.asarray(rng.normal(size=(FEAT, NCLS)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(NCLS,)).astype(np.float32)),
+    }
+    x = jnp.asarray(rng.normal(size=(3, 5, FEAT)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, NCLS, size=(3, 5)), jnp.int32)
+    batched = lambda p, b: linear_loss(p, b[0], b[1])
+    upd = rounds_lib.build_local_algo_update(algo, batched, 0.07)
+    return upd(params, (x, y))
+
+
+def _assert_prox_zero_is_fedavg(seed):
+    p_avg, l_avg = _local_update_outputs(local_algos.FedAvg(), seed)
+    p_prx, l_prx = _local_update_outputs(local_algos.FedProx(prox_mu=0.0), seed)
+    assert _max_param_diff(p_avg, p_prx) == 0.0
+    assert bool(jnp.array_equal(l_avg, l_prx))
+
+
+def test_fedprox_zero_mu_is_fedavg_local_update():
+    for seed in range(3):
+        _assert_prox_zero_is_fedavg(seed)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_fedprox_zero_mu_is_fedavg_property(seed):
+        """Hypothesis property: prox_mu=0 reduces fedprox to fedavg EXACTLY
+        (same compiled program, bit-identical params and losses)."""
+        _assert_prox_zero_is_fedavg(seed)
+
+
+def test_fedprox_zero_mu_engine_history_bit_identical():
+    c, k = 12, 4
+    cfg_a, s_a = _state_and_cfg(c, k, selection_lib.UniformSelection())
+    cfg_p, s_p = _state_and_cfg(
+        c, k, selection_lib.UniformSelection(),
+        local_algo="fedprox", prox_mu=0.0,
+    )
+    f_a, o_a = _run(cfg_a, s_a, 6)
+    f_p, o_p = _run(cfg_p, s_p, 6)
+    assert np.array_equal(o_a["selected"], o_p["selected"])
+    assert np.array_equal(o_a["loss"], o_p["loss"])
+    assert _max_param_diff(f_a.params, f_p.params) == 0.0
+
+
+def test_fedprox_nonzero_mu_changes_trajectory():
+    c, k = 12, 4
+    cfg_a, s_a = _state_and_cfg(c, k, selection_lib.UniformSelection())
+    cfg_p, s_p = _state_and_cfg(
+        c, k, selection_lib.UniformSelection(),
+        local_algo="fedprox", prox_mu=1.0,
+    )
+    f_a, o_a = _run(cfg_a, s_a, 6)
+    f_p, o_p = _run(cfg_p, s_p, 6)
+    # same cohorts (selection is algorithm-independent), different params
+    assert np.array_equal(o_a["selected"], o_p["selected"])
+    assert _max_param_diff(f_a.params, f_p.params) > 0.0
+
+
+# ------------------------------------------------- feddyn state
+
+
+def test_feddyn_state_lives_in_server_state():
+    c, k = 12, 4
+    cfg, state = _state_and_cfg(
+        c, k, selection_lib.UniformSelection(),
+        local_algo="feddyn", feddyn_alpha=0.1,
+    )
+    assert state.algo_state is not None
+    for leaf, p_leaf in zip(
+        jax.tree_util.tree_leaves(state.algo_state),
+        jax.tree_util.tree_leaves(state.params),
+    ):
+        assert leaf.shape == (c,) + p_leaf.shape
+        assert leaf.dtype == jnp.float32
+        assert float(jnp.abs(leaf).sum()) == 0.0
+
+
+def test_feddyn_state_updates_only_selected_clients():
+    c, k = 12, 4
+    cfg, state = _state_and_cfg(
+        c, k, selection_lib.UniformSelection(),
+        local_algo="feddyn", feddyn_alpha=0.1,
+    )
+    fin, outs = _run(cfg, state, 1)
+    sel = set(np.asarray(outs["selected"]).ravel().tolist())
+    h_norm = sum(
+        np.abs(np.asarray(l)).sum(axis=tuple(range(1, l.ndim)))
+        for l in jax.tree_util.tree_leaves(fin.algo_state)
+    )
+    for ci in range(c):
+        if ci in sel:
+            assert h_norm[ci] > 0.0, ci
+        else:
+            assert h_norm[ci] == 0.0, ci
+
+
+def test_feddyn_differs_from_fedavg():
+    c, k = 12, 4
+    cfg_a, s_a = _state_and_cfg(c, k, selection_lib.UniformSelection())
+    cfg_d, s_d = _state_and_cfg(
+        c, k, selection_lib.UniformSelection(),
+        local_algo="feddyn", feddyn_alpha=0.5,
+    )
+    f_a, o_a = _run(cfg_a, s_a, 6)
+    f_d, o_d = _run(cfg_d, s_d, 6)
+    assert np.array_equal(o_a["selected"], o_d["selected"])
+    assert _max_param_diff(f_a.params, f_d.params) > 0.0
+
+
+def test_feddyn_checkpoint_roundtrip_bit_parity(tmp_path):
+    """FedDyn's client state is part of the ServerState snapshot: a mid-run
+    save/restore resumes bit-identically (params AND algo_state)."""
+    cfg, state = _state_and_cfg(
+        10, 4, selection_lib.UniformSelection(),
+        local_algo="feddyn", feddyn_alpha=0.1,
+    )
+    rf = engine.make_round_fn(cfg, linear_loss,
+                              (selection_lib.UniformSelection(),))
+    full, outs_full = engine.run_scanned(rf, state, 6)
+
+    half, _ = engine.run_scanned(rf, state, 3)
+    assert half.algo_state is not None
+    engine.save_server_state(str(tmp_path), half)
+    restored = engine.restore_server_state(str(tmp_path), half)
+    assert _max_param_diff(half.algo_state, restored.algo_state) == 0.0
+    resumed, outs_tail = engine.run_scanned(rf, restored, 3)
+
+    assert _max_param_diff(full.params, resumed.params) == 0.0
+    assert _max_param_diff(full.algo_state, resumed.algo_state) == 0.0
+    assert int(resumed.round) == 6
+    tail = np.asarray(outs_full["selected"])[3:]
+    assert np.array_equal(tail, np.asarray(outs_tail["selected"]))
+
+
+def test_feddyn_guarded_state_only_for_selected():
+    """Under the fault guard a client's penalty state can only advance in a
+    round it was selected AND its update survived the guard — in particular
+    never for a client outside every cohort."""
+    c, k = 12, 6
+    cfg, state = _state_and_cfg(
+        c, k, selection_lib.UniformSelection(),
+        local_algo="feddyn", feddyn_alpha=0.1,
+        faults="corrupt", aggregator="trimmed_mean",
+    )
+    fin, outs = _run(cfg, state, 4)
+    assert np.isfinite(
+        np.concatenate([np.asarray(l).ravel()
+                        for l in jax.tree_util.tree_leaves(fin.algo_state)])
+    ).all()
+    h_norm = sum(
+        np.abs(np.asarray(l)).sum(axis=tuple(range(1, l.ndim)))
+        for l in jax.tree_util.tree_leaves(fin.algo_state)
+    )
+    sel = set(np.asarray(outs["selected"]).ravel().tolist())
+    for ci in range(c):
+        if h_norm[ci] > 0:
+            assert ci in sel, ci
+
+
+# ------------------------------------------------- selection protocol
+
+
+def test_draw_fn_dispatches_to_legacy_select_fn():
+    class Legacy(selection_lib.SelectionStrategy):
+        name = "legacy"
+
+        def select_fn(self, key, state, k):
+            return jnp.arange(k, dtype=jnp.int32)
+
+    s = Legacy()
+    st_ = selection_lib.selection_state(8, 3)
+    out = np.asarray(s.draw_fn(jax.random.key(0), st_, 3))
+    assert np.array_equal(out, [0, 1, 2])
+    # avail mask with no select_avail_fn override: availability-blind (the
+    # old base default)
+    avail = jnp.zeros((8,), bool).at[4:].set(True)
+    out = np.asarray(s.draw_fn(jax.random.key(0), st_, 3, avail))
+    assert np.array_equal(out, [0, 1, 2])
+
+
+def test_base_draw_fn_without_any_override_raises():
+    s = selection_lib.SelectionStrategy()
+    st_ = selection_lib.selection_state(8, 3)
+    with pytest.raises(NotImplementedError):
+        s.draw_fn(jax.random.key(0), st_, 3)
+
+
+def test_legacy_adapters_route_through_draw_fn():
+    for name in selection_lib.STRATEGY_NAMES:
+        s = selection_lib.make_strategy(name)
+        st_ = selection_lib.selection_state(10, 4, cluster_labels=jnp.asarray(
+            np.arange(10) % 4, jnp.int32))
+        key = jax.random.key(3)
+        a = np.asarray(s.select_fn(key, st_, 4))
+        b = np.asarray(s.draw_fn(key, st_, 4))
+        assert np.array_equal(a, b), name
+        avail = jnp.asarray(np.arange(10) % 2 == 0)
+        a = np.asarray(s.select_avail_fn(key, st_, 4, avail))
+        b = np.asarray(s.draw_fn(key, st_, 4, avail))
+        assert np.array_equal(a, b), name
+
+
+# ------------------------------------------------- sharded modes
+
+
+@multidevice
+@pytest.mark.parametrize("mode_kw", [
+    dict(),
+    dict(cohort_cap=2),
+    dict(staleness_bound=2, scenario="heavy_tail"),
+    dict(faults="corrupt", aggregator="trimmed_mean"),
+    dict(candidate_frac=0.75),
+])
+def test_sharded_fedavg_registry_bit_identical(mode_kw):
+    """local_algo='fedavg' and fedprox(mu=0) compile to the same program in
+    every sharded engine mode — the registry plumbing is invisible."""
+    c = jax.device_count() * 2
+    k = max(2, jax.device_count() // 2)
+    mesh = make_client_mesh()
+    cfg_a, s_a = _state_and_cfg(c, k, selection_lib.UniformSelection(),
+                                mesh=mesh, **mode_kw)
+    cfg_p, s_p = _state_and_cfg(c, k, selection_lib.UniformSelection(),
+                                mesh=mesh, local_algo="fedprox", prox_mu=0.0,
+                                **mode_kw)
+    f_a, o_a = _run(cfg_a, s_a, 4, mesh=mesh)
+    f_p, o_p = _run(cfg_p, s_p, 4, mesh=mesh)
+    assert np.array_equal(o_a["selected"], o_p["selected"])
+    assert _max_param_diff(f_a.params, f_p.params) == 0.0
+
+
+@multidevice
+def test_sharded_feddyn_matches_single_device():
+    c, k = jax.device_count() * 2, 4
+    mesh = make_client_mesh()
+    kw = dict(local_algo="feddyn", feddyn_alpha=0.1)
+    cfg_1, s_1 = _state_and_cfg(c, k, selection_lib.UniformSelection(), **kw)
+    cfg_m, s_m = _state_and_cfg(c, k, selection_lib.UniformSelection(),
+                                mesh=mesh, **kw)
+    f_1, o_1 = _run(cfg_1, s_1, 4)
+    f_m, o_m = _run(cfg_m, s_m, 4, mesh=mesh)
+    assert np.array_equal(o_1["selected"], o_m["selected"])
+    assert _max_param_diff(f_1.params, f_m.params) < 1e-5
+    assert _max_param_diff(f_1.algo_state, f_m.algo_state) < 1e-5
+
+
+@multidevice
+def test_slot_feddyn_state_scatter():
+    """Slot-compacted rounds gather/scatter the per-client state through
+    slot_index: only trained residents advance their h."""
+    c, k = jax.device_count() * 2, 2
+    mesh = make_client_mesh()
+    cfg, state = _state_and_cfg(
+        c, k, selection_lib.UniformSelection(), mesh=mesh,
+        local_algo="feddyn", feddyn_alpha=0.1, cohort_cap=2,
+    )
+    fin, outs = _run(cfg, state, 3, mesh=mesh)
+    sel = set(np.asarray(outs["selected"]).ravel().tolist())
+    h_norm = sum(
+        np.abs(np.asarray(l)).sum(axis=tuple(range(1, l.ndim)))
+        for l in jax.tree_util.tree_leaves(fin.algo_state)
+    )
+    for ci in range(c):
+        if h_norm[ci] > 0:
+            assert ci in sel, ci
+
+
+@multidevice
+def test_stale_feddyn_runs_and_carries_state():
+    c, k = jax.device_count() * 2, 4
+    mesh = make_client_mesh()
+    cfg, state = _state_and_cfg(
+        c, k, selection_lib.UniformSelection(), mesh=mesh,
+        local_algo="feddyn", feddyn_alpha=0.1,
+        staleness_bound=2, scenario="heavy_tail",
+    )
+    fin, outs = _run(cfg, state, 6, mesh=mesh)
+    assert np.isfinite(outs["loss"]).all()
+    h_sum = sum(float(np.abs(np.asarray(l)).sum())
+                for l in jax.tree_util.tree_leaves(fin.algo_state))
+    assert h_sum > 0.0

@@ -46,7 +46,7 @@ def test_make_strategy_kwargs_forward_uniformly():
 
 
 def test_make_strategy_unknown_name_raises():
-    with pytest.raises(KeyError, match="unknown selection strategy"):
+    with pytest.raises(ValueError, match="unknown selection strategy"):
         selection.make_strategy("nope")
 
 

@@ -222,6 +222,8 @@ def test_shard_server_state_layout():
 
     for f in engine.CLIENT_SHARDED_FIELDS:
         arr = getattr(sharded, f)
+        if arr is None:  # optional per-client state (algo_state for fedavg)
+            continue
         shard_shapes = {s.data.shape for s in arr.addressable_shards}
         assert len(shard_shapes) == 1
         assert next(iter(shard_shapes))[0] == arr.shape[0] // n, f
