@@ -104,6 +104,26 @@ def _fault_metrics(payload: Dict):
     return out, payload.get("host_cores")
 
 
+def _serve_metrics(payload: Dict):
+    # serving engine (DESIGN.md §13): per-arch prefill + decode tok/s for
+    # both decode paths (legacy host loop must not rot — it's the parity
+    # oracle — and the scan path must stay scan-fast), plus the continuous
+    # vs drain-and-refill aggregate throughput pair
+    out = {}
+    for arch, row in payload.get("by_arch", {}).items():
+        out[f"serve_prefill_toks_per_sec.{arch}"] = float(
+            row["prefill_toks_per_sec"])
+        for variant in ("legacy", "scan"):
+            out[f"serve_decode_toks_per_sec.{arch}.{variant}"] = float(
+                row[f"{variant}_decode_toks_per_sec"])
+    cont = payload.get("continuous", {})
+    for variant in ("continuous", "drain"):
+        key = f"{variant}_toks_per_sec"
+        if key in cont:
+            out[f"serve_aggregate_toks_per_sec.{variant}"] = float(cont[key])
+    return out, payload.get("host_cores")
+
+
 def _cohort_metrics(payload: Dict):
     # steady-state run_many scan throughput of the slotted cohort sweep
     out = {}
@@ -133,6 +153,7 @@ MANIFEST: Dict[str, Callable] = {
     "BENCH_algo_smoke.json": _algo_metrics,
     "BENCH_funnel_smoke.json": _funnel_metrics,
     "BENCH_fault_smoke.json": _fault_metrics,
+    "BENCH_serve_smoke.json": _serve_metrics,
 }
 
 

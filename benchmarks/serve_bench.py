@@ -1,0 +1,286 @@
+"""Serving-engine throughput: scan-compiled decode + continuous batching.
+
+Prices the DESIGN.md §13 serving path on reduced configs across the three
+cache families (smollm = dense GQA KV, rwkv6 = O(1) recurrent state,
+mixtral = SWA ring buffer + MoE):
+
+  * per-arch — prefill tok/s, then decode tok/s for the legacy host loop
+    (one jit dispatch per token, the old ``launch/serve.py``) vs the
+    engine's ``lax.scan``-compiled decode of the same generation.  Both
+    paths produce bit-identical greedy tokens (asserted in-bench).
+  * continuous batching (smollm) — mixed-length traffic (seeded heavy-tail
+    budgets) through :class:`repro.serve.ServeEngine` in continuous mode vs
+    the drain-and-refill contrast arm.  Both arms share one engine instance,
+    i.e. the SAME compiled admit/decode programs — only the scheduling
+    differs — and the engine's jit caches are asserted unchanged after
+    warmup (zero recompilation under mixed-length traffic).
+
+Headline gates (full mode only; ratios are within-run so they transfer
+across hosts, but check_regression still arms same-core-count only):
+
+  * scan decode >= 2x legacy host-loop decode tok/s at batch >= 8 on the
+    micro smollm row — ``reduced(**MICRO)``, the same reduced family with
+    smaller gemms.  What the scan removes is *per-token host overhead*
+    (dispatch, eager argmax chain, cache copy-out), which on an accelerator
+    dwarfs per-step compute at any size; on this CPU-only host the standard
+    reduced size is compute-bound (~60% of a step is gemm time), so the
+    gate row is sized so the overhead the scan eliminates is a measurable
+    fraction.  The standard-reduced speedup is still measured and reported
+    on every arch row (informational + regression-tracked);
+  * continuous >= 1.5x drain-and-refill aggregate tok/s on mixed lengths;
+  * zero recompiles after warmup (asserted in smoke too — it's free).
+
+Writes ``BENCH_serve.json`` (repo root); ``--smoke`` runs tiny shapes with
+no throughput gate and writes ``BENCH_serve_smoke.json`` (CI harness +
+check_regression input):
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+SMOKE_OUT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_serve_smoke.json"
+)
+
+# batch >= 8 so per-token host dispatch (what the scan removes) is priced
+# against real per-step compute, per the gate's contract
+FULL = dict(batch=8, prompt=16, gen=32, requests=24, chunk=4, reps=3,
+            archs=("smollm-360m", "rwkv6-7b", "mixtral-8x7b"))
+SMOKE = dict(batch=4, prompt=8, gen=8, requests=6, chunk=2, reps=2,
+             archs=("smollm-360m",))
+SCAN_SPEEDUP_GATE = 2.0
+CONTINUOUS_SPEEDUP_GATE = 1.5
+# the speedup-gate model: reduced smollm with smaller gemms, so per-token
+# host overhead (what the scan removes) isn't drowned by single-core gemm
+# time — see the module docstring
+MICRO = dict(d_model=128, d_ff=256, num_heads=2, num_kv_heads=1, head_dim=32)
+# mixed-length traffic: 80% short / 20% long budgets.  A drain wave runs at
+# the wave max (~gen) while mean demand is ~0.8*short + 0.2*gen, so
+# continuous refill has ~2.5x of slot-steps to win back
+SHORT_FRAC = 0.8
+
+
+def _best(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _bench_arch(arch: str, w: dict, overrides: dict | None = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.models import transformer as T
+    from repro.serve import (ServeConfig, init_decode_state, make_decode_fn,
+                             run_scan)
+
+    cfg = get_arch(arch).model.reduced(
+        param_dtype="float32", dtype="float32", remat=False,
+        **(overrides or {}),
+    )
+    params = T.init_params(jax.random.key(0), cfg)
+    b, p, g = w["batch"], w["prompt"], w["gen"]
+    prompts = jax.random.randint(jax.random.key(1), (b, p), 0, cfg.vocab_size,
+                                 jnp.int32)
+    positions = jnp.broadcast_to(jnp.arange(p)[None], (b, p))
+    if cfg.pos_style == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, b, p))
+
+    @jax.jit
+    def prefill(prm, toks, caches):
+        hidden, caches, _ = T.forward(cfg, prm, toks, positions, caches)
+        return T.logits_from_hidden(cfg, prm, hidden[:, -1:]), caches
+
+    decode = jax.jit(lambda prm, tok, c: T.decode_step(cfg, prm, tok, c))
+    scfg = ServeConfig(batch=b, cache_len=p + g, max_new=g)
+    decode_fn = make_decode_fn(cfg, scfg)
+    scan = jax.jit(lambda prm, s: run_scan(decode_fn, prm, s, g - 1))
+
+    # ---- prefill (shared by both paths; legacy scalar-pos cache) ----
+    caches0 = T.init_caches(cfg, b, p + g)
+    logits0, caches1 = prefill(params, prompts, caches0)  # warmup/compile
+    t_prefill = _best(
+        lambda: jax.block_until_ready(prefill(params, prompts, caches0)),
+        w["reps"],
+    )
+    tok0 = jnp.argmax(logits0[:, 0], axis=-1).astype(jnp.int32)
+
+    # ---- legacy host loop: one dispatch per token ----
+    def legacy():
+        tok, caches = tok0, caches1
+        out = [tok]
+        for _ in range(g - 1):
+            lg, caches = decode(params, tok[:, None], caches)
+            tok = jnp.argmax(lg[:, 0], axis=-1).astype(jnp.int32)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        return np.stack([np.asarray(t) for t in out], 1)
+
+    legacy_out = legacy()  # warmup/compile
+    t_legacy = _best(legacy, w["reps"])
+
+    # ---- scan-compiled decode of the same generation ----
+    pcaches0 = T.init_caches(cfg, b, p + g, per_slot=True)
+    _, pcaches = prefill(params, prompts, pcaches0)
+    state0 = dataclasses.replace(
+        init_decode_state(cfg, scfg),
+        caches=pcaches, last_tok=tok0[:, None],
+        out_tokens=jnp.zeros((b, g), jnp.int32).at[:, 0].set(tok0),
+        n_gen=jnp.ones((b,), jnp.int32),
+        gen_target=jnp.full((b,), g, jnp.int32),
+        active=jnp.ones((b,), bool),
+        seq_ids=jnp.arange(b, dtype=jnp.int32),
+    )
+    scan_state = scan(params, state0)  # warmup/compile
+    t_scan = _best(
+        lambda: jax.block_until_ready(scan(params, state0)), w["reps"]
+    )
+    scan_out = np.asarray(scan_state.out_tokens)
+    parity = bool((scan_out == legacy_out).all())
+
+    dec_toks = b * (g - 1)
+    return dict(
+        prefill_toks_per_sec=b * p / t_prefill,
+        legacy_decode_toks_per_sec=dec_toks / t_legacy,
+        scan_decode_toks_per_sec=dec_toks / t_scan,
+        scan_speedup=t_legacy / t_scan,
+        parity_ok=parity,
+    )
+
+
+def _bench_continuous(w: dict) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.launch.serve import build_model
+    from repro.serve import ServeConfig, ServeEngine
+
+    cfg, params = build_model(w["archs"][0], seed=0)
+    b, p, g, n = w["batch"], w["prompt"], w["gen"], w["requests"]
+    scfg = ServeConfig(batch=b, cache_len=p + g, max_new=g,
+                       decode_chunk=w["chunk"])
+    eng = ServeEngine(cfg, scfg, params, prompt_len=p)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(2), (n, p), 0, cfg.vocab_size, jnp.int32))
+    rng = np.random.default_rng(0)
+    short = max(2, g // 8)
+    budgets = np.where(rng.random(n) < SHORT_FRAC, short, g).astype(int)
+
+    def traffic(drain):
+        eng.reset(jax.random.key(3))
+        for i in range(n):
+            eng.submit(prompts[i], int(budgets[i]))
+        finished = eng.run(drain=drain)
+        assert sorted(f.seq_id for f in finished) == list(range(n))
+        assert sum(len(f.tokens) for f in finished) == int(budgets.sum())
+
+    traffic(drain=False)  # warmup: compiles admit + decode chunk
+    compiles_warm = eng.compile_counts()
+    t_cont = _best(lambda: traffic(drain=False), w["reps"])
+    t_drain = _best(lambda: traffic(drain=True), w["reps"])
+    compiles_end = eng.compile_counts()
+
+    toks = int(budgets.sum())
+    return dict(
+        requests=n,
+        budgets=dict(short=int(short), long=int(g),
+                     mean=float(budgets.mean())),
+        continuous_toks_per_sec=toks / t_cont,
+        drain_toks_per_sec=toks / t_drain,
+        continuous_speedup=t_drain / t_cont,
+        compiles_after_warmup=compiles_warm,
+        compiles_after_timed=compiles_end,
+        zero_recompile=compiles_warm == compiles_end,
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, no throughput gate (CI harness check)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import common
+
+    t0 = time.time()
+    w = SMOKE if args.smoke else FULL
+
+    by_arch = {}
+    rows = [(a, None) for a in w["archs"]] + [(w["archs"][0] + ":micro", MICRO)]
+    for name, ov in rows:
+        row = _bench_arch(name.split(":")[0], w, overrides=ov)
+        by_arch[name] = row
+        print(f"  serve_bench {name:18s} prefill={row['prefill_toks_per_sec']:8.0f} tok/s "
+              f"decode legacy={row['legacy_decode_toks_per_sec']:6.0f} "
+              f"scan={row['scan_decode_toks_per_sec']:6.0f} tok/s "
+              f"({row['scan_speedup']:.2f}x) parity={row['parity_ok']}")
+
+    cont = _bench_continuous(w)
+    print(f"  serve_bench continuous={cont['continuous_toks_per_sec']:6.0f} "
+          f"drain={cont['drain_toks_per_sec']:6.0f} tok/s aggregate "
+          f"({cont['continuous_speedup']:.2f}x) "
+          f"zero_recompile={cont['zero_recompile']} "
+          f"compiles={cont['compiles_after_timed']}")
+
+    gate_enforced = not args.smoke
+    gate_row = by_arch[w["archs"][0] + ":micro"]
+    ok = all(r["parity_ok"] for r in by_arch.values()) and cont["zero_recompile"]
+    if gate_enforced:
+        ok = ok and gate_row["scan_speedup"] >= SCAN_SPEEDUP_GATE
+        ok = ok and cont["continuous_speedup"] >= CONTINUOUS_SPEEDUP_GATE
+
+    payload = dict(
+        bench="serve_scan_continuous_batching",
+        smoke=args.smoke,
+        workload=dict(w, archs=list(w["archs"]), short_frac=SHORT_FRAC),
+        host_cores=os.cpu_count() or 1,
+        gate_enforced=gate_enforced,
+        gate_note=(
+            f"scan decode >= {SCAN_SPEEDUP_GATE}x legacy host-loop decode "
+            f"tok/s at batch {w['batch']} on the micro reduced "
+            f"{w['archs'][0]} row (overrides {MICRO}; the standard reduced "
+            "size is single-core-gemm-bound on CPU hosts, drowning the "
+            "per-token host overhead the scan removes — arch rows report "
+            f"it informationally); continuous batching >= "
+            f"{CONTINUOUS_SPEEDUP_GATE}x drain-and-refill aggregate tok/s "
+            "under mixed-length traffic; zero recompiles after warmup and "
+            "greedy scan/legacy parity always enforced (smoke included)"
+        ),
+        by_arch=by_arch,
+        continuous=cont,
+        ok=ok,
+        total_s=round(time.time() - t0, 2),
+    )
+    out_path = SMOKE_OUT_PATH if args.smoke else OUT_PATH
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(common.csv_line(
+        "serve_scan_vs_legacy",
+        0.0,
+        f"scan_speedup={gate_row['scan_speedup']:.2f} "
+        f"continuous_speedup={cont['continuous_speedup']:.2f} "
+        f"zero_recompile={cont['zero_recompile']} "
+        f"gate_enforced={gate_enforced} ok={ok}",
+    ))
+    print(f"ok={ok}  wrote {os.path.abspath(out_path)}")
+    if not ok:
+        raise SystemExit(1)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

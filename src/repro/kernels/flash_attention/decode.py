@@ -1,0 +1,124 @@
+"""Flash-decode: single-query attention against cached KV for TPU.
+
+The serving engine's decode step attends one new query per slot to that
+slot's valid cache prefix.  This kernel is the decode-shaped sibling of
+``flash_attention._kernel``: the same online-softmax over KV tiles, the same
+VMEM scratch discipline (running (m, l) stats + accumulator persist across
+the sequential innermost KV grid dimension), the same GQA handling via
+BlockSpec index maps.  Two decode-specific twists:
+
+* the query tile packs the **G query heads of one KV head** as its rows —
+  a (G, hd) × (hd, bk) MXU matmul per tile instead of G separate
+  vector-matrix products, and k/v tiles are fetched once per KV head;
+* causality degenerates to a **per-slot valid length**: slot ``b`` may only
+  attend cache entries ``< lengths[b]`` (its prefill + decoded prefix).
+  The length rides in as a (B, 1) int32 block and is masked in-tile; KV
+  tiles entirely past the length skip their compute via ``pl.when``.
+
+Grid: (B, Hk, S/bk) with the KV dim innermost/sequential.  Ragged lengths
+(heterogeneous slots) cost nothing extra: masking is per-tile arithmetic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_decode_kernel"]
+
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale, bk, n_kv):
+    ki = pl.program_id(2)
+    k_start = ki * bk
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0, 0]  # this slot's valid cache prefix
+
+    @pl.when(k_start < length)
+    def _body():
+        q = q_ref[0, 0, :, :].astype(jnp.float32) * scale  # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)  # (bk, hd)
+        g = q.shape[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (G, bk)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]  # (G, 1)
+        m_cur = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=1))[:, None]
+        p = jnp.exp(s - m_cur)  # (G, bk)
+        alpha = jnp.exp(m_prev - m_cur)  # (G, 1)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_cur
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = l_scr[...]
+        o = acc_scr[...] / jnp.where(l == 0.0, 1.0, l)  # empty slot -> zeros
+        o_ref[0, 0, :, :] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode_kernel(
+    q: jax.Array,  # (B, 1, H, hd) — one query per slot
+    k: jax.Array,  # (B, S, Hk, hd) — cached keys
+    v: jax.Array,  # (B, S, Hk, hd)
+    lengths: jax.Array,  # (B,) int32 valid cache prefix per slot
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    assert sq == 1, "flash-decode is the single-query path"
+    s = k.shape[1]
+    hk = k.shape[2]
+    g = h // hk
+    bk = min(block_k, s)
+    sp = -(-s // bk) * bk
+    if sp != s:
+        pad = sp - s
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_kv = sp // bk
+    grid = (b, hk, n_kv)
+
+    qg = q[:, 0].reshape(b, hk, g, hd)  # query heads grouped under KV head
+    len2d = lengths.astype(jnp.int32)[:, None]  # (B, 1)
+
+    kernel = functools.partial(_decode_kernel, scale=hd**-0.5, bk=bk, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ki: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hk, g, hd), q.dtype),
+        scratch_shapes=[_vmem((g, 1)), _vmem((g, 1)), _vmem((g, hd))],
+        interpret=interpret,
+    )(qg, k, v, len2d)
+    return out.reshape(b, 1, h, hd)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,12 +1,13 @@
-"""Jit'd public wrapper for the flash_attention Pallas kernel."""
+"""Jit'd public wrappers for the flash_attention Pallas kernels."""
 
 from __future__ import annotations
 
 import jax
 
+from repro.kernels.flash_attention.decode import flash_decode_kernel
 from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
 
-__all__ = ["flash_attention"]
+__all__ = ["flash_attention", "flash_decode"]
 
 
 def _interpret() -> bool:
@@ -30,3 +31,21 @@ def flash_attention(
         q, k, v, causal=causal, window=window,
         block_q=block_q, block_k=block_k, interpret=_interpret(),
     )
+
+
+def flash_decode(
+    q: jax.Array,  # (B, 1, H, hd)
+    k: jax.Array,  # (B, S, Hk, hd) cached keys
+    v: jax.Array,
+    lengths: jax.Array,  # (B,) int32 valid prefix per slot
+    block_k: int = 128,
+) -> jax.Array:
+    if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
+        raise ValueError("q/k/v must be (B, 1|S, H|Hk, head_dim)")
+    if q.shape[1] != 1:
+        raise ValueError(f"flash_decode takes one query per slot, got S={q.shape[1]}")
+    if q.shape[2] % k.shape[2]:
+        raise ValueError(f"q heads {q.shape[2]} not a multiple of kv heads {k.shape[2]}")
+    if lengths.shape != (q.shape[0],):
+        raise ValueError(f"lengths must be (B,)=({q.shape[0]},), got {lengths.shape}")
+    return flash_decode_kernel(q, k, v, lengths, block_k=block_k, interpret=_interpret())

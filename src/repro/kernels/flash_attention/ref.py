@@ -1,10 +1,11 @@
-"""Pure-jnp oracle for the flash_attention kernel: exact causal GQA
-softmax attention with optional sliding window."""
+"""Pure-jnp oracles for the flash_attention kernels: exact causal GQA
+softmax attention with optional sliding window, and single-query decode
+attention against a cached-KV prefix of per-slot valid length."""
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["attention_ref"]
+__all__ = ["attention_ref", "decode_attention_ref"]
 
 
 def attention_ref(
@@ -26,3 +27,25 @@ def attention_ref(
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
     return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, 1, H, hd)
+    k: jax.Array,  # (B, S, Hk, hd) cached keys
+    v: jax.Array,
+    lengths: jax.Array,  # (B,) int32 valid cache prefix per slot
+) -> jax.Array:
+    """Each slot's single query attends exactly its ``lengths[b]`` cached
+    entries; a zero-length slot returns zeros (matching the kernel's
+    empty-accumulator finalize)."""
+    b, _, h, hd = q.shape
+    s, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    qg = q[:, 0].reshape(b, hk, g, hd).astype(jnp.float32) * hd**-0.5
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(s)[None, :] < lengths[:, None]  # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(mask[:, None, None, :], p, 0.0)  # empty slot -> zeros
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

@@ -416,6 +416,58 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
     return rec
 
 
+# ----------------------------------------------------- serving engine
+
+
+def run_serve_engine_case(arch: str, batch: int = 4, prompt: int = 8,
+                          gen: int = 8) -> Dict:
+    """Prove the serving engine's two compiled programs (DESIGN.md §13)
+    lower and compile for a reduced arch: the ``lax.scan`` decode over the
+    per-slot :class:`~repro.serve.DecodeState`, and the continuous-batching
+    slot-refill admission (prefill + stable-argsort slot scatter).  Pure
+    ``lower().compile()`` on ShapeDtypeStructs — no weights materialised."""
+    from repro.serve import (ServeConfig, init_decode_state, make_admit_fn,
+                             make_decode_fn, run_scan)
+
+    t0 = time.time()
+    rec: Dict = {"case": "serve_engine", "arch": arch,
+                 "batch": batch, "prompt": prompt, "gen": gen}
+    try:
+        cfg = get_arch(arch).model.reduced(
+            param_dtype="float32", dtype="float32", remat=False
+        )
+        scfg = ServeConfig(batch=batch, cache_len=prompt + gen, max_new=gen)
+        params_sds = jax.eval_shape(
+            lambda k: T.init_params(k, cfg), jax.random.key(0)
+        )
+        state_sds = jax.eval_shape(lambda: init_decode_state(cfg, scfg))
+
+        decode_fn = make_decode_fn(cfg, scfg)
+        t1 = time.time()
+        scan = jax.jit(lambda p, s: run_scan(decode_fn, p, s, gen - 1))
+        scan.lower(params_sds, state_sds).compile()
+        rec["scan_compile_s"] = round(time.time() - t1, 2)
+
+        admit_fn = make_admit_fn(cfg, scfg, prompt)
+        prompt_sds = jax.ShapeDtypeStruct((1, prompt), jnp.int32)
+        scalar_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        key_sds = jax.eval_shape(
+            lambda k: jax.random.key_data(k), jax.random.key(0)
+        )
+        t1 = time.time()
+        jax.jit(admit_fn).lower(
+            params_sds, state_sds, prompt_sds, scalar_sds, scalar_sds, key_sds
+        ).compile()
+        rec["admit_compile_s"] = round(time.time() - t1, 2)
+        rec["ok"] = True
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
 # ------------------------------------------------------------------ runner
 
 
@@ -618,9 +670,43 @@ def main():
     ap.add_argument("--fl-candidate-frac", type=float, default=0.25,
                     help="candidate fraction for the --fl-sharded two-stage "
                          "funnel compile case (DESIGN.md §10)")
+    ap.add_argument("--serve-engine", action="store_true",
+                    help="compile the serving engine's scan-decode and "
+                         "continuous slot-refill programs on reduced archs "
+                         "(DESIGN.md §13) instead of an arch case")
     ap.add_argument("--out", default=None, help="append JSONL records here")
     ap.add_argument("--dump-hlo", default=None)
     args = ap.parse_args()
+
+    if args.serve_engine:
+        # scan decode + continuous slot-refill admission must lower and
+        # compile for each cache family: dense GQA KV (smollm), O(1)
+        # recurrent state (rwkv6), SWA ring buffer + MoE (mixtral)
+        archs = [args.arch] if args.arch else [
+            "smollm-360m", "rwkv6-7b", "mixtral-8x7b"
+        ]
+        recs = [run_serve_engine_case(a) for a in archs]
+        any_fail = False
+        for rec in recs:
+            status = "OK " if rec["ok"] else "FAIL"
+            timing = (
+                f"scan={rec.get('scan_compile_s', 0):5.1f}s "
+                f"admit={rec.get('admit_compile_s', 0):5.1f}s"
+                if rec["ok"] else f"  {rec['error'][:120]}"
+            )
+            print(f"[{status}] serve_engine {rec['arch']:28s} "
+                  f"b={rec['batch']} p={rec['prompt']} g={rec['gen']} "
+                  f"{rec['total_s']:7.1f}s  {timing}")
+            if not rec["ok"]:
+                any_fail = True
+                print(rec.get("traceback", "")[-800:])
+            if args.out:
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+        if any_fail:
+            raise SystemExit(1)
+        return
 
     if args.fl_sharded:
         # resident-mode round, the capacity-slot variant on a k ≪ C_loc

@@ -40,14 +40,22 @@ def init_attention(key, cfg: ModelConfig) -> Dict:
     }
 
 
-def init_cache(cfg: ModelConfig, batch: int, cache_len: int, window: Optional[int]) -> Dict:
-    """Preallocated KV cache; ring buffer of ``window`` slots for SWA."""
+def init_cache(
+    cfg: ModelConfig, batch: int, cache_len: int, window: Optional[int],
+    per_slot: bool = False,
+) -> Dict:
+    """Preallocated KV cache; ring buffer of ``window`` slots for SWA.
+
+    ``per_slot=True`` tracks one position *per batch row* (``pos: (B,)``) so
+    heterogeneous decode slots — each sequence at its own depth — are
+    representable (the serving engine's contract, DESIGN.md §13).  The
+    default scalar convention is unchanged."""
     slots = min(cache_len, window) if window else cache_len
     dtype = jnp.dtype(cfg.dtype)
     return {
         "k": jnp.zeros((batch, slots, cfg.num_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((batch, slots, cfg.num_kv_heads, cfg.head_dim), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,) if per_slot else (), jnp.int32),
     }
 
 
@@ -158,9 +166,16 @@ def apply_attention(
     else:
         slots = cache["k"].shape[1]
         pos0 = cache["pos"]
-        if s == slots and window is None:
+        per_slot = pos0.ndim == 1  # (B,) heterogeneous slot positions
+        if not per_slot and s == slots and window is None:
             # prefill writing the whole cache
             ck, cv = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+        elif per_slot:
+            # each row writes at its own ring offset
+            idx = (pos0[:, None] + jnp.arange(s)[None, :]) % slots  # (B, s)
+            bidx = jnp.arange(b)[:, None]
+            ck = cache["k"].at[bidx, idx].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, idx].set(v.astype(cache["v"].dtype))
         else:
             idx = (pos0 + jnp.arange(s)) % slots
             ck = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
@@ -168,17 +183,24 @@ def apply_attention(
         new_pos = pos0 + s
         # absolute positions held in each slot (ring-aware)
         slot_ids = jnp.arange(slots)
+        np_b = new_pos[:, None] if per_slot else new_pos  # (B,1) | ()
         if window is None:
             kv_pos = slot_ids[None, :].repeat(b, 0)
-            kv_valid = slot_ids[None, :] < new_pos
+            kv_valid = slot_ids[None, :] < np_b
         else:
             # slot holds the latest absolute position congruent mod `slots`
-            last = new_pos - 1
-            kv_pos = last - ((last - slot_ids) % slots)
-            kv_pos = kv_pos[None, :].repeat(b, 0)
-            kv_valid = (kv_pos >= 0) & (kv_pos < new_pos)
-        out = _attend(q, ck, cv, q_pos, kv_pos, kv_valid, window,
-                      chunk=cfg.attention_chunk, unroll=cfg.loss_unroll)
+            last = np_b - 1
+            kv_pos = last - ((last - slot_ids[None, :]) % slots)
+            kv_pos = jnp.broadcast_to(kv_pos, (b, slots))
+            kv_valid = (kv_pos >= 0) & (kv_pos < np_b)
+        if use_flash and s == 1 and window is None:
+            from repro.kernels.flash_attention import ops as flash_ops
+
+            lengths = jnp.broadcast_to(jnp.minimum(new_pos, slots), (b,))
+            out = flash_ops.flash_decode(q, ck, cv, lengths)
+        else:
+            out = _attend(q, ck, cv, q_pos, kv_pos, kv_valid, window,
+                          chunk=cfg.attention_chunk, unroll=cfg.loss_unroll)
         new_cache = {"k": ck, "v": cv, "pos": new_pos}
 
     y = L.dense(p["wo"], out.reshape(b, s, cfg.q_dim))

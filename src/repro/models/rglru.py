@@ -56,12 +56,12 @@ def init_rglru(key, cfg: ModelConfig) -> Dict:
     }
 
 
-def init_rglru_state(cfg: ModelConfig, batch: int) -> Dict:
+def init_rglru_state(cfg: ModelConfig, batch: int, per_slot: bool = False) -> Dict:
     dr = _rnn_width(cfg)
     return {
         "conv": jnp.zeros((batch, _CONV_W - 1, dr), jnp.dtype(cfg.dtype)),
         "h": jnp.zeros((batch, dr), jnp.float32),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,) if per_slot else (), jnp.int32),
     }
 
 

@@ -74,13 +74,13 @@ def init_rwkv_cmix(key, cfg: ModelConfig) -> Dict:
     }
 
 
-def init_rwkv_state(cfg: ModelConfig, batch: int) -> Dict:
+def init_rwkv_state(cfg: ModelConfig, batch: int, per_slot: bool = False) -> Dict:
     h, hd = _num_heads(cfg), cfg.rwkv_head_dim
     return {
         "tm_x": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype)),
         "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
         "cm_x": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype)),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,) if per_slot else (), jnp.int32),
     }
 
 

@@ -114,28 +114,36 @@ def init_params(key, cfg: ModelConfig) -> Dict:
     return params
 
 
-def _init_block_cache(cfg: ModelConfig, btype: str, batch: int, cache_len: int):
+def _init_block_cache(cfg: ModelConfig, btype: str, batch: int, cache_len: int,
+                      per_slot: bool = False):
     mixer, _ = _parse(btype)
     if mixer in ("attn", "swa", "local"):
-        return attn_mod.init_cache(cfg, batch, cache_len, _mixer_window(cfg, mixer))
+        return attn_mod.init_cache(cfg, batch, cache_len,
+                                   _mixer_window(cfg, mixer), per_slot=per_slot)
     if mixer == "rglru":
-        return rglru_mod.init_rglru_state(cfg, batch)
-    return rwkv_mod.init_rwkv_state(cfg, batch)
+        return rglru_mod.init_rglru_state(cfg, batch, per_slot=per_slot)
+    return rwkv_mod.init_rwkv_state(cfg, batch, per_slot=per_slot)
 
 
-def init_caches(cfg: ModelConfig, batch: int, cache_len: int) -> Dict:
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                per_slot: bool = False) -> Dict:
+    """``per_slot=True`` carries one position per batch row (``pos: (B,)``)
+    so decode slots at heterogeneous depths share one compiled program — the
+    serving-engine cache layout (DESIGN.md §13).  Default is the legacy
+    shared-scalar convention, bit-identical to before."""
     pattern = cfg.block_pattern
     reps, rem = divmod(cfg.num_layers, len(pattern))
     unit = []
     for btype in pattern:
-        one = _init_block_cache(cfg, btype, batch, cache_len)
+        one = _init_block_cache(cfg, btype, batch, cache_len, per_slot)
         unit.append(
             jax.tree_util.tree_map(
                 lambda x: jnp.broadcast_to(x, (reps,) + x.shape).copy(), one
             )
         )
     rem_caches = tuple(
-        _init_block_cache(cfg, pattern[j], batch, cache_len) for j in range(rem)
+        _init_block_cache(cfg, pattern[j], batch, cache_len, per_slot)
+        for j in range(rem)
     )
     return {"unit": tuple(unit), "rem": rem_caches}
 
@@ -327,21 +335,36 @@ def decode_step(
     tokens: jax.Array,  # (B, 1) int32 (or embeds via kwarg)
     caches: Dict,
     embeds: Optional[jax.Array] = None,
+    use_flash: bool = False,
 ) -> Tuple[jax.Array, Dict]:
-    """One-token decode against the cache -> (logits (B, 1, V), new caches)."""
+    """One-token decode against the cache -> (logits (B, 1, V), new caches).
+
+    With a per-slot cache (``init_caches(..., per_slot=True)``) each batch
+    row decodes at its own position; the shared-scalar cache keeps the old
+    uniform program bit-identical."""
     b = tokens.shape[0] if tokens is not None else embeds.shape[0]
     pos = _cache_pos(caches)
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    if pos.ndim:  # per-slot (B,)
+        positions = pos[:, None].astype(jnp.int32)
+    else:
+        positions = jnp.full((b, 1), pos, jnp.int32)
     if cfg.pos_style == "mrope":
         positions = jnp.broadcast_to(positions[None], (3, b, 1))
-    hidden, new_caches, _ = forward(cfg, params, tokens, positions, caches, embeds)
+    hidden, new_caches, _ = forward(
+        cfg, params, tokens, positions, caches, embeds, use_flash=use_flash
+    )
     return logits_from_hidden(cfg, params, hidden), new_caches
 
 
 def _cache_pos(caches: Dict) -> jax.Array:
-    first = caches["unit"][0] if caches["unit"] else caches["rem"][0]
-    leaf = first["pos"]
-    return leaf[0] if leaf.ndim else leaf  # stacked (reps,) or scalar
+    """Current position(s): () shared-scalar or (B,) per-slot.
+
+    Unit caches are stacked with a leading (reps,) axis — every layer holds
+    the same position, so read entry 0; remainder caches are unstacked."""
+    if caches["unit"] and caches["unit"][0]["pos"].shape[0]:
+        return caches["unit"][0]["pos"][0]  # (reps,)->() or (reps, B)->(B,)
+    leaf = caches["rem"][0]["pos"]
+    return leaf  # () or (B,)
 
 
 def features(

@@ -1,0 +1,28 @@
+"""Scan-compiled continuous-batching serving engine (DESIGN.md §13)."""
+
+from repro.serve.engine import (
+    DecodeState,
+    Finished,
+    ServeConfig,
+    ServeEngine,
+    init_decode_state,
+    make_admit_fn,
+    make_decode_fn,
+    run_scan,
+    run_while,
+)
+from repro.serve.sampling import fresh_key_data, sample_tokens
+
+__all__ = [
+    "DecodeState",
+    "Finished",
+    "ServeConfig",
+    "ServeEngine",
+    "init_decode_state",
+    "make_admit_fn",
+    "make_decode_fn",
+    "run_scan",
+    "run_while",
+    "fresh_key_data",
+    "sample_tokens",
+]

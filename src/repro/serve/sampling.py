@@ -1,0 +1,47 @@
+"""Per-slot token sampling for the serving engine.
+
+Greedy (``temperature == 0``) is a *static* Python branch producing exactly
+the legacy host loop's ``jnp.argmax(logits[:, 0], axis=-1)`` — the parity
+oracle contract — and leaves the key stream untouched, so greedy programs
+carry no PRNG ops.  Temperature sampling draws one categorical per slot from
+that slot's own key (vmapped split + draw), so slots are statistically
+independent no matter how they were admitted or refilled.
+
+Keys live in the :class:`~repro.serve.engine.DecodeState` as **raw**
+``uint32`` key data (``jax.random.key_data`` layout) rather than typed keys:
+slot refill scatters key rows with the same gather/scatter arithmetic as
+every other per-slot buffer, and checkpoint-style tooling can treat the
+state as a plain array pytree.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fresh_key_data", "sample_tokens"]
+
+
+def fresh_key_data(key: jax.Array, batch: int) -> jax.Array:
+    """(B, key_words) uint32 — one independent stream per slot."""
+    return jax.random.key_data(jax.random.split(key, batch))
+
+
+def sample_tokens(
+    logits: jax.Array,  # (B, 1, V)
+    key_data: jax.Array,  # (B, key_words) uint32 per-slot streams
+    temperature: float,  # static; 0.0 = greedy
+) -> Tuple[jax.Array, jax.Array]:
+    """-> (tokens (B,) int32, advanced key_data)."""
+    if temperature == 0.0:
+        return jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32), key_data
+
+    def draw(kd, row):
+        nxt, use = jax.random.split(jax.random.wrap_key_data(kd))
+        tok = jax.random.categorical(use, row / temperature)
+        return jax.random.key_data(nxt), tok.astype(jnp.int32)
+
+    new_kd, toks = jax.vmap(draw)(key_data, logits[:, 0])
+    return toks, new_kd

@@ -68,7 +68,11 @@ def test_pretrain_driver_loss_decreases(capsys):
 
 
 def test_serve_driver_generates(capsys):
-    args = _Args(arch="smollm-360m", batch=2, prompt_len=8, gen=6, seed=0)
+    args = _Args(
+        arch="smollm-360m", batch=2, prompt_len=8, gen=6, seed=0,
+        scan=False, continuous=False, requests=0, mixed=False,
+        temperature=0.0, flash=False, check=False,
+    )
     gen = serve_mod.serve(args)
     assert gen.shape == (2, 6)
     out = capsys.readouterr().out
