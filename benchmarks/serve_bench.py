@@ -194,6 +194,12 @@ def _bench_continuous(w: dict) -> dict:
     t_drain = _best(lambda: traffic(drain=True), w["reps"])
     compiles_end = eng.compile_counts()
 
+    # a count of -1 means the jit cache is unreadable (private jax API
+    # changed); that must FAIL the gate, not vacuously pass as -1 == -1
+    counts_ok = all(
+        v >= 0 for c in (compiles_warm, compiles_end) for v in c.values()
+    )
+
     toks = int(budgets.sum())
     return dict(
         requests=n,
@@ -204,7 +210,7 @@ def _bench_continuous(w: dict) -> dict:
         continuous_speedup=t_drain / t_cont,
         compiles_after_warmup=compiles_warm,
         compiles_after_timed=compiles_end,
-        zero_recompile=compiles_warm == compiles_end,
+        zero_recompile=counts_ok and compiles_warm == compiles_end,
     )
 
 

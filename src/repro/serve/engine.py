@@ -99,7 +99,9 @@ class DecodeState:
     n_gen: jax.Array  # (B,) int32 generated so far (incl. prefill sample)
     gen_target: jax.Array  # (B,) int32 per-slot generation budget
     active: jax.Array  # (B,) bool slot is decoding
-    seq_ids: jax.Array  # (B,) int32 admitted sequence id (-1 = empty slot)
+    seq_ids: jax.Array  # (B,) int32 sequence id; -1 = empty (occupancy: set
+    # at admission, cleared only at harvest — unlike ``active``, which a
+    # budget-1 admission or a stop clears before the host has the tokens)
     sample_keys: jax.Array  # (B, key_words) uint32 per-slot PRNG streams
     step: jax.Array  # () int32 decode steps taken
 
@@ -227,18 +229,24 @@ def make_admit_fn(cfg: ModelConfig, scfg: ServeConfig,
 
     ``(params, state, prompt (1, P), gen_target (), seq_id (), key_data)
     -> state``.  The free slot comes from the PR-4 stable-argsort slot
-    table (``argsort(active, stable=True)[0]`` — inactive-first order), the
-    prefill runs on a width-1 per-slot cache of the same ``cache_len`` so
-    every leaf scatters row-for-row, and the first token is sampled from
+    table (``argsort(seq_ids >= 0, stable=True)[0]`` — empty-first order),
+    the prefill runs on a width-1 per-slot cache of the same ``cache_len``
+    so every leaf scatters row-for-row, and the first token is sampled from
     the prefill logits with the sequence's own key stream.  One compiled
     program serves every admission — no retracing as traffic mixes lengths.
+
+    Free means *unoccupied* (``seq_ids < 0``), not merely inactive: a
+    budget-1 admission finishes at prefill and sits inactive-but-occupied
+    until the host harvests it, and a second admission in the same refill
+    wave must not overwrite that un-harvested result.
     """
 
     def admit_fn(params: PyTree, state: DecodeState, prompt: jax.Array,
                  gen_target: jax.Array, seq_id: jax.Array,
                  key_data: jax.Array) -> DecodeState:
-        # slot table: stable argsort puts free (False=0) slots first
-        slot = jnp.argsort(state.active, stable=True)[0]
+        # slot table: stable argsort puts empty (seq_id < 0 -> False) slots
+        # first; occupancy, not activity — see the docstring
+        slot = jnp.argsort(state.seq_ids >= 0, stable=True)[0]
 
         caches1 = T.init_caches(cfg, 1, scfg.cache_len, per_slot=True)
         positions = jnp.arange(prompt_len, dtype=jnp.int32)[None, :]
@@ -290,6 +298,16 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params: PyTree,
                  prompt_len: int, key: Optional[jax.Array] = None):
+        if prompt_len < 1:
+            raise ValueError(f"prompt_len={prompt_len} must be >= 1")
+        if scfg.cache_len < prompt_len + scfg.max_new:
+            # an undersized cache wraps its write index (pos % slots in
+            # attention.py) and silently corrupts the oldest context
+            raise ValueError(
+                f"cache_len={scfg.cache_len} < prompt_len + max_new = "
+                f"{prompt_len + scfg.max_new}; size the per-slot cache to "
+                "hold the full prompt plus the generation budget"
+            )
         self.cfg, self.scfg, self.params = cfg, scfg, params
         self.prompt_len = prompt_len
         key = jax.random.key(0) if key is None else key
@@ -325,8 +343,9 @@ class ServeEngine:
     # -- engine steps ------------------------------------------------------
 
     def _refill(self) -> None:
-        active = np.asarray(self.state.active)
-        free = int((~active).sum())
+        # free = unoccupied (seq_id < 0), not merely inactive: stopped slots
+        # keep their seq_id until harvest and must not be admitted over
+        free = int((np.asarray(self.state.seq_ids) < 0).sum())
         n = min(free, len(self._queue))
         for _ in range(n):
             seq_id, prompt, tgt = self._queue.pop(0)

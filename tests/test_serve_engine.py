@@ -153,6 +153,38 @@ def test_continuous_refill_matches_solo_decode():
         assert (f.tokens == solo).all(), f"seq {f.seq_id} diverges solo"
 
 
+@pytest.mark.parametrize("drain", [False, True])
+def test_budget1_not_clobbered_by_same_wave_admission(drain):
+    """A budget-1 sequence finishes at prefill and sits inactive-but-occupied
+    until harvest; the NEXT admission in the same refill wave must pick a
+    different slot (free = unoccupied, not merely inactive) or the budget-1
+    result is silently overwritten and vanishes from ``finished``."""
+    cfg, params = _model("smollm-360m")
+    b, p, g, n = 3, 6, 6, 4
+    scfg = ServeConfig(batch=b, cache_len=p + g, max_new=g, decode_chunk=2)
+    eng = ServeEngine(cfg, scfg, params, prompt_len=p)
+    prompts = np.asarray(_prompts(cfg, n, p, seed=4))
+    budgets = [1, 1, g, 3]  # two budget-1 admissions in the first wave
+    for i in range(n):
+        eng.submit(prompts[i], budgets[i])
+    finished = eng.run(drain=drain)
+    assert sorted(f.seq_id for f in finished) == list(range(n))
+    for f in finished:
+        assert len(f.tokens) == budgets[f.seq_id], f"seq {f.seq_id} truncated"
+        solo = _solo_greedy(cfg, params, jnp.asarray(prompts[f.seq_id]),
+                            budgets[f.seq_id])
+        assert (f.tokens == solo).all(), f"seq {f.seq_id} diverges solo"
+
+
+def test_engine_rejects_undersized_cache():
+    """cache_len < prompt_len + max_new would wrap the per-slot write index
+    and silently corrupt the oldest context — the engine must refuse it."""
+    cfg, params = _model("smollm-360m")
+    scfg = ServeConfig(batch=2, cache_len=8, max_new=6)
+    with pytest.raises(ValueError, match="cache_len"):
+        ServeEngine(cfg, scfg, params, prompt_len=4)
+
+
 def test_slot_refill_does_not_retrace():
     """Mixed-length traffic reuses ONE compiled admit and ONE compiled
     decode-chunk program — the continuous-batching zero-recompile
