@@ -142,6 +142,21 @@ def _algo_metrics(payload: Dict):
     return out, payload.get("host_cores")
 
 
+def _obs_metrics(payload: Dict):
+    # telemetry layer (DESIGN.md §14): both arms of both engines — the off
+    # arms guard the underlying engine throughput and the on arms guard the
+    # sink/drain cost, so telemetry can't silently grow a fixed tax that the
+    # obs_bench overhead gate (full mode only) wouldn't catch in CI smoke
+    out = {}
+    for variant, rps in payload.get("train", {}).get(
+            "rounds_per_sec", {}).items():
+        out[f"obs_train_rounds_per_sec.{variant}"] = float(rps)
+    for variant, tps in payload.get("serve", {}).get(
+            "toks_per_sec", {}).items():
+        out[f"obs_serve_toks_per_sec.{variant}"] = float(tps)
+    return out, payload.get("host_cores")
+
+
 # every smoke bench JSON the gate knows how to read; a file listed here that
 # exists in baselines/ but was not produced by the current run is itself a
 # failure (the harness rotted)
@@ -154,6 +169,7 @@ MANIFEST: Dict[str, Callable] = {
     "BENCH_funnel_smoke.json": _funnel_metrics,
     "BENCH_fault_smoke.json": _fault_metrics,
     "BENCH_serve_smoke.json": _serve_metrics,
+    "BENCH_obs_smoke.json": _obs_metrics,
 }
 
 

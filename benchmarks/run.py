@@ -34,6 +34,7 @@ def main() -> None:
         fig6_init_robustness,
         funnel_bench,
         kernels_bench,
+        obs_bench,
         serve_bench,
         shard_bench,
         table1_rounds,
@@ -65,6 +66,7 @@ def main() -> None:
     gated("funnel_bench", lambda: funnel_bench.main(perf_args))
     gated("fault_bench", lambda: fault_bench.main(perf_args))
     gated("serve_bench", lambda: serve_bench.main(perf_args))
+    gated("obs_bench", lambda: obs_bench.main(perf_args))
     cohort_sweep.main(perf_args)
     gated("cohort_sweep_algos",
           lambda: cohort_sweep.main(["--algos"] + perf_args))

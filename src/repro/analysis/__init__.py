@@ -1,1 +1,3 @@
-"""Roofline analysis from compiled dry-run artifacts."""
+"""Roofline analysis from compiled dry-run artifacts, HLO-text accounting
+(:mod:`repro.analysis.hlo`), and telemetry run reports
+(:mod:`repro.analysis.report`, DESIGN.md §14)."""

@@ -1,0 +1,147 @@
+"""Render a human-readable run summary from a telemetry JSONL file.
+
+    PYTHONPATH=src python -m repro.analysis.report runs/train.jsonl
+
+Works for both engines' streams (DESIGN.md §14): the manifest header, a
+train convergence table sampled from the ``fl_round`` events (round / loss /
+acc / GEMD plus whichever diagnostics the config produced), robustness and
+staleness totals, and the serve latency tables (TTFT / end-to-end
+percentiles, per-chunk decode tok/s, occupancy, queue depth).  Pure stdlib +
+numpy — no jax import, so it runs anywhere the JSONL lands.
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Any, Dict, List, Sequence
+
+import numpy as np
+
+from repro.obs.sink import load_events
+
+__all__ = ["load_events", "summarize"]
+
+
+def _fmt(v: Any) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _table(headers: Sequence[str], rows: List[Sequence[Any]]) -> List[str]:
+    cells = [[_fmt(c) for c in row] for row in rows]
+    widths = [
+        max(len(h), *(len(r[i]) for r in cells)) if cells else len(h)
+        for i, h in enumerate(headers)
+    ]
+    line = lambda r: "  " + "  ".join(c.rjust(w) for c, w in zip(r, widths))
+    return [line(headers), line(["-" * w for w in widths])] + [
+        line(r) for r in cells
+    ]
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def _manifest_lines(man: Dict[str, Any]) -> List[str]:
+    lines = ["run manifest"]
+    for k in ("config_hash", "git_sha", "jax_version", "backend",
+              "device_count", "device_kind", "mesh", "mode", "arch"):
+        if man.get(k) is not None:
+            lines.append(f"  {k}: {man[k]}")
+    return lines
+
+
+def _train_lines(rounds: List[Dict[str, Any]], max_rows: int) -> List[str]:
+    lines = [f"training: {len(rounds)} rounds"]
+    cols = ["round", "loss", "acc", "gemd"]
+    for extra in ("sim_time", "staleness", "survivors", "flagged",
+                  "quarantined", "cache_age", "spectrum_erank", "avail_frac"):
+        if any(r.get(extra) is not None for r in rounds):
+            cols.append(extra)
+    step = max(1, len(rounds) // max_rows)
+    idx = sorted(set(range(0, len(rounds), step)) | {len(rounds) - 1})
+    lines += _table(cols, [[rounds[i].get(c) for c in cols] for i in idx])
+    ident = sum(int(r.get("identity_round") or 0) for r in rounds)
+    if ident:
+        lines.append(f"  identity rounds (survivors floor): {ident}")
+    gemds = [r["gemd"] for r in rounds if r.get("gemd") is not None]
+    if len(gemds) > 1:
+        drift = float(np.mean(np.abs(np.diff(gemds))))
+        lines.append(f"  mean |GEMD drift| per round: {drift:.4g}")
+    return lines
+
+
+def _serve_lines(events: List[Dict[str, Any]]) -> List[str]:
+    admits = [e for e in events if e["event"] == "serve_admit"]
+    chunks = [e for e in events if e["event"] == "serve_chunk"]
+    finishes = [e for e in events if e["event"] == "serve_finish"]
+    lines = [
+        f"serving: {len(finishes)} finished seqs, "
+        f"{len(admits)} admissions, {len(chunks)} decode chunks"
+    ]
+    rows = []
+    ttft = [e["ttft_s"] for e in admits if e.get("ttft_s") is not None]
+    if ttft:
+        rows.append(["TTFT (s)", _pct(ttft, 50), _pct(ttft, 90),
+                     _pct(ttft, 99), max(ttft)])
+    lat = [e["latency_s"] for e in finishes if e.get("latency_s") is not None]
+    if lat:
+        rows.append(["latency (s)", _pct(lat, 50), _pct(lat, 90),
+                     _pct(lat, 99), max(lat)])
+    if rows:
+        lines += _table(["metric", "p50", "p90", "p99", "max"], rows)
+    if chunks:
+        toks = sum(e.get("tokens", 0) for e in chunks)
+        secs = sum(e.get("dt_s", 0.0) for e in chunks)
+        occ = [e["active_slots"] / e["batch"] for e in chunks
+               if e.get("batch")]
+        qd = [e.get("queue_depth", 0) for e in chunks]
+        lines.append(
+            f"  decode: {toks} tokens in {secs:.3f} s "
+            f"({toks / max(secs, 1e-9):,.0f} tok/s aggregate), "
+            f"mean occupancy {np.mean(occ):.0%}, "
+            f"max queue depth {max(qd)}"
+        )
+    return lines
+
+
+def summarize(events: List[Dict[str, Any]], max_rows: int = 12) -> str:
+    """The whole report as one string (empty-stream safe)."""
+    lines: List[str] = []
+    man = next((e for e in events if e["event"] == "manifest"), None)
+    if man is not None:
+        lines += _manifest_lines(man)
+    rounds = [e for e in events if e["event"] == "fl_round"]
+    if rounds:
+        lines += [""] + _train_lines(rounds, max_rows)
+    repro_ev = [e for e in events if e["event"] == "fl_reprofile"]
+    if repro_ev:
+        lines.append(f"  reprofile boundaries: {len(repro_ev)}")
+    ckpts = [e for e in events if e["event"] == "fl_checkpoint"]
+    if ckpts:
+        lines.append(
+            f"  checkpoints: {len(ckpts)} "
+            f"(last at round {ckpts[-1].get('round')})"
+        )
+    if any(e["event"].startswith("serve_") for e in events):
+        lines += [""] + _serve_lines(events)
+    if not lines:
+        return "no telemetry events"
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="telemetry JSONL file")
+    ap.add_argument("--max-rows", type=int, default=12,
+                    help="max convergence-table rows (sampled evenly)")
+    args = ap.parse_args()
+    print(summarize(load_events(args.path), max_rows=args.max_rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -75,6 +75,9 @@ from repro.fl import rounds as rounds_lib
 from repro.fl import scenarios as scenarios_lib
 from repro.fl import staleness as staleness_lib
 from repro.launch.sharding import CLIENT_AXIS, client_axis_spec
+from repro.obs import sink as obs_sink_lib
+from repro.obs import telemetry as obs_telemetry_lib
+from repro.obs import tracing as obs_tracing_lib
 
 __all__ = [
     "FLConfig",
@@ -185,6 +188,15 @@ class FLConfig:
     local_algo: str = "fedavg"
     prox_mu: Optional[float] = None  # fedprox proximal strength (>= 0)
     feddyn_alpha: Optional[float] = None  # feddyn penalty strength (> 0)
+    # In-program telemetry (DESIGN.md §14, repro.obs): when True the round
+    # emits a per-round Telemetry pytree of selection / robustness /
+    # staleness diagnostics alongside the scan outputs, drained to a JSONL
+    # sink at chunk boundaries.  STATIC flag with the repo-wide bit-identity
+    # contract: telemetry=False lowers the exact pre-telemetry program (no
+    # extra outputs, no key-stream or state changes), and telemetry=True
+    # only *adds* output leaves — the carried state and every shared metric
+    # stay bit-identical.
+    telemetry: bool = False
 
     def local_algo_obj(self) -> "local_algos_lib.LocalAlgo":
         """The configured :class:`repro.fl.local_algos.LocalAlgo` instance
@@ -1278,6 +1290,15 @@ def make_round_fn(
             )
             out["flagged"] = jnp.sum(flagged_c.astype(jnp.int32))
             out["quarantined"] = jnp.sum((q > 0).astype(jnp.int32))
+        if cfg.telemetry:
+            # telemetry only ADDS output leaves — computed entirely from
+            # values the round already holds, so the carried state and every
+            # existing metric stay bit-identical to telemetry=False
+            out["telemetry"] = obs_telemetry_lib.round_telemetry(
+                cfg, state, t=t, avail=avail, new_s=new_s,
+                flagged=flagged_c, survivors=survivors,
+                quarantine=(q if guard_on else None),
+            )
         return new_state, out
 
     return round_fn
@@ -1329,6 +1350,7 @@ def run_scanned(
     round_fn, state: ServerState, num_rounds: int,
     mesh: Optional[jax.sharding.Mesh] = None,
     client_axis: str = CLIENT_AXIS,
+    sink: Optional["obs_sink_lib.TelemetrySink"] = None,
 ) -> Tuple[ServerState, Dict[str, jax.Array]]:
     """Run ``num_rounds`` rounds as ONE compiled ``lax.scan`` program.
 
@@ -1343,10 +1365,19 @@ def run_scanned(
     round_fns (``cfg.cohort_cap``, DESIGN.md §8) run through this exact path:
     the state layout is identical (slots are transient inside the round), so
     no extra argument is needed here.
+
+    ``sink`` (DESIGN.md §14) drains the segment's stacked outputs to JSONL
+    *after* the compiled scan returns — the chunk-boundary drain rule: the
+    host only ever observes scan outputs, never injects callbacks into the
+    scan body, so a sink can never change the compiled program.
     """
     if mesh is not None:
         state = shard_server_state(state, mesh, client_axis)
-    return _scanned(round_fn, num_rounds)(state)
+    with obs_tracing_lib.annotate(f"fl.scan_chunk[{num_rounds}]"):
+        state, outputs = _scanned(round_fn, num_rounds)(state)
+    if sink is not None and num_rounds:
+        obs_sink_lib.drain_fl_outputs(sink, outputs)
+    return state, outputs
 
 
 def _vmapped(round_fn, num_rounds: int):
@@ -1429,6 +1460,7 @@ def run_checkpointed(
     ckpt_every: Optional[int] = None,
     mesh: Optional[jax.sharding.Mesh] = None,
     client_axis: str = CLIENT_AXIS,
+    sink: Optional["obs_sink_lib.TelemetrySink"] = None,
 ) -> Tuple[ServerState, Dict[str, jax.Array]]:
     """:func:`run_scanned` with periodic :class:`ServerState` snapshots.
 
@@ -1443,26 +1475,31 @@ def run_checkpointed(
     """
     if ckpt_dir is None or not ckpt_every:
         return run_scanned(
-            round_fn, state, num_rounds, mesh=mesh, client_axis=client_axis
+            round_fn, state, num_rounds, mesh=mesh, client_axis=client_axis,
+            sink=sink,
         )
     done = 0
-    outs: List[Dict[str, np.ndarray]] = []
+    outs: List[Dict[str, Any]] = []
     while done < num_rounds:
         n = min(ckpt_every, num_rounds - done)
         state, seg = run_scanned(
-            round_fn, state, n, mesh=mesh, client_axis=client_axis
+            round_fn, state, n, mesh=mesh, client_axis=client_axis, sink=sink
         )
-        outs.append({k: np.asarray(v) for k, v in seg.items()})
+        # tree_map (not a dict comprehension): the telemetry subtree is a
+        # Telemetry pytree, not a bare array
+        outs.append(jax.tree_util.tree_map(np.asarray, seg))
         save_server_state(ckpt_dir, state)
+        if sink is not None:
+            sink.emit("fl_checkpoint", round=int(jax.device_get(state.round)))
         done += n
     if not outs:
         _, empty = run_scanned(
             round_fn, state, 0, mesh=mesh, client_axis=client_axis
         )
         return state, empty
-    merged = {
-        k: np.concatenate([o[k] for o in outs], axis=0) for k in outs[0]
-    }
+    merged = jax.tree_util.tree_map(
+        lambda *xs: np.concatenate(xs, axis=0), *outs
+    )
     return state, merged
 
 
@@ -1472,10 +1509,12 @@ def stack_states(states: Sequence[ServerState]) -> ServerState:
 
 
 def unstack_outputs(outputs: Dict[str, jax.Array]) -> List[Dict[str, np.ndarray]]:
-    """Split ``run_many`` outputs back into one per-run metrics dict each."""
-    outs = {k: np.asarray(v) for k, v in outputs.items()}
-    n = next(iter(outs.values())).shape[0]
-    return [{k: v[i] for k, v in outs.items()} for i in range(n)]
+    """Split ``run_many`` outputs back into one per-run metrics dict each
+    (tree-aware: the optional telemetry subtree splits along for the ride).
+    """
+    outs = jax.tree_util.tree_map(np.asarray, outputs)
+    n = jax.tree_util.tree_leaves(outs)[0].shape[0]
+    return [jax.tree_util.tree_map(lambda v: v[i], outs) for i in range(n)]
 
 
 # -------------------------------------------------------------- state build

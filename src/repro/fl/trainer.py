@@ -37,6 +37,7 @@ from repro.fl import local_algos as local_algos_lib
 from repro.fl import rounds as rounds_lib
 from repro.fl import staleness as staleness_lib
 from repro.fl.engine import FLConfig
+from repro.obs import tracing as obs_tracing_lib
 
 __all__ = ["FLConfig", "FLTrainer"]
 
@@ -101,6 +102,7 @@ def _cached_round_fn(cfg: FLConfig, loss_fn, accuracy_fn, strategy, mesh, client
         cfg.local_algo,
         cfg.prox_mu,
         cfg.feddyn_alpha,
+        cfg.telemetry,
         mesh,
         client_axis,
     )
@@ -375,13 +377,21 @@ class FLTrainer:
         self.round_state.round = int(state.round)
 
     # ------------------------------------------------------------------
-    def run(self, rounds: Optional[int] = None, progress: bool = False) -> Dict[str, List]:
+    def run(
+        self, rounds: Optional[int] = None, progress: bool = False,
+        sink=None,
+    ) -> Dict[str, List]:
         """Run rounds through the scanned engine (legacy loop as fallback).
 
         Profile refreshes (``reprofile_every``) happen on scan-segment
         boundaries: each segment is one compiled ``lax.scan``, then profiles
         / kernel / cluster labels are re-fitted on host and the next segment
         starts from the refreshed state.
+
+        ``sink`` (an :class:`repro.obs.TelemetrySink`, DESIGN.md §14) drains
+        each segment's stacked outputs to JSONL at the same boundaries and
+        records the reprofile events — strictly host-side, so passing a sink
+        never changes the compiled program.
         """
         cfg = self.cfg
         rounds = rounds or cfg.rounds
@@ -414,12 +424,21 @@ class FLTrainer:
         state = self.server_state()
         while done < rounds:
             n = min(segment, rounds - done)
-            state, seg_outs = engine_lib.run_scanned(round_fn, state, n)
+            state, seg_outs = engine_lib.run_scanned(
+                round_fn, state, n, sink=sink
+            )
             outs.append(jax.tree_util.tree_map(np.asarray, seg_outs))
             done += n
             if done < rounds and cfg.reprofile_every:
                 self._absorb(state)
-                self._init_profiles()  # host: re-profile + re-fit clusters
+                with obs_tracing_lib.annotate("fl.reprofile"):
+                    self._init_profiles()  # host: re-profile + re-fit clusters
+                if sink is not None:
+                    sink.emit(
+                        "fl_reprofile",
+                        round=self.round_state.round,
+                        funneled=cfg.candidate_frac is not None,
+                    )
                 if cfg.candidate_frac is not None:
                     # reprofile segments RE-FUNNEL (DESIGN.md §10): fresh
                     # profiles + evolved losses -> new candidate set, new
@@ -455,9 +474,9 @@ class FLTrainer:
                         state, self.mesh, self.client_axis
                     )
         self._absorb(state)
-        merged = {
-            k: np.concatenate([o[k] for o in outs], axis=0) for k in outs[0]
-        }
+        merged = jax.tree_util.tree_map(
+            lambda *xs: np.concatenate(xs, axis=0), *outs
+        )
         final_acc = None
         total = start_round + rounds
         if total % cfg.eval_every != 0:

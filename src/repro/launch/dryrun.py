@@ -342,7 +342,7 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
     from repro.core import selection as selection_lib
     from repro.fl import engine as engine_lib
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     case = "fl_sharded_engine"
     if cohort_cap is not None:
         case = "fl_sharded_engine_slotted"
@@ -405,14 +405,14 @@ def run_fl_sharded_case(num_devices: int = 64, clients: int = 256,
             lambda s: jax.lax.scan(round_fn, s, None, length=rounds)
         )
         compiled = program.lower(state).compile()
-        rec["compile_s"] = round(time.time() - t0, 2)
+        rec["compile_s"] = round(time.perf_counter() - t0, 2)
         rec["collectives"] = hlo_lib.collective_bytes(compiled.as_text())
         rec["ok"] = True
     except Exception as e:
         rec["ok"] = False
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]
-    rec["total_s"] = round(time.time() - t0, 2)
+    rec["total_s"] = round(time.perf_counter() - t0, 2)
     return rec
 
 
@@ -429,7 +429,7 @@ def run_serve_engine_case(arch: str, batch: int = 4, prompt: int = 8,
     from repro.serve import (ServeConfig, init_decode_state, make_admit_fn,
                              make_decode_fn, run_scan)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     rec: Dict = {"case": "serve_engine", "arch": arch,
                  "batch": batch, "prompt": prompt, "gen": gen}
     try:
@@ -443,10 +443,10 @@ def run_serve_engine_case(arch: str, batch: int = 4, prompt: int = 8,
         state_sds = jax.eval_shape(lambda: init_decode_state(cfg, scfg))
 
         decode_fn = make_decode_fn(cfg, scfg)
-        t1 = time.time()
+        t1 = time.perf_counter()
         scan = jax.jit(lambda p, s: run_scan(decode_fn, p, s, gen - 1))
         scan.lower(params_sds, state_sds).compile()
-        rec["scan_compile_s"] = round(time.time() - t1, 2)
+        rec["scan_compile_s"] = round(time.perf_counter() - t1, 2)
 
         admit_fn = make_admit_fn(cfg, scfg, prompt)
         prompt_sds = jax.ShapeDtypeStruct((1, prompt), jnp.int32)
@@ -454,17 +454,17 @@ def run_serve_engine_case(arch: str, batch: int = 4, prompt: int = 8,
         key_sds = jax.eval_shape(
             lambda k: jax.random.key_data(k), jax.random.key(0)
         )
-        t1 = time.time()
+        t1 = time.perf_counter()
         jax.jit(admit_fn).lower(
             params_sds, state_sds, prompt_sds, scalar_sds, scalar_sds, key_sds
         ).compile()
-        rec["admit_compile_s"] = round(time.time() - t1, 2)
+        rec["admit_compile_s"] = round(time.perf_counter() - t1, 2)
         rec["ok"] = True
     except Exception as e:
         rec["ok"] = False
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]
-    rec["total_s"] = round(time.time() - t0, 2)
+    rec["total_s"] = round(time.perf_counter() - t0, 2)
     return rec
 
 
@@ -552,7 +552,7 @@ def _accounting_counts(spec, cfg, dims, mesh, multi_pod) -> Dict:
 
 def run_case(case: DryRunCase, dump_hlo: Optional[str] = None,
              mesh_override=None) -> Dict:
-    t0 = time.time()
+    t0 = time.perf_counter()
     spec, cfg, dims = _case_config(case)
     mesh = mesh_override or make_production_mesh(multi_pod=case.multi_pod)
     rec: Dict = {
@@ -583,12 +583,12 @@ def run_case(case: DryRunCase, dump_hlo: Optional[str] = None,
             rec["layer_reps"] = acc["layer_reps"]
             rec["raw"] = acc["raw"]
             rec["ok"] = True
-            rec["total_s"] = round(time.time() - t0, 2)
+            rec["total_s"] = round(time.perf_counter() - t0, 2)
             return rec
 
         compiled = _compile_once(spec, cfg, dims, mesh, case.multi_pod,
                                  scan_rounds=case.scan_rounds)
-        rec["compile_s"] = round(time.time() - t0, 2)
+        rec["compile_s"] = round(time.perf_counter() - t0, 2)
         rec["params"] = int(
             sum(
                 x.size
@@ -637,7 +637,7 @@ def run_case(case: DryRunCase, dump_hlo: Optional[str] = None,
         rec["ok"] = False
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]
-    rec["total_s"] = round(time.time() - t0, 2)
+    rec["total_s"] = round(time.perf_counter() - t0, 2)
     return rec
 
 

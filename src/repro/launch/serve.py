@@ -23,6 +23,7 @@ are ``b*g``); decode is charged the remaining ``b*(g-1)``.  All timings use
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import time
 
@@ -32,6 +33,8 @@ import numpy as np
 
 from repro.configs import ARCH_NAMES, get_arch
 from repro.models import transformer as T
+from repro.obs import TelemetrySink
+from repro.obs import tracing as obs_tracing_lib
 from repro.serve import (
     ServeConfig,
     ServeEngine,
@@ -131,15 +134,19 @@ def run_scan_mode(cfg, params, prompts, gen: int, temperature: float = 0.0,
 
 def run_continuous(cfg, params, prompts, budgets, batch: int,
                    temperature: float = 0.0, decode_chunk: int = 8,
-                   use_flash: bool = False, seed: int = 0):
+                   use_flash: bool = False, seed: int = 0, telemetry=None):
     """Continuous batching: stream len(prompts) requests through ``batch``
-    slots.  -> (finished list, {"t_total": s, "tokens": n, "compiles": {...}})."""
+    slots.  -> (finished list, {"t_total": s, "tokens": n, "compiles": {...}}).
+
+    ``telemetry`` (a :class:`repro.obs.TelemetrySink`) records the TTFT /
+    per-chunk tok/s / occupancy / queue-depth series (DESIGN.md §14)."""
     n, p = prompts.shape
     gmax = int(max(budgets))
     scfg = ServeConfig(batch=batch, cache_len=p + gmax, max_new=gmax,
                        temperature=temperature, decode_chunk=decode_chunk,
                        use_flash=use_flash)
-    eng = ServeEngine(cfg, scfg, params, prompt_len=p, key=jax.random.key(seed))
+    eng = ServeEngine(cfg, scfg, params, prompt_len=p, key=jax.random.key(seed),
+                      telemetry=telemetry)
     t0 = time.perf_counter()
     for i in range(n):
         eng.submit(np.asarray(prompts[i]), int(budgets[i]))
@@ -156,36 +163,63 @@ def serve(args):
     prompts = jax.random.randint(jax.random.key(1), (b, p), 0, cfg.vocab_size, jnp.int32)
     print(f"arch={args.arch} (reduced) batch={b} prompt={p} gen={g}")
 
-    if args.continuous:
-        n = args.requests or 2 * b
-        all_prompts = jax.random.randint(
-            jax.random.key(1), (n, p), 0, cfg.vocab_size, jnp.int32
+    stack = contextlib.ExitStack()
+    sink = None
+    telemetry_path = getattr(args, "telemetry", None)
+    with stack:
+        stack.enter_context(
+            obs_tracing_lib.trace(getattr(args, "profile_dir", None))
         )
-        rng = np.random.default_rng(args.seed)
-        budgets = rng.integers(max(1, g // 4), g + 1, size=n) if args.mixed \
-            else np.full(n, g)
-        finished, stats = run_continuous(
-            cfg, params, all_prompts, budgets, b,
-            temperature=args.temperature, use_flash=args.flash, seed=args.seed,
-        )
-        print(f"continuous: {len(finished)} seqs, {stats['tokens']} generated "
-              f"tokens in {stats['t_total']*1e3:.1f} ms "
-              f"({stats['tokens']/stats['t_total']:,.0f} tok/s aggregate)")
-        print(f"compiled programs: {stats['compiles']}")
-        return finished
+        if telemetry_path:
+            sink = stack.enter_context(TelemetrySink(telemetry_path))
+            sink.write_manifest(
+                config={"arch": args.arch, "batch": b, "prompt_len": p,
+                        "gen": g, "temperature": args.temperature,
+                        "use_flash": bool(args.flash), "seed": args.seed},
+                extra={"mode": "serve"},
+            )
 
-    if args.scan:
-        gen_toks, t = run_scan_mode(
-            cfg, params, prompts, g, temperature=args.temperature,
-            use_flash=args.flash, seed=args.seed,
-        )
-        mode = "scan"
-    else:
-        if args.temperature:
-            raise SystemExit("--temperature requires --scan or --continuous "
-                             "(the legacy oracle is greedy-only)")
-        gen_toks, t = run_legacy(cfg, params, prompts, g)
-        mode = "legacy"
+        if args.continuous:
+            n = args.requests or 2 * b
+            all_prompts = jax.random.randint(
+                jax.random.key(1), (n, p), 0, cfg.vocab_size, jnp.int32
+            )
+            rng = np.random.default_rng(args.seed)
+            budgets = rng.integers(max(1, g // 4), g + 1, size=n) if args.mixed \
+                else np.full(n, g)
+            finished, stats = run_continuous(
+                cfg, params, all_prompts, budgets, b,
+                temperature=args.temperature, use_flash=args.flash,
+                seed=args.seed, telemetry=sink,
+            )
+            print(f"continuous: {len(finished)} seqs, {stats['tokens']} generated "
+                  f"tokens in {stats['t_total']*1e3:.1f} ms "
+                  f"({stats['tokens']/stats['t_total']:,.0f} tok/s aggregate)")
+            print(f"compiled programs: {stats['compiles']}")
+            if sink is not None:
+                print(f"telemetry -> {telemetry_path} (render with "
+                      f"`python -m repro.analysis.report {telemetry_path}`)")
+            return finished
+
+        if args.scan:
+            gen_toks, t = run_scan_mode(
+                cfg, params, prompts, g, temperature=args.temperature,
+                use_flash=args.flash, seed=args.seed,
+            )
+            mode = "scan"
+        else:
+            if args.temperature:
+                raise SystemExit("--temperature requires --scan or --continuous "
+                                 "(the legacy oracle is greedy-only)")
+            gen_toks, t = run_legacy(cfg, params, prompts, g)
+            mode = "legacy"
+
+        if sink is not None:
+            # batch modes have no admission queue — one summary event
+            sink.emit("serve_summary", mode=mode, t_prefill_s=t["t_prefill"],
+                      t_decode_s=t["t_decode"], tokens=b * g,
+                      decode_tok_s=b * (g - 1) / max(t["t_decode"], 1e-9))
+            print(f"telemetry -> {telemetry_path}")
 
     print(f"prefill: {t['t_prefill']*1e3:.1f} ms "
           f"({b*p/t['t_prefill']:,.0f} prompt tok/s, +{b} sampled)")
@@ -225,6 +259,13 @@ def main():
                     help="route decode attention through the Pallas flash-decode kernel")
     ap.add_argument("--check", action="store_true",
                     help="assert scan tokens match the legacy oracle")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write JSONL telemetry to PATH (manifest + TTFT / "
+                         "per-chunk tok/s / occupancy / queue-depth series "
+                         "in --continuous mode, DESIGN.md §14)")
+    ap.add_argument("--profile-dir", default=None, metavar="PATH",
+                    help="capture a jax.profiler trace of the run into PATH "
+                         "(TensorBoard-loadable)")
     serve(ap.parse_args())
 
 

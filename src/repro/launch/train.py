@@ -13,6 +13,7 @@ are exercised by the dry-run); on a TPU slice the same driver scales via
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -32,6 +33,8 @@ from repro.fl.scenarios import SCENARIO_NAMES
 from repro.fl.staleness import DECAY_FAMILIES
 from repro.launch.mesh import make_client_mesh
 from repro.models import transformer as T
+from repro.obs import TelemetrySink
+from repro.obs import tracing as obs_tracing_lib
 
 
 def _token_clients(cfg, num_clients, docs_per_client, seq, seed=0):
@@ -139,6 +142,7 @@ def run_fl(args):
     strategy = make_strategy(args.selection)
 
     loss_fn = lambda p, x, y: T.lm_loss(cfg, p, x)  # topics only feed GEMD
+    telemetry_path = getattr(args, "telemetry", None)
     flcfg = engine_lib.FLConfig(
         num_clients=c,
         clients_per_round=args.per_round,
@@ -162,7 +166,16 @@ def run_fl(args):
         local_algo=getattr(args, "local_algo", "fedavg"),
         prox_mu=getattr(args, "prox_mu", None),
         feddyn_alpha=getattr(args, "feddyn_alpha", None),
+        telemetry=telemetry_path is not None,
     )
+    sink = None
+    if telemetry_path:
+        sink = TelemetrySink(telemetry_path)
+        sink.write_manifest(
+            config=dataclasses.asdict(flcfg), mesh=mesh,
+            extra={"mode": "fl", "arch": args.arch,
+                   "selection": args.selection},
+        )
     state = engine_lib.init_server_state(
         flcfg, params, loss_fn, None, clients, topics,
         strategy=strategy, profiles=profiles, losses=jnp.ones((c,)),
@@ -188,13 +201,16 @@ def run_fl(args):
             print(f"[fl:{args.selection}] resumed round {start} from "
                   f"{args.ckpt}/step_{step:08d}")
     remaining = max(args.rounds - start, 0)
-    if flcfg.ckpt_every is not None and args.ckpt:
-        state, outs = engine_lib.run_checkpointed(
-            round_fn, state, remaining, ckpt_dir=args.ckpt,
-            ckpt_every=flcfg.ckpt_every, mesh=mesh,
-        )
-    else:
-        state, outs = engine_lib.run_scanned(round_fn, state, remaining, mesh=mesh)
+    with obs_tracing_lib.trace(getattr(args, "profile_dir", None)):
+        if flcfg.ckpt_every is not None and args.ckpt:
+            state, outs = engine_lib.run_checkpointed(
+                round_fn, state, remaining, ckpt_dir=args.ckpt,
+                ckpt_every=flcfg.ckpt_every, mesh=mesh, sink=sink,
+            )
+        else:
+            state, outs = engine_lib.run_scanned(
+                round_fn, state, remaining, mesh=mesh, sink=sink
+            )
     sels = np.asarray(outs["selected"]) if remaining else np.zeros((0, 0), int)
     losses = np.asarray(outs["loss"]) if remaining else np.zeros((0,))
     gemds = np.asarray(outs["gemd"]) if remaining else np.zeros((0,))
@@ -222,6 +238,12 @@ def run_fl(args):
         print(f"[fl:{args.selection}] scenario={args.scenario} ({mode}): "
               f"simulated wall clock {sim.sum():.2f} "
               f"(mean round {sim.mean():.2f})")
+    if sink is not None:
+        n_ev = sum(sink.event_counts.values())
+        sink.close()
+        print(f"[fl:{args.selection}] telemetry -> {telemetry_path} "
+              f"({n_ev} events; render with "
+              f"`python -m repro.analysis.report {telemetry_path}`)")
     params = state.params
     if args.ckpt and flcfg.ckpt_every is None:
         # legacy raw-params snapshot; with --ckpt-every the dir already holds
@@ -323,6 +345,14 @@ def main():
                          "rounds; a re-launch resumes from the latest "
                          "snapshot bit-identically (requires --ckpt)")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write JSONL telemetry (run manifest + per-round "
+                         "diagnostics, DESIGN.md §14) to PATH; also turns "
+                         "on the in-program Telemetry outputs "
+                         "(FLConfig.telemetry)")
+    ap.add_argument("--profile-dir", default=None, metavar="PATH",
+                    help="capture a jax.profiler trace of the run into PATH "
+                         "(TensorBoard-loadable)")
     args = ap.parse_args()
     (run_fl if args.mode == "fl" else run_pretrain)(args)
 

@@ -1,0 +1,249 @@
+"""Host-side telemetry sink: JSONL events + the run manifest (DESIGN.md §14).
+
+One event per line, strict JSON (no NaN/Inf — they sanitise to ``null`` so
+any consumer round-trips).  Every event carries::
+
+    {"event": <type>, "t": <seconds since sink creation, perf_counter>,
+     "wall": <unix seconds>, ...payload}
+
+The sink is *pulled* from, never pushed into a compiled program: the
+engines drain it at scan-chunk / admit / harvest boundaries (the
+chunk-boundary drain rule — see DESIGN.md §14 for why there is no
+``io_callback`` inside a scan body).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import os
+import subprocess
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+__all__ = [
+    "TelemetrySink",
+    "config_hash",
+    "drain_fl_outputs",
+    "load_events",
+    "run_manifest",
+]
+
+
+def _jsonable(v: Any) -> Any:
+    """Coerce numpy/jax scalars and arrays into strict-JSON values.
+
+    Plain scalars short-circuit first: the per-round drain funnels thousands
+    of already-converted values through here (see :func:`drain_fl_outputs`),
+    so the common case must be a couple of isinstance checks, not an
+    ``np.asarray`` round-trip."""
+    if v is None or isinstance(v, (bool, int, str)):
+        return v
+    if isinstance(v, float):  # includes np.float64 (a float subclass)
+        return float(v) if math.isfinite(v) else None
+        # NaN/Inf are not strict JSON; eval-off rounds emit null
+    if isinstance(v, (np.generic, jax.Array, np.ndarray)):
+        v = np.asarray(v)
+        return _jsonable(v.item() if v.ndim == 0 else v.tolist())
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    return v
+
+
+def config_hash(config: Any) -> str:
+    """Stable short hash of a config (dataclass or plain dict): canonical
+    JSON (sorted keys) → sha256.  Same config ⇒ same hash across processes —
+    the manifest-determinism contract tests pin this."""
+    if dataclasses.is_dataclass(config) and not isinstance(config, type):
+        config = dataclasses.asdict(config)
+    blob = json.dumps(_jsonable(config), sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _git_sha() -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        )
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except Exception:  # pragma: no cover - no git in deployment images
+        return None
+
+
+def run_manifest(
+    config: Any = None,
+    mesh: Optional[Any] = None,
+    extra: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """The run's identity card: config + hash, jax/device/mesh info, git SHA.
+
+    Written once per run as the sink's first event, so every JSONL file is
+    self-describing — a report can always answer "what produced this?".
+    """
+    devices = jax.devices()
+    man: Dict[str, Any] = {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": len(devices),
+        "device_kind": devices[0].device_kind if devices else None,
+        "host_cores": os.cpu_count(),
+        "git_sha": _git_sha(),
+    }
+    if config is not None:
+        if dataclasses.is_dataclass(config) and not isinstance(config, type):
+            config = dataclasses.asdict(config)
+        man["config"] = _jsonable(config)
+        man["config_hash"] = config_hash(config)
+    if mesh is not None:
+        man["mesh"] = {
+            "axes": {str(k): int(v) for k, v in mesh.shape.items()},
+            "devices": int(np.prod(list(mesh.shape.values()))),
+        }
+    if extra:
+        man.update(_jsonable(extra))
+    return man
+
+
+class TelemetrySink:
+    """Append-only JSONL event emitter.
+
+    Lines are buffered through the underlying file object and flushed on
+    :meth:`flush`/:meth:`close` (and per-event when ``line_buffered``), so a
+    crashed run keeps everything up to its last drain boundary.  Usable as a
+    context manager; ``event_counts`` keeps per-type totals for cheap
+    end-of-run summaries without re-reading the file.
+    """
+
+    def __init__(self, path: str, line_buffered: bool = False):
+        self.path = str(path)
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        self._f = open(self.path, "a", encoding="utf-8")
+        self._t0 = time.perf_counter()
+        self._line_buffered = line_buffered
+        self.event_counts: Dict[str, int] = {}
+
+    def emit(self, event: str, **payload: Any) -> None:
+        rec = {
+            "event": event,
+            "t": round(time.perf_counter() - self._t0, 6),
+            "wall": round(time.time(), 3),
+        }
+        for k, v in payload.items():
+            rec[k] = _jsonable(v)
+        self._f.write(json.dumps(rec, separators=(",", ":")) + "\n")
+        self.event_counts[event] = self.event_counts.get(event, 0) + 1
+        if self._line_buffered:
+            self._f.flush()
+
+    def emit_many(self, event: str, records: List[Dict[str, Any]]) -> None:
+        """Bulk-emit pre-sanitised records (the scan-chunk drain path).
+
+        Values must already be strict-JSON (run them through the module's
+        converter first); the whole batch shares one timestamp pair — they
+        all land at the same drain boundary, so per-record clock reads would
+        only record the emit loop's own speed."""
+        if not records:
+            return
+        t = round(time.perf_counter() - self._t0, 6)
+        wall = round(time.time(), 3)
+        lines = []
+        for payload in records:
+            rec = {"event": event, "t": t, "wall": wall}
+            rec.update(payload)
+            lines.append(json.dumps(rec, separators=(",", ":")))
+        self._f.write("\n".join(lines) + "\n")
+        self.event_counts[event] = (
+            self.event_counts.get(event, 0) + len(records)
+        )
+        if self._line_buffered:
+            self._f.flush()
+
+    def write_manifest(
+        self,
+        config: Any = None,
+        mesh: Optional[Any] = None,
+        extra: Optional[Dict[str, Any]] = None,
+    ) -> Dict[str, Any]:
+        man = run_manifest(config=config, mesh=mesh, extra=extra)
+        self.emit("manifest", **man)
+        self.flush()
+        return man
+
+    def flush(self) -> None:
+        self._f.flush()
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.flush()
+            self._f.close()
+
+    def __enter__(self) -> "TelemetrySink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def _column(v: Any) -> List[Any]:
+    """Whole stacked column -> strict-JSON python, skipping the per-element
+    sanitiser when the dtype can't hide a NaN/Inf (int/bool) or the column
+    is verifiably all-finite — one vectorised check instead of thousands of
+    scalar conversions."""
+    a = np.asarray(v)
+    if a.dtype.kind in "iub":
+        return a.tolist()
+    if a.dtype.kind == "f" and bool(np.isfinite(a).all()):
+        return a.tolist()
+    return _jsonable(a.tolist())
+
+
+def drain_fl_outputs(sink: TelemetrySink, outputs: Dict[str, Any]) -> int:
+    """Emit one ``fl_round`` event per round of a scanned segment's stacked
+    outputs dict (the chunk-boundary drain).  The optional ``telemetry``
+    subtree (a :class:`~repro.obs.telemetry.Telemetry`) flattens into the
+    same event under its field names; the per-client ``avail`` mask is
+    dropped (C-wide — its mean already rides ``avail_frac``).  Returns the
+    number of rounds drained."""
+    # one vectorised device->host->python conversion per FIELD (not per
+    # round-and-field): the drain rides inside the engines' timed region, so
+    # its cost per round must stay a dict build + json.dumps
+    host: Dict[str, Any] = {
+        k: _column(v)
+        for k, v in outputs.items()
+        if k not in ("telemetry", "avail")
+    }
+    tel = outputs.get("telemetry")
+    if tel is not None:
+        for f in dataclasses.fields(tel):
+            v = getattr(tel, f.name)
+            if v is not None:
+                host[f.name] = _column(v)
+    if not host:
+        return 0
+    n = len(next(iter(host.values())))
+    sink.emit_many(
+        "fl_round", [{k: v[i] for k, v in host.items()} for i in range(n)]
+    )
+    sink.flush()
+    return n
+
+
+def load_events(path: str) -> List[Dict[str, Any]]:
+    """Parse a telemetry JSONL file back into event dicts (strict JSON)."""
+    events = []
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events

@@ -1,0 +1,138 @@
+"""In-program telemetry: the per-round diagnostics pytree (DESIGN.md §14).
+
+:func:`round_telemetry` is called from the tail of the engine's ``round_fn``
+— *only* when ``FLConfig.telemetry`` is set, so disabled configs trace the
+exact pre-telemetry program.  Everything here is computed from values the
+round already holds (the selection cohort, the spectral cache, the guard
+counters, the staleness counters): no extra collectives, no extra PRNG
+draws, no state fields — the telemetry never touches the key chain or the
+carried pytree, which is what makes the on/off parity contract
+(`tests/test_obs.py`) a bit-equality, not an approximation.
+
+The :class:`Telemetry` pytree stacks across the scan like any other output
+leaf and is drained to JSONL on host at chunk boundaries by
+:func:`repro.obs.sink.drain_fl_outputs`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Telemetry", "round_telemetry"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Telemetry:
+    """Per-round diagnostics riding the scan outputs (all scalars unless
+    noted).  Optional fields are ``None`` when the corresponding feature is
+    off — same convention as ``ServerState``'s optional fields, so the
+    pytree (and the JSONL schema) only carries what the config can produce.
+    """
+
+    # -- selection ---------------------------------------------------------
+    # stage-1 candidate count Q (C when unfunneled) and the survival
+    # fraction Q/C — static per program, recorded per round so a JSONL
+    # stream is self-describing across re-funnel segments
+    funnel_q: jax.Array  # int32
+    funnel_survival: jax.Array  # float32, Q/C in (0, 1]
+    # rounds since the last aligned reprofile boundary — the age of the
+    # spectral cache / candidate set serving this round's draw (0 = the
+    # round right after a reprofile; monotone when reprofile_every is None)
+    cache_age: jax.Array  # int32
+    # DPP kernel spectrum summary from the cached eigendecomposition
+    # (normalised eigenvalues; identity-placeholder caches give the trivial
+    # all-ones spectrum): top eigenvalue, trace, and participation-ratio
+    # effective rank (Σλ)²/Σλ² — how many directions the kernel spreads over
+    spectrum_top: jax.Array  # float32
+    spectrum_trace: jax.Array  # float32
+    spectrum_erank: jax.Array  # float32
+    # -- robustness --------------------------------------------------------
+    # guard-off configs report the honest-path constants (k survivors,
+    # nothing flagged/quarantined) so the schema is uniform across modes
+    survivors: jax.Array  # int32, cohort updates retained by the aggregator
+    flagged: jax.Array  # int32, guard-rejected updates this round
+    quarantined: jax.Array  # int32, clients currently in cooldown
+    identity_round: jax.Array  # int32 0/1, survivors floor tripped
+    # -- staleness / scenario ---------------------------------------------
+    avail_frac: Optional[jax.Array] = None  # float32, mean availability
+    # (staleness_bound+1,) int32: shards contributing at lag s this round
+    staleness_hist: Optional[jax.Array] = None
+
+
+def round_telemetry(
+    cfg,
+    state,
+    *,
+    t: jax.Array,
+    avail: Optional[jax.Array] = None,
+    new_s: Optional[jax.Array] = None,
+    flagged: Optional[jax.Array] = None,
+    survivors: Optional[jax.Array] = None,
+    quarantine: Optional[jax.Array] = None,
+) -> Telemetry:
+    """Build the round's :class:`Telemetry` from values already in scope.
+
+    ``cfg``/``state`` are the engine's ``FLConfig``/``ServerState`` (taken
+    duck-typed to keep this package free of ``fl`` imports); the keyword
+    arguments are the round body's availability mask, post-round staleness
+    counters, and guard outputs — each ``None`` when its feature is off.
+    """
+    k = cfg.clients_per_round
+    c = cfg.num_clients
+    q = cfg.candidate_count() if cfg.candidate_frac is not None else c
+
+    lam = state.eig_state.lam.astype(jnp.float32)
+    trace = jnp.sum(lam)
+    sumsq = jnp.maximum(jnp.sum(lam * lam), jnp.float32(1e-30))
+    if cfg.reprofile_every:
+        age = (t - 1) % cfg.reprofile_every
+    else:
+        age = t - 1
+
+    if survivors is None:
+        surv = jnp.asarray(k, jnp.int32)
+        ident = jnp.asarray(0, jnp.int32)
+    else:
+        surv = jnp.asarray(survivors, jnp.int32)
+        ident = jnp.asarray(survivors < cfg.min_survivors, jnp.int32)
+    n_flag = (
+        jnp.asarray(0, jnp.int32)
+        if flagged is None
+        else jnp.sum(flagged.astype(jnp.int32))
+    )
+    n_quar = (
+        jnp.asarray(0, jnp.int32)
+        if quarantine is None
+        else jnp.sum((quarantine > 0).astype(jnp.int32))
+    )
+
+    hist = None
+    if new_s is not None:
+        # shards contributing at each lag s ∈ [0, bound] — tiny static-width
+        # comparison, no bincount data-dependence
+        lags = jnp.arange(cfg.staleness_bound + 1, dtype=jnp.int32)
+        hist = jnp.sum(
+            (new_s[None, :] == lags[:, None]).astype(jnp.int32), axis=1
+        )
+
+    return Telemetry(
+        funnel_q=jnp.asarray(q, jnp.int32),
+        funnel_survival=jnp.asarray(q / c, jnp.float32),
+        cache_age=jnp.asarray(age, jnp.int32),
+        spectrum_top=jnp.max(lam),
+        spectrum_trace=trace,
+        spectrum_erank=(trace * trace) / sumsq,
+        survivors=surv,
+        flagged=n_flag,
+        quarantined=n_quar,
+        identity_round=ident,
+        avail_frac=(
+            None if avail is None else jnp.mean(avail.astype(jnp.float32))
+        ),
+        staleness_hist=hist,
+    )

@@ -36,6 +36,7 @@ is whatever the model's cache holds for one sequence.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -45,6 +46,7 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.obs import tracing as obs_tracing_lib
 from repro.serve.sampling import fresh_key_data, sample_tokens
 
 __all__ = [
@@ -297,7 +299,8 @@ class ServeEngine:
     """
 
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params: PyTree,
-                 prompt_len: int, key: Optional[jax.Array] = None):
+                 prompt_len: int, key: Optional[jax.Array] = None,
+                 telemetry=None):
         if prompt_len < 1:
             raise ValueError(f"prompt_len={prompt_len} must be >= 1")
         if scfg.cache_len < prompt_len + scfg.max_new:
@@ -321,6 +324,14 @@ class ServeEngine:
         self.finished: List[Finished] = []
         self._queue: List[Tuple[int, np.ndarray, int]] = []
         self._next_id = 0
+        # Telemetry (DESIGN.md §14): an optional repro.obs.TelemetrySink.
+        # Strictly host-side — events are emitted from the queue bookkeeping
+        # between compiled chunks (submit / admit / harvest / chunk
+        # boundaries), so telemetry=None is byte-identical behaviour and a
+        # sink can never add a compiled program (compile_counts() stays 2).
+        self._sink = telemetry
+        self._t_submit: Dict[int, float] = {}
+        self._pending_admits: List[Tuple[int, int]] = []
 
     # -- queue ------------------------------------------------------------
 
@@ -338,6 +349,12 @@ class ServeEngine:
         seq_id = self._next_id
         self._next_id += 1
         self._queue.append((seq_id, prompt, gen_target))
+        if self._sink is not None:
+            self._t_submit[seq_id] = time.perf_counter()
+            self._sink.emit(
+                "serve_submit", seq_id=seq_id, gen_target=gen_target,
+                queue_depth=len(self._queue),
+            )
         return seq_id
 
     # -- engine steps ------------------------------------------------------
@@ -347,21 +364,44 @@ class ServeEngine:
         # keep their seq_id until harvest and must not be admitted over
         free = int((np.asarray(self.state.seq_ids) < 0).sum())
         n = min(free, len(self._queue))
+        admitted = []
         for _ in range(n):
             seq_id, prompt, tgt = self._queue.pop(0)
             self._host_key, sub = jax.random.split(self._host_key)
-            self.state = self._admit(
-                self.params, self.state, jnp.asarray(prompt)[None],
-                jnp.int32(tgt), jnp.int32(seq_id), fresh_key_data(sub, 1)[0],
-            )
+            with obs_tracing_lib.annotate("serve.admit"):
+                self.state = self._admit(
+                    self.params, self.state, jnp.asarray(prompt)[None],
+                    jnp.int32(tgt), jnp.int32(seq_id), fresh_key_data(sub, 1)[0],
+                )
             # budget-1 sequences finish at admission (prefill sampled their
             # only token); harvest them below like any stopped slot
+            admitted.append((seq_id, len(self._queue)))
+        if self._sink is not None:
+            # TTFT is emitted from _harvest, right after its done-mask fetch
+            # — a sync on the same dependency chain as the wave's prefills,
+            # which the telemetry-off path pays identically.  Blocking here
+            # instead would serialise admit dispatches the off path
+            # pipelines, and the gap between the two sync points is one
+            # fused elementwise op on (batch,) arrays.
+            self._pending_admits.extend(admitted)
         self._harvest()
 
     def _harvest(self) -> None:
         """Collect slots that stopped (budget/EOS) and mark them free."""
         st = self.state
         done = np.asarray(~st.active & (st.seq_ids >= 0) & (st.n_gen > 0))
+        if self._sink is not None and self._pending_admits:
+            # the done-mask fetch above blocked on the admit wave's prefills
+            # — the admitted sequences' first tokens exist as of now
+            now = time.perf_counter()
+            occupancy = int((np.asarray(st.seq_ids) >= 0).sum())
+            for seq_id, depth in self._pending_admits:
+                self._sink.emit(
+                    "serve_admit", seq_id=seq_id,
+                    ttft_s=round(now - self._t_submit.get(seq_id, now), 6),
+                    queue_depth=depth, occupancy=occupancy,
+                )
+            self._pending_admits = []
         if not done.any():
             return
         out = np.asarray(st.out_tokens)
@@ -371,6 +411,15 @@ class ServeEngine:
             self.finished.append(
                 Finished(int(ids[slot]), out[slot, : int(n_gen[slot])].copy())
             )
+            if self._sink is not None:
+                seq_id = int(ids[slot])
+                now = time.perf_counter()
+                t_sub = self._t_submit.pop(seq_id, now)
+                self._sink.emit(
+                    "serve_finish", seq_id=seq_id,
+                    n_tokens=int(n_gen[slot]),
+                    latency_s=round(now - t_sub, 6),
+                )
         mask = jnp.asarray(done)
         self.state = dataclasses.replace(
             st, seq_ids=jnp.where(mask, -1, st.seq_ids),
@@ -387,10 +436,36 @@ class ServeEngine:
         self._maybe_refill(drain)
         while self._queue or bool(np.any(np.asarray(self.state.active))):
             if bool(np.any(np.asarray(self.state.active))):
-                self.state = self._chunk(self.params, self.state)
+                if self._sink is None:
+                    with obs_tracing_lib.annotate("serve.decode_chunk"):
+                        self.state = self._chunk(self.params, self.state)
+                else:
+                    self._timed_chunk()
             self._harvest()
             self._maybe_refill(drain)
         return self.finished
+
+    def _timed_chunk(self) -> None:
+        """One decode chunk with a ``serve_chunk`` event: chunk wall time,
+        exact tokens generated (n_gen delta), tok/s, slot occupancy and
+        queue depth.  Only runs with a sink attached — the telemetry-off
+        path never pays the extra sync."""
+        n_before, active_arr = jax.device_get(
+            (self.state.n_gen, self.state.active)
+        )
+        active = int(active_arr.sum())
+        t0 = time.perf_counter()
+        with obs_tracing_lib.annotate("serve.decode_chunk"):
+            self.state = self._chunk(self.params, self.state)
+        n_after = jax.device_get(self.state.n_gen)
+        dt = time.perf_counter() - t0
+        tokens = int((n_after - n_before).sum())
+        self._sink.emit(
+            "serve_chunk", steps=self.scfg.decode_chunk, tokens=tokens,
+            dt_s=round(dt, 6), tok_s=round(tokens / max(dt, 1e-9), 1),
+            active_slots=active, batch=self.scfg.batch,
+            queue_depth=len(self._queue),
+        )
 
     def _maybe_refill(self, drain: bool) -> None:
         if drain and bool(np.any(np.asarray(self.state.active))):
@@ -409,6 +484,8 @@ class ServeEngine:
         self.finished = []
         self._queue = []
         self._next_id = 0
+        self._t_submit = {}
+        self._pending_admits = []
 
     # -- introspection -----------------------------------------------------
 

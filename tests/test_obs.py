@@ -1,0 +1,333 @@
+"""Telemetry contract (DESIGN.md §14).
+
+Tier-1 (single device): the static-flag bit-identity contract
+(``telemetry=False`` is the default and ``telemetry=True`` changes no
+carried state or shared metric — final-params parity across plain / funnel /
+fault / scenario modes), JSONL schema round-trips, manifest determinism,
+serve zero-recompile with a sink attached, and the report renderer.  The
+mesh-sharded and bounded-staleness variants run under the CI
+``multidevice`` job (``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import report as report_lib
+from repro.core import selection as selection_lib
+from repro.fl import engine
+from repro.fl.trainer import FLTrainer
+from repro.launch import serve as serve_mod
+from repro.launch.mesh import make_client_mesh
+from repro.obs import (
+    TelemetrySink,
+    config_hash,
+    load_events,
+    run_manifest,
+)
+from repro.obs.telemetry import Telemetry
+from repro.serve import ServeConfig, ServeEngine
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+FEAT, N_C, NCLS = 8, 6, 4
+
+
+def linear_loss(params, x, y):
+    logp = jax.nn.log_softmax(x @ params["w"] + params["b"])
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+
+def _federation(c, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(c, N_C, FEAT)).astype(np.float32))
+    ys = jnp.asarray(rng.integers(0, NCLS, size=(c, N_C)), jnp.int32)
+    params = {
+        "w": jnp.asarray(0.01 * rng.normal(size=(FEAT, NCLS)).astype(np.float32)),
+        "b": jnp.zeros((NCLS,), jnp.float32),
+    }
+    return xs, ys, params
+
+
+def _run(c=12, k=4, rounds=6, mesh=None, telemetry=False, **cfg_kw):
+    xs, ys, params = _federation(c)
+    cfg = engine.FLConfig(
+        num_clients=c, clients_per_round=k, local_epochs=2, lr=0.1,
+        rounds=rounds, eval_every=2, num_classes=NCLS, seed=0,
+        telemetry=telemetry, **cfg_kw,
+    )
+    strat = selection_lib.UniformSelection()
+    state = engine.init_server_state(
+        cfg, params, linear_loss, None, xs, ys,
+        strategy=strat, profiles=xs.mean(axis=1), mesh=mesh,
+    )
+    rf = engine.make_round_fn(cfg, linear_loss, (strat,), mesh=mesh)
+    fin, outs = engine.run_scanned(rf, state, rounds, mesh=mesh)
+    return fin, jax.tree_util.tree_map(np.asarray, outs)
+
+
+def _max_param_diff(a, b):
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+# ------------------------------------------------- off-by-default contract
+
+
+def test_telemetry_default_off_and_no_extra_outputs():
+    assert engine.FLConfig().telemetry is False
+    _, outs = _run(telemetry=False)
+    assert "telemetry" not in outs
+
+
+MODES = {
+    "plain": {},
+    "funnel": {"candidate_frac": 0.75},
+    "fault_guarded": {"faults": "chaos", "aggregator": "trimmed_mean"},
+    "scenario": {"scenario": "flaky"},
+}
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_telemetry_on_is_bit_identical(mode):
+    """telemetry=True only ADDS output leaves: the carried state (final
+    params) and every shared per-round metric are bit-equal to the
+    telemetry=False run — the key-stream / state-purity contract."""
+    fin_off, outs_off = _run(telemetry=False, **MODES[mode])
+    fin_on, outs_on = _run(telemetry=True, **MODES[mode])
+    assert _max_param_diff(fin_off.params, fin_on.params) == 0.0
+    assert set(outs_on) == set(outs_off) | {"telemetry"}
+    for k in outs_off:
+        np.testing.assert_array_equal(
+            outs_off[k], outs_on[k], err_msg=f"{mode}: metric {k!r} diverged"
+        )
+    assert isinstance(outs_on["telemetry"], Telemetry)
+
+
+@multidevice
+@pytest.mark.parametrize("extra", [
+    {},
+    {"staleness_bound": 1, "scenario": "uniform"},
+])
+def test_telemetry_bit_identical_sharded(extra):
+    mesh = make_client_mesh(jax.device_count())
+    c = 4 * jax.device_count()
+    fin_off, _ = _run(c=c, mesh=mesh, telemetry=False, **extra)
+    fin_on, outs_on = _run(c=c, mesh=mesh, telemetry=True, **extra)
+    assert _max_param_diff(fin_off.params, fin_on.params) == 0.0
+    if "staleness_bound" in extra:
+        hist = outs_on["telemetry"].staleness_hist
+        assert hist.shape == (6, extra["staleness_bound"] + 1)
+        # every shard contributes at exactly one lag each round
+        assert (hist.sum(axis=1) == jax.device_count()).all()
+
+
+# -------------------------------------------------------- telemetry fields
+
+
+def test_telemetry_field_semantics():
+    _, outs = _run(telemetry=True, rounds=6, reprofile_every=3,
+                   candidate_frac=0.5)
+    tel = outs["telemetry"]
+    q = engine.FLConfig(
+        num_clients=12, clients_per_round=4, candidate_frac=0.5,
+    ).candidate_count()
+    assert (tel.funnel_q == q).all()
+    np.testing.assert_allclose(tel.funnel_survival, q / 12, rtol=1e-6)
+    # cache age resets on the aligned reprofile boundary
+    np.testing.assert_array_equal(tel.cache_age, [0, 1, 2, 0, 1, 2])
+    # honest path: full cohort survives, nothing flagged or quarantined
+    assert (tel.survivors == 4).all()
+    assert (tel.flagged == 0).all() and (tel.quarantined == 0).all()
+    assert (tel.identity_round == 0).all()
+    # spectrum summary: positive trace, erank within [1, Q]
+    assert (tel.spectrum_trace > 0).all()
+    assert (tel.spectrum_erank >= 1).all() and (tel.spectrum_erank <= q).all()
+    assert tel.avail_frac is None and tel.staleness_hist is None
+    # availability-aware scenario populates the availability fraction
+    _, outs_f = _run(telemetry=True, scenario="flaky")
+    af = outs_f["telemetry"].avail_frac
+    assert af.shape == (6,) and (af >= 0).all() and (af <= 1).all()
+
+
+# ------------------------------------------------------------ JSONL schema
+
+FL_ROUND_REQUIRED = {
+    "event", "t", "wall", "round", "acc", "gemd", "loss", "selected",
+    "funnel_q", "funnel_survival", "cache_age", "spectrum_top",
+    "spectrum_trace", "spectrum_erank", "survivors", "flagged",
+    "quarantined", "identity_round",
+}
+
+
+def test_jsonl_schema_roundtrip(tmp_path):
+    path = tmp_path / "train.jsonl"
+    _, outs = _run(telemetry=True, rounds=5)
+    with TelemetrySink(str(path)) as sink:
+        man = sink.write_manifest(
+            config={"demo": 1}, extra={"mode": "fl"}
+        )
+        from repro.obs.sink import drain_fl_outputs
+
+        assert drain_fl_outputs(sink, outs) == 5
+    # strict JSON: every line parses, NaN sanitised to null
+    lines = path.read_text().strip().splitlines()
+    for line in lines:
+        json.loads(line)
+    events = load_events(str(path))
+    assert [e["event"] for e in events] == ["manifest"] + ["fl_round"] * 5
+    assert events[0]["config_hash"] == man["config_hash"]
+    for k in ("jax_version", "backend", "device_count", "host_cores"):
+        assert k in events[0]
+    for i, e in enumerate(events[1:]):
+        assert FL_ROUND_REQUIRED <= set(e)
+        assert e["round"] == i + 1
+        assert e["acc"] is None or isinstance(e["acc"], float)
+        assert isinstance(e["selected"], list) and len(e["selected"]) == 4
+
+
+def test_trainer_drains_sink_at_segment_boundaries(tmp_path):
+    xs, ys, params = _federation(8)
+    cfg = engine.FLConfig(
+        num_clients=8, clients_per_round=3, local_epochs=1, lr=0.1,
+        rounds=6, eval_every=2, num_classes=NCLS, seed=0,
+        reprofile_every=2, telemetry=True,
+    )
+    tr = FLTrainer(
+        cfg, params, linear_loss,
+        lambda p, x: (None, x @ p["w"]),
+        np.asarray(xs), np.asarray(ys),
+        strategy=selection_lib.UniformSelection(),
+    )
+    path = tmp_path / "trainer.jsonl"
+    with TelemetrySink(str(path)) as sink:
+        sink.write_manifest(config=dataclasses.asdict(cfg))
+        tr.run(sink=sink)
+    events = load_events(str(path))
+    kinds = [e["event"] for e in events]
+    assert kinds.count("fl_round") == 6
+    assert kinds.count("fl_reprofile") == 2  # boundaries inside the run
+    assert kinds[0] == "manifest"
+
+
+def test_checkpointed_merge_with_telemetry(tmp_path):
+    """run_checkpointed's segment merge is tree-aware: the telemetry
+    subtree concatenates across segments like any other output leaf."""
+    xs, ys, params = _federation(10)
+    cfg = engine.FLConfig(
+        num_clients=10, clients_per_round=3, local_epochs=1, lr=0.1,
+        rounds=7, eval_every=2, num_classes=NCLS, seed=0,
+        ckpt_every=3, telemetry=True,
+    )
+    strat = selection_lib.UniformSelection()
+    state = engine.init_server_state(
+        cfg, params, linear_loss, None, xs, ys,
+        strategy=strat, profiles=xs.mean(axis=1),
+    )
+    rf = engine.make_round_fn(cfg, linear_loss, (strat,))
+    fin, outs = engine.run_checkpointed(
+        rf, state, 7, ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=3
+    )
+    assert outs["telemetry"].cache_age.shape == (7,)
+    np.testing.assert_array_equal(np.asarray(outs["round"]), np.arange(1, 8))
+
+
+# ----------------------------------------------------- manifest determinism
+
+
+def test_manifest_determinism():
+    cfg = engine.FLConfig(num_clients=16, clients_per_round=4, telemetry=True)
+    h1 = config_hash(cfg)
+    h2 = config_hash(engine.FLConfig(
+        num_clients=16, clients_per_round=4, telemetry=True
+    ))
+    assert h1 == h2
+    assert config_hash(dataclasses.asdict(cfg)) == h1
+    assert run_manifest(config=cfg)["config_hash"] == h1
+    assert config_hash(
+        engine.FLConfig(num_clients=16, clients_per_round=5, telemetry=True)
+    ) != h1
+
+
+# --------------------------------------------------- serve zero-recompile
+
+
+def test_serve_zero_recompile_and_token_parity_with_telemetry(tmp_path):
+    cfg, params = serve_mod.build_model("smollm-360m", seed=0)
+    b, p, g = 3, 6, 8
+    scfg = ServeConfig(batch=b, cache_len=p + g, max_new=g, decode_chunk=4)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(1), (7, p), 0, cfg.vocab_size, jnp.int32
+    ))
+    budgets = [8, 3, 1, 5, 8, 2, 4]
+
+    def traffic(telemetry):
+        eng = ServeEngine(cfg, scfg, params, prompt_len=p,
+                          key=jax.random.key(0), telemetry=telemetry)
+        for i in range(len(budgets)):
+            eng.submit(prompts[i], budgets[i])
+        fin = eng.run()
+        return eng, {f.seq_id: f.tokens for f in fin}
+
+    path = tmp_path / "serve.jsonl"
+    sink = TelemetrySink(str(path))
+    eng_on, toks_on = traffic(sink)
+    sink.close()
+    eng_off, toks_off = traffic(None)
+    # exactly-two-compiled-programs guarantee survives the sink
+    assert eng_on.compile_counts() == {"decode_chunk": 1, "admit": 1}
+    # telemetry is host-only: the token streams are bit-identical
+    assert set(toks_on) == set(toks_off)
+    for sid in toks_on:
+        np.testing.assert_array_equal(toks_on[sid], toks_off[sid])
+    events = load_events(str(path))
+    kinds = [e["event"] for e in events]
+    assert kinds.count("serve_submit") == 7
+    assert kinds.count("serve_admit") == 7
+    assert kinds.count("serve_finish") == 7
+    assert kinds.count("serve_chunk") >= 1
+    for e in events:
+        if e["event"] == "serve_admit":
+            assert e["ttft_s"] >= 0 and 1 <= e["occupancy"] <= b
+        if e["event"] == "serve_chunk":
+            assert e["tokens"] >= 0 and e["dt_s"] > 0
+    fin_by_id = {
+        e["seq_id"]: e for e in events if e["event"] == "serve_finish"
+    }
+    assert {sid: e["n_tokens"] for sid, e in fin_by_id.items()} == {
+        i: budgets[i] for i in range(7)
+    }
+
+
+# ------------------------------------------------------------------ report
+
+
+def test_report_renders_train_and_serve(tmp_path):
+    path = tmp_path / "mixed.jsonl"
+    _, outs = _run(telemetry=True, rounds=5)
+    with TelemetrySink(str(path)) as sink:
+        sink.write_manifest(config={"demo": 1}, extra={"mode": "fl"})
+        from repro.obs.sink import drain_fl_outputs
+
+        drain_fl_outputs(sink, outs)
+        sink.emit("serve_submit", seq_id=0, gen_target=4, queue_depth=1)
+        sink.emit("serve_admit", seq_id=0, ttft_s=0.01, queue_depth=0,
+                  occupancy=1)
+        sink.emit("serve_chunk", steps=4, tokens=4, dt_s=0.002, tok_s=2000.0,
+                  active_slots=1, batch=2, queue_depth=0)
+        sink.emit("serve_finish", seq_id=0, n_tokens=4, latency_s=0.02)
+    text = report_lib.summarize(load_events(str(path)))
+    assert "run manifest" in text
+    assert "training: 5 rounds" in text
+    assert "serving: 1 finished seqs" in text
+    assert "TTFT" in text
+    assert report_lib.summarize([]) == "no telemetry events"
